@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: wall time of the jitted reference paths on
+CPU (the Pallas kernels themselves target TPU and run interpret-mode for
+correctness only — interpret wall time is not a performance signal) plus
+the analytic TPU-side roofline terms of each kernel configuration."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dataflow as df
+from repro.kernels import ref
+
+
+def _bench(fn, *args, iters=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def kernel_benches() -> list[tuple]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # spectral Hadamard reference path (jit) at the paper's geometry
+    f, n, m, p = 64, 64, 64, 128
+    wr = jnp.asarray(rng.standard_normal((f, n, m)), jnp.float32)
+    wi = jnp.asarray(rng.standard_normal((f, n, m)), jnp.float32)
+    xr = jnp.asarray(rng.standard_normal((f, m, p)), jnp.float32)
+    xi = jnp.asarray(rng.standard_normal((f, m, p)), jnp.float32)
+    had = jax.jit(ref.spectral_hadamard_ref)
+    rows.append(("kernels/hadamard_ref_f64n64m64p128",
+                 _bench(had, wr, wi, xr, xi),
+                 8 * f * n * m * p / 1e6))       # complex MFLOPs
+
+    # fft tiles reference
+    tiles = jnp.asarray(rng.standard_normal((1444, 6, 6)), jnp.float32)
+    fft = jax.jit(lambda t: ref.fft2_tiles_ref(t, 8))
+    rows.append(("kernels/fft8_ref_1444tiles", _bench(fft, tiles), 1444))
+
+    # attention reference at a serving-ish shape
+    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 1024, 64)), jnp.bfloat16)
+    att = jax.jit(lambda q, k: ref.attention_ref(
+        q, jnp.repeat(k, 4, 1), jnp.repeat(k, 4, 1)))
+    rows.append(("kernels/attention_ref_s1024", _bench(att, q, k),
+                 2 * 8 * 1024 * 1024 * 64 * 2 / 1e6))
+
+    # TPU-side analytic terms of the Pallas spectral-Hadamard dataflows
+    conv = df.VGG16_LAYERS[4]            # conv3_1
+    for flow in ("output_stationary", "weight_stationary",
+                 "input_stationary"):
+        c = df.tpu_flow_cost(conv, 8, 4.0, 128, 128, 128, flow)
+        rows.append((f"kernels/tpu_{flow}/hbm_ms", 0,
+                     c["hbm_s"] * 1e3))
+        rows.append((f"kernels/tpu_{flow}/fits_vmem", 0,
+                     float(c["fits_vmem"])))
+    return rows

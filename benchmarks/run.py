@@ -1,0 +1,27 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``python -m benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import kernels_bench, paper
+
+    fns = list(paper.ALL) + [kernels_bench.kernel_benches]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for fn in fns:
+        name = getattr(fn, "__name__", "lambda")
+        if only and only not in name:
+            continue
+        for row in fn():
+            n, us, derived = row
+            print(f"{n},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

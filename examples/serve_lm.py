@@ -1,0 +1,51 @@
+"""End-to-end serving driver: the FULL smollm-135m with batched requests.
+
+Continuous-batching greedy decoding on CPU — the 'serve a small model
+with batched requests' end-to-end deliverable.  Reports per-tick decode
+latency (the paper's figure of merit is single-stream latency).
+
+  PYTHONPATH=src python examples/serve_lm.py [--smoke]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.launch.serve import Request, Server
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (fast CI)")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    srv = Server("smollm-135m", slots=args.slots, max_len=128,
+                 config_set="smoke" if args.smoke else "full")
+    n_params = sum(x.size for x in
+                   __import__("jax").tree.leaves(srv.params))
+    print(f"[serve] model {srv.cfg.name} ({n_params/1e6:.0f}M params), "
+          f"{args.slots} slots, {args.requests} requests")
+
+    rng = np.random.default_rng(0)
+    done = []
+    for rid in range(args.requests):
+        prompt = rng.integers(1, srv.cfg.vocab, size=6).astype(np.int32)
+        req = Request(rid, prompt, args.new_tokens)
+        srv.submit(req)
+        done.append(req)
+    stats = srv.run_until_drained()
+    for req in done[:3]:
+        print(f"  req {req.rid}: prompt {req.prompt[:4].tolist()}... -> "
+              f"{req.out[:8]}...")
+    print(f"[serve] drained in {stats['ticks']} ticks | per-tick decode "
+          f"latency mean {stats['mean_tick_ms']:.1f} ms, "
+          f"p95 {stats['p95_tick_ms']:.1f} ms")
+    assert all(len(r.out) == args.new_tokens for r in done)
+
+
+if __name__ == "__main__":
+    main()

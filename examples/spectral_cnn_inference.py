@@ -1,0 +1,67 @@
+"""End-to-end sparse spectral CNN inference (the paper's pipeline).
+
+Runs the (reduced) VGG16-family spectral CNN: offline kernel transform +
+pruning, Alg-1 dataflow plan, Alg-2 schedules, then batched inference,
+validating the spectral path against the dense spatial oracle.
+
+  PYTHONPATH=src python examples/spectral_cnn_inference.py [--full]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import vgg16_spectral
+from repro.core import optimizer, scheduler
+from repro.models import cnn
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full 224x224 VGG16 (slow on CPU)")
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+    cfg = vgg16_spectral.CONFIG if args.full else vgg16_spectral.SMOKE
+
+    key = jax.random.PRNGKey(0)
+    params = cnn.init(key, cfg)
+    print(f"[1/4] transform + prune kernels (K={cfg.fft_size}, "
+          f"alpha={cfg.alpha})")
+    sks = cnn.transform_kernels(params, cfg)
+
+    print("[2/4] Alg 1 dataflow plan")
+    plan = optimizer.optimize(layers=list(cfg.layers)[1:],
+                              fft_size=cfg.fft_size, alpha=cfg.alpha,
+                              arch_candidates=[(9, 64)])
+    print(f"      max layer bandwidth {plan.bw_max_gbps:.2f} GB/s, "
+          f"total transfers {plan.total_transfers_words / 1e6:.1f} Mwords")
+
+    print("[3/4] Alg 2 schedules (PE utilization per layer)")
+    for layer, sk in list(zip(cfg.layers, sks))[1:4]:
+        mu = scheduler.simulate_layer_utilization(
+            np.asarray(sk.indices), cfg.fft_size ** 2, r=10,
+            n_par=min(64, sk.n_out), channel_sample=2)
+        print(f"      {layer.name}: mu = {mu:.1%}")
+
+    print("[4/4] inference")
+    x = jax.random.normal(key, (args.batch, 3, cfg.image_size,
+                                cfg.image_size))
+    t0 = time.time()
+    logits = cnn.forward_spectral(params, sks, cfg, x)
+    logits.block_until_ready()
+    dt = time.time() - t0
+    dense = cnn.forward_spatial(params, cfg, x)
+    agree = float(jnp.mean(
+        (jnp.argsort(logits, -1)[:, -5:] ==
+         jnp.argsort(dense, -1)[:, -5:]).astype(jnp.float32)))
+    print(f"      logits {logits.shape} in {dt*1e3:.0f} ms; "
+          f"top-5 agreement with dense spatial model: {agree:.0%} "
+          f"(alpha={cfg.alpha} pruning changes logits, as in the paper)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Core: the paper's contributions.
+
+- spectral:   FFT-tiled spectral convolution with Overlap-and-Add (Eqs 3-4)
+- sparse:     uniform per-kernel spectral pruning (SPEC2-style)
+- dataflow:   bandwidth/storage complexity models (Eqs 6-13)
+- optimizer:  Alg 1 flexible-dataflow optimization
+- scheduler:  Alg 2 exact-cover memory-access scheduling + Fig 6 tables
+"""
+
+from repro.core import dataflow, optimizer, scheduler, sparse, spectral  # noqa: F401

@@ -1,0 +1,312 @@
+"""Bandwidth / on-chip-storage complexity models (paper §4, Eqs 6-13).
+
+The paper analyses three pure dataflows for a sparse spectral conv layer —
+
+  Flow #1  reuse kernels + partial sums, STREAM INPUT TILES
+           (inputs re-loaded N/N' (pure) or N/Ns (flexible) times),
+  Flow #2  reuse input tiles + partial sums, STREAM KERNELS
+           (kernels re-loaded T/P' (pure) or T/Ps (flexible) times),
+  Flow #3  reuse inputs + kernels, STREAM PARTIAL SUMS
+           (psums written+read 2*M/M' times),
+
+then interpolates between #1/#2 with the *streaming parameters* Ns (#kernels
+resident before flushing input tiles) and Ps (#input tiles resident before
+flushing kernels) — Eqs 12-13 — searched by Alg 1 (``repro.core.optimizer``).
+
+Faithfulness notes
+------------------
+* Eqs 12/13 are implemented exactly as printed.  The pure-flow BRAM
+  expressions (Eqs 6-8) are printed with garbled bank/depth placement in the
+  source text; we implement the self-consistent reconstruction documented on
+  each function (bank count x depth-overflow multiplier), which reproduces
+  the paper's qualitative Fig 2: Flow #1 needs enormous BRAM counts on
+  early (large-image) layers, Flow #2 few BRAMs but high traffic, Flow #3
+  is never competitive.
+* Data transfers are counted in 16-bit words as the paper does: spatial
+  activations are real (1 word/value); spectral kernels and spectral psums
+  are complex (2 words/value) — controlled by ``complex_words``.
+* BRAM model: 36 Kb block = 1024 entries (paper's "memory depth 1024").
+
+The same module also hosts the TPU re-cost of the flows used by the Pallas
+kernel + mesh planner (HBM traffic / VMEM residency instead of DDR / BRAM):
+see ``tpu_flow_cost``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+from repro.core.spectral import make_geometry
+
+BRAM_DEPTH = 1024
+WORD_BYTES = 2  # 16-bit fixed point
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """Static description of one spectral conv layer."""
+
+    name: str
+    c_in: int       # M
+    c_out: int      # N
+    h_in: int
+    w_in: int
+    ksize: int = 3
+    pad: int = 1
+
+    def tiles(self, fft_size: int) -> int:
+        """T: number of input tiles per image (padded canvas)."""
+        geo = make_geometry(self.h_in, self.w_in, self.ksize, fft_size,
+                            self.pad)
+        return geo.n_tiles
+
+    def tile_size(self, fft_size: int) -> int:
+        return fft_size - self.ksize + 1
+
+    def spectral_macs(self, fft_size: int, alpha: float = 1.0) -> int:
+        """Complex MACs of the (sparse) Hadamard stage (used to apportion
+        the latency budget, Table 2 footnote)."""
+        nnz = int(round(fft_size * fft_size / alpha))
+        return self.tiles(fft_size) * nnz * self.c_in * self.c_out
+
+    def spatial_macs(self) -> int:
+        return (self.c_in * self.c_out * self.h_in * self.w_in
+                * self.ksize * self.ksize)
+
+
+# VGG16 conv stack (stride-1, pad-1, 3x3).  conv1_1 is omitted from dataflow
+# optimization exactly as in the paper ("negligible computations").
+VGG16_LAYERS: tuple[ConvLayer, ...] = (
+    ConvLayer("conv1_1", 3, 64, 224, 224),
+    ConvLayer("conv1_2", 64, 64, 224, 224),
+    ConvLayer("conv2_1", 64, 128, 112, 112),
+    ConvLayer("conv2_2", 128, 128, 112, 112),
+    ConvLayer("conv3_1", 128, 256, 56, 56),
+    ConvLayer("conv3_2", 256, 256, 56, 56),
+    ConvLayer("conv3_3", 256, 256, 56, 56),
+    ConvLayer("conv4_1", 256, 512, 28, 28),
+    ConvLayer("conv4_2", 512, 512, 28, 28),
+    ConvLayer("conv4_3", 512, 512, 28, 28),
+    ConvLayer("conv5_1", 512, 512, 14, 14),
+    ConvLayer("conv5_2", 512, 512, 14, 14),
+    ConvLayer("conv5_3", 512, 512, 14, 14),
+)
+
+VGG16_OPT_LAYERS = VGG16_LAYERS[1:]
+
+
+def _ceil(a: float, b: float) -> int:
+    return int(math.ceil(a / b))
+
+
+# ---------------------------------------------------------------------------
+# On-chip storage (Eqs 6-8, 12) — #BRAMs
+# ---------------------------------------------------------------------------
+
+def bram_flow1(layer: ConvLayer, fft_size: int, alpha: float,
+               p_par: int, n_par: int, r: int, m_par: int = 1) -> int:
+    """Flow #1 (Eq 6): kernels + psums resident, input tiles stream.
+
+    banks x depth-multiplier reconstruction:
+      inputs : r*M'*P'  streaming double-buffers (1 tile deep)
+      kernels: M'*N' banks, all N kernels resident
+               -> depth multiplier ceil(N * K^2/alpha / (N' * 1024))
+      psums  : N'*P' banks, psums of every tile of the image resident
+               -> depth multiplier ceil(T * K^2 / (P' * 1024))
+    """
+    k2 = fft_size * fft_size
+    t = layer.tiles(fft_size)
+    inp = r * m_par * p_par
+    ker = m_par * n_par * max(1, _ceil(layer.c_out * k2 / alpha,
+                                       n_par * BRAM_DEPTH))
+    psum = n_par * p_par * max(1, _ceil(t * k2, p_par * BRAM_DEPTH))
+    return inp + ker + psum
+
+
+def bram_flow2(layer: ConvLayer, fft_size: int, alpha: float,
+               p_par: int, n_par: int, r: int, m_par: int = 1) -> int:
+    """Flow #2 (Eq 7): input tiles + psums resident, kernels stream.
+
+      inputs : r*M'*P' banks, all T tiles resident
+               -> depth multiplier ceil(T * K^2 / (P' * 1024))
+      kernels: M'*N' streaming double-buffers
+      psums  : N'*P' banks, N outputs for the P'-tile group resident
+               -> depth multiplier ceil(N * K^2 / (N' * 1024))
+    """
+    k2 = fft_size * fft_size
+    t = layer.tiles(fft_size)
+    inp = r * m_par * p_par * max(1, _ceil(t * k2, p_par * BRAM_DEPTH))
+    ker = m_par * n_par
+    psum = n_par * p_par * max(1, _ceil(layer.c_out * k2, n_par * BRAM_DEPTH))
+    return inp + ker + psum
+
+
+def bram_flow3(layer: ConvLayer, fft_size: int, alpha: float,
+               p_par: int, n_par: int, r: int, m_par: int = 1) -> int:
+    """Flow #3 (Eq 8): inputs + kernels resident, psums stream.
+
+    Eq 8 is a min over which of (inputs, kernels) is held whole:
+      (a) all T input tiles resident + kernel double-buffer
+      (b) input double-buffer + all N kernels resident
+    with a psum streaming buffer of N'*P' banks either way.
+    """
+    k2 = fft_size * fft_size
+    t = layer.tiles(fft_size)
+    psum = n_par * p_par
+    var_a = (r * m_par * p_par * max(1, _ceil(t * k2, p_par * BRAM_DEPTH))
+             + m_par * n_par + psum)
+    var_b = (r * m_par * p_par
+             + m_par * n_par * max(1, _ceil(layer.c_out * k2 / alpha,
+                                            n_par * BRAM_DEPTH))
+             + psum)
+    return min(var_a, var_b)
+
+
+def bram_flexible(layer: ConvLayer, fft_size: int, alpha: float,
+                  p_par: int, n_par: int, r: int,
+                  ns: int, ps: int) -> int:
+    """Eq 12: flexible flow with streaming parameters (Ns, Ps).
+
+    As printed, plus the input-tile depth multiplier (Ps tiles resident
+    across r replicas / P' parallel banks) which the printed equation
+    folds into the bank count.
+    """
+    k2 = fft_size * fft_size
+    inp = r * p_par * max(1, _ceil(ps * k2, p_par * BRAM_DEPTH))
+    ker = n_par * max(1, _ceil(ns * k2 / alpha, n_par * BRAM_DEPTH))
+    psum = n_par * p_par * max(1, _ceil(ns * ps * k2,
+                                        n_par * p_par * BRAM_DEPTH))
+    return inp + ker + psum
+
+
+# ---------------------------------------------------------------------------
+# Data transfers (Eqs 9-11, 13) — 16-bit words moved across DDR
+# ---------------------------------------------------------------------------
+
+def transfers_flow1(layer: ConvLayer, fft_size: int, alpha: float,
+                    n_par: int, m_par: int = 1,
+                    complex_words: int = 2) -> int:
+    """Eq 9 numerator: inputs re-loaded once per N'-kernel group."""
+    k2 = fft_size * fft_size
+    reload_in = layer.c_out / n_par
+    inp = layer.c_in * layer.h_in * layer.w_in * reload_in
+    ker = layer.c_out * layer.c_in * k2 / alpha * complex_words
+    out = layer.c_out * layer.h_in * layer.w_in
+    return int(round(inp + ker + out))
+
+
+def transfers_flow2(layer: ConvLayer, fft_size: int, alpha: float,
+                    p_par: int, m_par: int = 1,
+                    complex_words: int = 2) -> int:
+    """Eq 10 numerator: kernels re-loaded once per P'-tile group."""
+    k2 = fft_size * fft_size
+    tile = layer.tile_size(fft_size)
+    reload_k = (layer.h_in * layer.w_in) / (p_par * tile * tile)
+    inp = layer.c_in * layer.h_in * layer.w_in
+    ker = layer.c_out * layer.c_in * k2 / alpha * complex_words * reload_k
+    out = layer.c_out * layer.h_in * layer.w_in
+    return int(round(inp + ker + out))
+
+
+def transfers_flow3(layer: ConvLayer, fft_size: int, alpha: float,
+                    m_par: int = 1, complex_words: int = 2) -> int:
+    """Eq 11 numerator: psums written + re-read once per input channel."""
+    k2 = fft_size * fft_size
+    inp = layer.c_in * layer.h_in * layer.w_in
+    ker = layer.c_out * layer.c_in * k2 / alpha * complex_words
+    out = (layer.c_out * layer.h_in * layer.w_in
+           * 2 * (layer.c_in / m_par))
+    return int(round(inp + ker + out))
+
+
+def transfers_flexible(layer: ConvLayer, fft_size: int, alpha: float,
+                       ns: int, ps: int, complex_words: int = 2) -> int:
+    """Eq 13 numerator."""
+    k2 = fft_size * fft_size
+    tile = layer.tile_size(fft_size)
+    inp = layer.c_in * layer.h_in * layer.w_in * (layer.c_out / ns)
+    ker = (layer.c_out * layer.c_in * k2 / alpha * complex_words
+           * (layer.h_in * layer.w_in) / (ps * tile * tile))
+    out = layer.c_out * layer.h_in * layer.w_in
+    return int(round(inp + ker + out))
+
+
+def bandwidth_gbps(transfers_words: int, tau_s: float) -> float:
+    """bw = #transfers / tau  (Eq at §4.2), in GB/s."""
+    return transfers_words * WORD_BYTES / tau_s / 1e9
+
+
+def layer_latency_budget(layers: Iterable[ConvLayer], fft_size: int,
+                         alpha: float, total_tau_s: float) -> dict[str, float]:
+    """tau_i = tau * CMP_i / CMP_total  (Table 2 footnote)."""
+    layers = list(layers)
+    cmps = {l.name: l.spectral_macs(fft_size, alpha) for l in layers}
+    total = sum(cmps.values())
+    return {n: total_tau_s * c / total for n, c in cmps.items()}
+
+
+# ---------------------------------------------------------------------------
+# TPU re-cost of the same three reuse choices (hardware adaptation)
+# ---------------------------------------------------------------------------
+
+# TPU v5e-class constants (also used by repro.roofline).
+TPU_HBM_GBPS = 819e9
+TPU_PEAK_FLOPS = 197e12
+TPU_VMEM_BYTES = 16 * 2 ** 20   # ~16 MiB usable kernel working set
+TPU_ICI_GBPS = 50e9
+
+
+def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
+                  block_n: int, block_p: int, block_m: int,
+                  flow: str, batch: int = 1,
+                  bytes_per_el: int = 4) -> dict[str, float]:
+    """HBM traffic + VMEM residency of one spectral-Hadamard pallas_call.
+
+    The Pallas kernel contracts input channels per frequency bin:
+    ``Y[n,f,p] += W[n,m,f] X[m,f,p]`` with grid blocks (block_n x block_m x
+    block_p).  The ``flow`` selects which operand stays resident across the
+    grid's outermost iteration — the TPU translation of Flow #1/#2/#3:
+
+      'weight_stationary' (Flow #1): W blocks stay in VMEM while all P
+          blocks stream -> X re-read c_out/block_n times.
+      'input_stationary'  (Flow #2): X blocks stay while kernel blocks
+          stream -> W re-read T*batch/block_p times.
+      'output_stationary' (Flow opt analogue): psums accumulate in VMEM
+          across the m loop; X and W each read once per (n, p) block pair.
+
+    Complex data: 2 real planes.
+    """
+    k2 = fft_size * fft_size
+    t = layer.tiles(fft_size) * batch
+    cplx = 2
+    x_bytes = layer.c_in * k2 * t * cplx * bytes_per_el
+    w_bytes = layer.c_out * layer.c_in * k2 / alpha * cplx * bytes_per_el
+    y_bytes = layer.c_out * k2 * t * cplx * bytes_per_el
+
+    if flow == "weight_stationary":
+        hbm = (x_bytes * math.ceil(layer.c_out / block_n)
+               + w_bytes + y_bytes)
+    elif flow == "input_stationary":
+        hbm = (x_bytes + w_bytes * math.ceil(t / block_p) + y_bytes)
+    elif flow == "output_stationary":
+        hbm = (x_bytes * math.ceil(layer.c_out / block_n)
+               + w_bytes * math.ceil(t / block_p) + y_bytes)
+    else:
+        raise ValueError(flow)
+
+    # per-grid-step working set: ONE frequency bin's blocks (the Pallas
+    # grid blocks F with size 1; see kernels/spectral_hadamard.py)
+    vmem = (block_m * block_p * cplx * bytes_per_el             # X block
+            + block_n * block_m * cplx * bytes_per_el           # W block
+            + block_n * block_p * cplx * 4)                     # f32 acc
+    flops = 8 * t * k2 / alpha * layer.c_in * layer.c_out / 1.0
+    return {
+        "hbm_bytes": float(hbm),
+        "vmem_bytes": float(vmem),
+        "flops": float(flops),
+        "hbm_s": float(hbm) / TPU_HBM_GBPS,
+        "compute_s": float(flops) / TPU_PEAK_FLOPS,
+        "fits_vmem": vmem <= TPU_VMEM_BYTES,
+    }

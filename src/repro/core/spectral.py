@@ -1,0 +1,209 @@
+"""Spectral (FFT-domain) convolution with tiling and Overlap-and-Add.
+
+This is the mathematical substrate of the paper (§3, Eqs 3-4): spatial
+convolution is replaced by
+
+    1. tile the input into h' x w' tiles,
+    2. zero-pad each tile to K x K  (K = h' + k - 1)  and 2-D FFT it,
+    3. Hadamard-multiply with the K x K spectral kernels and accumulate
+       over input channels  (Eq 3),
+    4. inverse FFT each output tile,
+    5. Overlap-and-Add (OaA) the output tiles (adjacent tiles overlap by
+       k - 1 pixels)  (Eq 4).
+
+Everything here is pure JAX and serves both as the production forward path
+on CPU/TPU and as the oracle for the Pallas kernels in ``repro.kernels``.
+
+Conventions
+-----------
+* CNN "convolution" is cross-correlation; we FLIP the spatial kernel before
+  the FFT so that the spectral Hadamard product implements correlation.
+* Activations are NCHW: ``x[b, c, h, w]``; kernels ``w[n, m, k, k]``
+  (out-channels, in-channels, kh, kw) — the paper's notation.
+* Only stride-1 convolutions are tiled spectrally (VGG16 uses stride 1
+  everywhere in its conv stack); pooling happens in the spatial domain.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class SpectralGeometry(NamedTuple):
+    """Static geometry of a tiled spectral convolution."""
+
+    fft_size: int        # K
+    tile: int            # h' = w' = K - k + 1
+    ksize: int           # spatial kernel size k
+    pad: int             # spatial 'same' padding p (VGG16: 1)
+    h_in: int            # input spatial height (pre-padding)
+    w_in: int
+    n_tiles_h: int       # tiles along H after padding to a multiple of h'
+    n_tiles_w: int
+    h_pad: int           # padded input size = n_tiles_h * tile
+    w_pad: int
+
+    @property
+    def n_tiles(self) -> int:
+        return self.n_tiles_h * self.n_tiles_w
+
+
+def make_geometry(h_in: int, w_in: int, ksize: int, fft_size: int,
+                  pad: int | None = None) -> SpectralGeometry:
+    tile = fft_size - ksize + 1
+    if tile <= 0:
+        raise ValueError(f"fft_size {fft_size} too small for kernel {ksize}")
+    if ksize - 1 > tile:
+        raise ValueError("OaA decomposition requires k - 1 <= tile size")
+    if pad is None:
+        pad = (ksize - 1) // 2  # 'same' for odd kernels
+    # Tile the input padded by at least `pad` on the bottom/right so the
+    # cropped 'same' output never reads past the tiled canvas.
+    n_th = -(-(h_in + pad) // tile)
+    n_tw = -(-(w_in + pad) // tile)
+    return SpectralGeometry(fft_size, tile, ksize, pad, h_in, w_in,
+                            n_th, n_tw, n_th * tile, n_tw * tile)
+
+
+# ---------------------------------------------------------------------------
+# Kernel transform
+# ---------------------------------------------------------------------------
+
+def spectral_kernel(w: Array, fft_size: int) -> Array:
+    """Spatial kernel [N, M, k, k] -> spectral kernel [N, M, K, K] complex.
+
+    The kernel is flipped (correlation -> convolution) and zero-padded to
+    K x K before the FFT.  This is done once, offline, exactly as the paper
+    stores pre-transformed spectral kernels in DDR.
+    """
+    k = w.shape[-1]
+    w = w[..., ::-1, ::-1]
+    w = jnp.pad(w, [(0, 0)] * (w.ndim - 2) + [(0, fft_size - k)] * 2)
+    return jnp.fft.fft2(w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Input tiling / output OaA
+# ---------------------------------------------------------------------------
+
+def extract_tiles(x: Array, geo: SpectralGeometry) -> Array:
+    """[B, M, H, W] -> [B, M, T, h', w']  (T = n_tiles, row-major)."""
+    b, m = x.shape[:2]
+    x = jnp.pad(x, ((0, 0), (0, 0),
+                    (0, geo.h_pad - geo.h_in), (0, geo.w_pad - geo.w_in)))
+    x = x.reshape(b, m, geo.n_tiles_h, geo.tile, geo.n_tiles_w, geo.tile)
+    x = x.transpose(0, 1, 2, 4, 3, 5)
+    return x.reshape(b, m, geo.n_tiles, geo.tile, geo.tile)
+
+
+def fft_tiles(tiles: Array, geo: SpectralGeometry) -> Array:
+    """[..., h', w'] -> [..., K, K] complex spectral tiles."""
+    pad = geo.fft_size - geo.tile
+    tiles = jnp.pad(tiles, [(0, 0)] * (tiles.ndim - 2) + [(0, pad)] * 2)
+    return jnp.fft.fft2(tiles.astype(jnp.float32))
+
+
+def overlap_add(y_tiles: Array, geo: SpectralGeometry) -> Array:
+    """OaA merge: [B, N, T, K, K] spatial-domain output tiles -> [B, N, H, W].
+
+    Tile (i, j)'s K x K full-convolution output sits at canvas offset
+    (i*tile, j*tile); adjacent tiles overlap by ov = k - 1 pixels which are
+    summed.  With ov <= tile (checked in ``make_geometry``) the canvas block
+    (i, j) of size tile x tile receives exactly four contributions:
+
+      block(i,j)[:, :]        += tile(i,   j  )[:tile, :tile]   (body)
+      block(i,j)[:, :ov]      += tile(i,   j-1)[:tile, tile:]   (left nbr)
+      block(i,j)[:ov, :]      += tile(i-1, j  )[tile:, :tile]   (upper nbr)
+      block(i,j)[:ov, :ov]    += tile(i-1, j-1)[tile:, tile:]   (diag nbr)
+
+    The bottom/right canvas spill (rows/cols >= h_pad) is only dropped
+    because ``make_geometry`` padded the canvas past every row the 'same'
+    crop can read.
+    """
+    b, n, t, kk, _ = y_tiles.shape
+    assert t == geo.n_tiles and kk == geo.fft_size
+    ov = geo.ksize - 1
+    tl = geo.tile
+    th, tw = geo.n_tiles_h, geo.n_tiles_w
+    yt = y_tiles.reshape(b, n, th, tw, kk, kk)
+
+    def shift(a: Array, axis: int) -> Array:
+        """a'[..., i, ...] = a[..., i-1, ...] with a'[..., 0, ...] = 0."""
+        pad = [(0, 0)] * a.ndim
+        pad[axis] = (1, 0)
+        sl = [slice(None)] * a.ndim
+        sl[axis] = slice(0, a.shape[axis])
+        return jnp.pad(a, pad)[tuple(sl)]
+
+    blk = yt[..., :tl, :tl]
+    blk = blk.at[..., :, :ov].add(shift(yt[..., :tl, tl:], 3))
+    blk = blk.at[..., :ov, :].add(shift(yt[..., tl:, :tl], 2))
+    blk = blk.at[..., :ov, :ov].add(shift(shift(yt[..., tl:, tl:], 2), 3))
+
+    out = blk.transpose(0, 1, 2, 4, 3, 5).reshape(b, n, geo.h_pad, geo.w_pad)
+
+    # 'same' crop: same-output row i' reads full-conv row i' + (k-1-pad).
+    start = geo.ksize - 1 - geo.pad
+    h_out = geo.h_in + 2 * geo.pad - geo.ksize + 1
+    w_out = geo.w_in + 2 * geo.pad - geo.ksize + 1
+    return out[:, :, start:start + h_out, start:start + w_out]
+
+
+# ---------------------------------------------------------------------------
+# Hadamard stage (Eq 3) — reference path
+# ---------------------------------------------------------------------------
+
+def hadamard_accumulate(x_f: Array, w_f: Array) -> Array:
+    """Eq 3:  Y~[b,n,t,u,v] = sum_m X~[b,m,t,u,v] * W~[n,m,u,v].
+
+    Per frequency bin (u, v) this is a complex GEMM contracting input
+    channels m — the formulation the TPU kernel exploits (MXU batched over
+    frequency bins).  Here: plain einsum oracle.
+    """
+    return jnp.einsum("bmtuv,nmuv->bntuv", x_f, w_f)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end spectral convolution
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("fft_size", "pad"))
+def spectral_conv2d(x: Array, w: Array, *, fft_size: int = 8,
+                    pad: int | None = None) -> Array:
+    """Spectral convolution of NCHW ``x`` with spatial kernel ``w``.
+
+    Equivalent (up to fp error) to 'same' cross-correlation, computed via
+    FFT tiling + Hadamard + IFFT + OaA.
+    """
+    geo = make_geometry(x.shape[2], x.shape[3], w.shape[-1], fft_size, pad)
+    w_f = spectral_kernel(w, fft_size)
+    return spectral_conv2d_pretransformed(x, w_f, geo)
+
+
+def spectral_conv2d_pretransformed(x: Array, w_f: Array,
+                                   geo: SpectralGeometry) -> Array:
+    """Spectral conv with an already-transformed (possibly pruned) kernel."""
+    tiles = extract_tiles(x, geo)                    # [B,M,T,h',w']
+    x_f = fft_tiles(tiles, geo)                      # [B,M,T,K,K]
+    y_f = hadamard_accumulate(x_f, w_f)              # [B,N,T,K,K]
+    y_tiles = jnp.fft.ifft2(y_f).real
+    return overlap_add(y_tiles.astype(x.dtype), geo)
+
+
+@functools.partial(jax.jit, static_argnames=("pad",))
+def spatial_conv2d(x: Array, w: Array, *, pad: int | None = None) -> Array:
+    """Spatial-domain oracle: 'same' cross-correlation (stride 1)."""
+    k = w.shape[-1]
+    if pad is None:
+        pad = (k - 1) // 2
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW")).astype(x.dtype)

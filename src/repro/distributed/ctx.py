@@ -1,0 +1,68 @@
+"""Trace-time sharding-constraint context for model code.
+
+Model code is mesh-agnostic; when the launcher traces a step under a
+``ShardCtx``, `constrain(x, kind)` pins intermediate activations to the
+intended layout so XLA's sharding propagation cannot drift into
+reshuffling all-to-alls between layers (one of the §Perf findings).
+Outside a context (unit tests, single-host runs) it is a no-op.
+
+Kinds:
+  residual      [B, S, d]  -> P(batch, seq?, None)  — block boundaries;
+                with ``seq_parallel`` the sequence dim is sharded over
+                'model' so the boundary collective becomes
+                reduce-scatter + all-gather instead of all-reduce
+  moe_dispatch  [G, E, C, d] -> P(batch, 'model', None, None)
+  moe_combine   [G, S, d]  -> P(batch, None, None)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    batch_axes: tuple[str, ...]
+    seq_parallel: bool = False
+    model_axis: str = "model"
+    moe_ep: bool = False                 # shard_map expert parallelism
+    mesh: object = None                  # required when moe_ep
+    fsdp_axes: tuple[str, ...] = ()
+
+
+def current() -> ShardCtx | None:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use(ctx: ShardCtx):
+    prev = current()
+    _state.ctx = ctx
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    ctx = current()
+    if ctx is None:
+        return x
+    ba = ctx.batch_axes
+    if kind == "residual":
+        seq = ctx.model_axis if ctx.seq_parallel else None
+        spec = P(ba, seq, *([None] * (x.ndim - 2)))
+    elif kind == "moe_dispatch":
+        spec = P(ba, ctx.model_axis, *([None] * (x.ndim - 2)))
+    elif kind == "moe_combine":
+        spec = P(ba, *([None] * (x.ndim - 1)))
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,194 @@
+"""Mesh-scale dataflow planner — the paper's Alg 1 re-targeted at sharding.
+
+For every (arch, mesh, shape) cell, enumerate candidate strategies
+(which tensor class is *reused* on-chip vs *streamed* over the network):
+
+  TP            weights resident per model shard      (Flow #1 analogue)
+  TP+FSDP(d)    weights also sharded over 'data',
+                all-gathered per layer                (Flow #2 analogue)
+  TP+FSDP(d,p)  ... and over 'pod'
+
+x optimizer in {adamw, adafactor}.  Each candidate is costed with a
+closed-form HBM-residency and collective-traffic model (the Eq 12/13
+analogue, TPU v5e constants), infeasible ones (> HBM per chip) are
+rejected, and the minimum-collective-traffic feasible plan wins —
+exactly the structure of Alg 1 (search, capacity constraint, minimize
+bandwidth).  The dry-run's HLO-parsed collective bytes validate the
+model (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.configs import ShapeConfig
+from repro.core.dataflow import TPU_HBM_GBPS, TPU_ICI_GBPS
+from repro.distributed.sharding import ShardingPlan
+from repro.models.config import ModelConfig
+
+HBM_PER_CHIP = 16 * 2 ** 30           # v5e: 16 GiB
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCost:
+    plan: ShardingPlan
+    param_bytes_per_chip: float
+    opt_bytes_per_chip: float
+    act_bytes_per_chip: float
+    total_bytes_per_chip: float
+    collective_bytes_per_step: float   # per chip
+    fits: bool
+
+    def summary(self) -> str:
+        return (f"fsdp={self.plan.fsdp_axes if self.plan.fsdp else '-'} "
+                f"opt={self.plan.optimizer} "
+                f"mem={self.total_bytes_per_chip/2**30:.2f}GiB "
+                f"coll={self.collective_bytes_per_step/2**30:.2f}GiB/step "
+                f"fits={self.fits}")
+
+
+def _bytes_per_param(dtype: str) -> int:
+    return 2 if dtype == "bfloat16" else 4
+
+
+def _mesh_sizes(mesh_shape: dict[str, int]) -> tuple[int, int, int]:
+    model = mesh_shape.get("model", 1)
+    data = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    return model, data, model * data
+
+
+def estimate(cfg: ModelConfig, shape: ShapeConfig,
+             mesh_shape: dict[str, int], plan: ShardingPlan) -> PlanCost:
+    model, data, chips = _mesh_sizes(mesh_shape)
+    if not plan.tp:
+        # pure weight-streaming: no tensor-parallel axis; tokens shard
+        # over plan.batch_axes, weights over plan.fsdp_axes
+        model = 1
+        data = 1
+        for ax in plan.batch_axes:
+            data *= mesh_shape.get(ax, 1)
+    n_params = cfg.param_count()
+    bpp = _bytes_per_param(cfg.param_dtype)
+    fsdp_ways = 1
+    if plan.fsdp:
+        for ax in plan.fsdp_axes:
+            fsdp_ways *= mesh_shape.get(ax, 1)
+
+    shard_ways = model * fsdp_ways
+    param_bytes = n_params * bpp / shard_ways
+
+    train = shape.kind == "train"
+    if train:
+        grad_bytes = param_bytes
+        opt_mult = 8.0 if plan.optimizer == "adamw" else 0.2
+        opt_bytes = n_params * opt_mult / shard_ways
+    else:
+        grad_bytes = 0.0
+        opt_bytes = 0.0
+
+    # activations: with remat ~ (2 residual streams + attn workspace) per
+    # layer boundary; without remat all block internals are live.
+    tokens_per_chip = shape.seq_len * shape.global_batch / max(data, 1)
+    act_per_token_layer = cfg.d_model * 2      # bf16 residual
+    live_factor = 4.0 if plan.remat else 24.0
+    if shape.kind == "decode":
+        act_bytes = tokens_per_chip * cfg.d_model * 2 * 8 / shape.seq_len
+        # decode activations are per-token; KV cache dominates instead
+        kv_len = min(shape.seq_len, cfg.window or shape.seq_len)
+        if cfg.family in ("xlstm", "hybrid"):
+            kv_len = min(kv_len, 4096)          # bounded recurrent state
+        layers = cfg.n_layers if cfg.family not in ("hybrid",) else \
+            math.ceil(cfg.n_layers / cfg.attn_every)
+        kv_bytes = (2 * layers * cfg.n_kv_heads * cfg.hd * kv_len
+                    * shape.global_batch * 2) / chips
+        act_bytes += kv_bytes
+    else:
+        act_bytes = (tokens_per_chip * act_per_token_layer
+                     * cfg.n_layers * live_factor / max(model, 1))
+
+    total = param_bytes + grad_bytes + opt_bytes + act_bytes
+
+    # collective traffic per chip per step (bytes on the wire):
+    coll = 0.0
+    tokens = shape.seq_len * shape.global_batch
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    act_row = tokens * cfg.d_model * 2 / max(data, 1)
+    # TP: 2 all-reduces per layer over activations (ring: 2x bytes)
+    if model > 1:
+        coll += 2 * cfg.n_layers * 2 * act_row * (model - 1) / model
+    if plan.fsdp and train:
+        # per-layer weight all-gather (fwd+bwd) + grad reduce-scatter
+        coll += 3 * n_params * bpp / model * (fsdp_ways - 1) / fsdp_ways
+    elif plan.fsdp:
+        # inference: weights all-gathered once per step
+        coll += n_params * bpp / model * (fsdp_ways - 1) / fsdp_ways
+    if train and data > 1 and not plan.fsdp:
+        # DP gradient all-reduce
+        coll += 2 * n_params * bpp / model * (data - 1) / data
+    if cfg.family == "moe" and model > 1:
+        # dispatch+combine all-to-alls over the expert axis
+        coll += 2 * tokens * cfg.d_model * 2 * cfg.top_k / max(data, 1)
+
+    fits = total <= HBM_PER_CHIP
+    return PlanCost(plan, param_bytes, opt_bytes, act_bytes, total,
+                    coll, fits)
+
+
+def candidates(cfg: ModelConfig, mesh_shape: dict[str, int],
+               shape: ShapeConfig) -> list[ShardingPlan]:
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh_shape)
+    all_axes = tuple(mesh_shape)
+    total = 1
+    for v in mesh_shape.values():
+        total *= v
+    seq_shard = shape.kind == "decode" and shape.global_batch == 1
+    opts = ["adamw", "adafactor"] if shape.kind == "train" else ["adamw"]
+    outs = []
+    for fsdp_axes in [(), ("data",), batch_axes]:
+        for opt in opts:
+            outs.append(ShardingPlan(
+                batch_axes=batch_axes,
+                fsdp=bool(fsdp_axes), fsdp_axes=tuple(fsdp_axes),
+                seq_shard=seq_shard, optimizer=opt, remat=cfg.remat))
+    # pure weight-streaming (no TP) — the Flow-#2 answer: reuse
+    # activations locally, stream kernels over the network.  Offered for
+    # the dense transformer family only: MoE needs the model axis for
+    # expert memory, and the recurrent families (hybrid/xlstm) reshard
+    # badly without TP (measured in EXPERIMENTS.md §Perf Cell B) — their
+    # validated plan stays TP.
+    # ... and only when every chip gets >= 1 sequence: with
+    # global_batch % chips != 0 the idle model axis would replicate
+    # compute (measured in §Perf Cell B iter 1).
+    if cfg.family == "dense" and shape.global_batch % total == 0:
+        for opt in opts:
+            outs.append(ShardingPlan(
+                batch_axes=all_axes, fsdp=True, fsdp_axes=all_axes,
+                seq_shard=seq_shard, optimizer=opt, remat=cfg.remat,
+                tp=False))
+    # dedupe
+    seen, uniq = set(), []
+    for p in outs:
+        key = (p.fsdp_axes, p.optimizer, p.tp)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(p)
+    return uniq
+
+
+def plan_cell(cfg: ModelConfig, shape: ShapeConfig,
+              mesh_shape: dict[str, int]
+              ) -> tuple[PlanCost, list[PlanCost]]:
+    """Alg-1 loop: all candidates costed, feasible min-traffic selected."""
+    costs = [estimate(cfg, shape, mesh_shape, p)
+             for p in candidates(cfg, mesh_shape, shape)]
+    feasible = [c for c in costs if c.fits]
+    pool = feasible or costs            # report best-effort if none fit
+    # min collective traffic; prefer plain AdamW on ties (Adafactor is the
+    # fallback when moments don't fit), then smaller footprint
+    best = min(pool, key=lambda c: (not c.fits,
+                                    c.collective_bytes_per_step,
+                                    c.plan.optimizer != "adamw",
+                                    c.total_bytes_per_chip))
+    return best, costs

@@ -1,0 +1,196 @@
+"""Parameter/activation sharding rules for every architecture family.
+
+Rules are name+rank based over the parameter pytree paths, producing a
+PartitionSpec tree that mirrors the params.  Two strategies per tensor
+class (the paper's reuse question at mesh scale, DESIGN.md §4):
+
+  * ``tp``   — weights resident: shard only over 'model' (Flow #1:
+               reuse kernels, stream activations through collectives);
+  * ``fsdp`` — weights streamed: additionally shard over the batch axes
+               ('data' [+ 'pod']), all-gathered per layer (Flow #2:
+               reuse activations, stream kernels).
+
+The planner (repro.distributed.planner) chooses per arch x shape which
+strategy fits HBM at minimum collective traffic — Alg 1 re-targeted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+MODEL = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Resolved strategy for one (arch, mesh, shape) cell."""
+
+    batch_axes: tuple[str, ...]          # ('data',) or ('pod', 'data')
+    fsdp: bool = False                   # shard weights over batch axes too
+    fsdp_axes: tuple[str, ...] = ()      # subset of batch_axes for weights
+    seq_shard: bool = False              # shard long KV/sequence over data
+    optimizer: str = "adamw"
+    remat: bool = True
+    constraints: bool = True             # activation sharding constraints
+    seq_parallel: bool = False           # sequence-parallel boundaries
+    tp: bool = True                      # False = pure weight-streaming
+    #                                      (FSDP over every mesh axis; the
+    #                                      Flow-#2 answer to the title)
+    remat_policy: str = "full"           # full | dots
+
+    @property
+    def wa(self) -> tuple[str, ...] | None:
+        """Weight FSDP axes (None when pure TP)."""
+        return self.fsdp_axes if self.fsdp else None
+
+
+def _last2(spec_head: tuple, d_in, d_out) -> P:
+    return P(*spec_head, d_in, d_out)
+
+
+def param_spec(plan: ShardingPlan, path: tuple, leaf) -> P:
+    """Sharding rule for one parameter leaf, by name (+ MoE path)."""
+    keys = [getattr(e, "key", None) or getattr(e, "name", None)
+            for e in path]
+    names = [k for k in keys if isinstance(k, str)]
+    name = names[-1] if names else None
+    is_moe = "moe" in names
+    rank = len(leaf.shape)
+    head = (None,) * (rank - 2)          # stacked layer/group dims
+    wa = plan.wa
+    MODEL = "model" if plan.tp else None
+    if not plan.tp:
+        # weight-streaming: every weight fully sharded over the fsdp axes
+        wa = plan.fsdp_axes or None
+
+    if name in ("embed",):
+        if not plan.tp:
+            return P(None, wa)           # d_model over all axes
+        return P(MODEL, wa)              # vocab over model
+    if name in ("unembed",):
+        return P(wa, MODEL)
+    if name in ("wq", "wk", "wv", "w_up", "w_gate", "w", "wx", "wz",
+                "fc1", "fc2", "fc3"):
+        if is_moe and rank >= 3:         # experts [L, E, d, f]
+            return P(*head[:-1], MODEL, wa, None)
+        if rank >= 2:
+            return _last2(head, wa, MODEL)
+        return P()
+    if name in ("wo", "w_down", "out_proj"):
+        if is_moe and rank >= 3:         # experts [L, E, f, d]
+            return P(*head[:-1], MODEL, None, wa)
+        if rank >= 2:
+            return _last2(head, MODEL, wa)
+        return P()
+    # router, small projections (wbc, wdt, w_if), conv_w, sLSTM block-diag
+    # recurrence, norms, biases, gates: replicate
+    return P()
+
+
+def _divisibility_guard(spec: P, shape: tuple[int, ...],
+                        axis_sizes: dict[str, int]) -> P:
+    """Replicate any dim whose sharding would not divide evenly — the
+    production fallback for odd vocab sizes / tiny gate dims."""
+    out = []
+    for i, entry in enumerate(tuple(spec) + (None,) * (len(shape)
+                                                       - len(tuple(spec)))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        ways = 1
+        for a in axes:
+            ways *= axis_sizes.get(a, 1)
+        out.append(entry if shape[i] % ways == 0 else None)
+    return P(*out)
+
+
+def params_pspec(plan: ShardingPlan, abstract_params: PyTree,
+                 axis_sizes: dict[str, int] | None = None) -> PyTree:
+    def one(path, leaf):
+        spec = param_spec(plan, path, leaf)
+        if axis_sizes:
+            spec = _divisibility_guard(spec, leaf.shape, axis_sizes)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def opt_state_pspec(plan: ShardingPlan, param_specs: PyTree,
+                    abstract_params: PyTree, opt_name: str,
+                    factor_threshold: int = 128) -> PyTree:
+    """Optimizer-state spec tree: moments mirror the parameter sharding;
+    factored Adafactor statistics drop the reduced axis of the spec."""
+    if opt_name == "adamw":
+        return {"mu": param_specs, "nu": param_specs, "count": P()}
+
+    def per_leaf(spec: P, p) -> dict:
+        s = p.shape
+        factored = (len(s) >= 2 and s[-1] >= factor_threshold
+                    and s[-2] >= factor_threshold)
+        spec = tuple(spec) + (None,) * (len(s) - len(tuple(spec)))
+        if factored:
+            return {"vr": P(*spec[:-1]),
+                    "vc": P(*spec[:-2], spec[-1])}
+        return {"v": P(*spec)}
+
+    v = jax.tree.map(per_leaf, param_specs, abstract_params,
+                     is_leaf=lambda x: isinstance(x, P))
+    return {"v": v, "count": P()}
+
+
+def batch_pspec(plan: ShardingPlan, batch: PyTree) -> PyTree:
+    def per_leaf(path, leaf):
+        return P(plan.batch_axes, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, batch)
+
+
+def cache_pspec(plan: ShardingPlan, abstract_cache: PyTree,
+                batch_size: int,
+                axis_sizes: dict[str, int] | None = None) -> PyTree:
+    """KV caches / recurrent states.  Layout conventions:
+    attention k/v [L(, G2), B, H_kv, S, D]; ssm/xlstm states carry B at
+    a known axis.  We shard the batch axis over the plan's batch axes
+    when divisible; for batch-1 long-context cells we shard the KV
+    sequence axis over 'data' instead (seq_shard)."""
+
+    def per_leaf(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # find the batch axis: first axis whose size == batch_size
+        try:
+            b_ax = next(i for i, s in enumerate(shape) if s == batch_size)
+        except StopIteration:
+            b_ax = None
+        if b_ax is not None and batch_size > 1:
+            spec[b_ax] = plan.batch_axes
+        elif plan.seq_shard and len(shape) >= 2:
+            # shard the longest axis (the KV sequence) over data
+            s_ax = max(range(len(shape)), key=lambda i: shape[i])
+            if shape[s_ax] > 1024:
+                spec[s_ax] = "data"
+        out = P(*spec)
+        if axis_sizes:
+            out = _divisibility_guard(out, shape, axis_sizes)
+        return out
+
+    return jax.tree_util.tree_map_with_path(per_leaf, abstract_cache)
+
+
+def named(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def attach(abstract: PyTree, shardings: PyTree) -> PyTree:
+    """ShapeDtypeStructs with shardings attached (dry-run inputs)."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)

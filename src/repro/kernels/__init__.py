@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+- spectral_hadamard: frequency-binned batched complex GEMM (Eq 3) with
+  the paper's three dataflows as grid-order variants
+- sparse_hadamard:   INDEX/VALUE-table (Fig 6) scheduled sparse execution
+- fft8:              2-D (I)FFT as MXU DFT matmuls
+- flash_attention:   blocked online-softmax attention (LM pillar)
+
+ops.py holds the jit'd public wrappers, ref.py the pure-jnp oracles.
+Kernels run with interpret=True on CPU; TPU is the lowering target.
+"""

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def spectral_hadamard_ref(wr: Array, wi: Array, xr: Array, xi: Array
+                          ) -> tuple[Array, Array]:
+    """Y[f,n,p] = sum_m W[f,n,m] X[f,m,p]  (complex, f32 planes)."""
+    w = wr.astype(jnp.float32) + 1j * wi.astype(jnp.float32)
+    x = xr.astype(jnp.float32) + 1j * xi.astype(jnp.float32)
+    y = jnp.einsum("fnm,fmp->fnp", w, x)
+    return y.real, y.imag
+
+
+def sparse_hadamard_ref(values: Array, mask: Array, xr: Array, xi: Array
+                        ) -> tuple[Array, Array]:
+    """Masked dense Hadamard for one channel: out[n,f,p] = W[n,f]*X[f,p].
+
+    values: complex [N, F] (zeros off-pattern), x: [F, P] planes.
+    """
+    w = values * mask
+    x = xr.astype(jnp.float32) + 1j * xi.astype(jnp.float32)
+    y = w[:, :, None] * x[None, :, :]
+    return y.real, y.imag
+
+
+def fft2_tiles_ref(tiles: Array, fft_size: int) -> tuple[Array, Array]:
+    """2-D FFT of zero-padded square tiles: [..., t, t] -> [..., K, K]."""
+    pad = fft_size - tiles.shape[-1]
+    tiles = jnp.pad(tiles,
+                    [(0, 0)] * (tiles.ndim - 2) + [(0, pad), (0, pad)])
+    y = jnp.fft.fft2(tiles.astype(jnp.float32))
+    return y.real.astype(jnp.float32), y.imag.astype(jnp.float32)
+
+
+def ifft2_tiles_ref(yr: Array, yi: Array) -> Array:
+    """Real part of the 2-D inverse FFT."""
+    return jnp.fft.ifft2(yr + 1j * yi).real.astype(jnp.float32)
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: int | None = None, scale: float | None = None
+                  ) -> Array:
+    """[B, H, S, D] attention oracle with optional sliding window."""
+    s = q.shape[2]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((s, k.shape[2]), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))

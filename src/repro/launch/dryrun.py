@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * the sharding planner picks the strategy (Alg-1 analogue),
+  * ``jax.jit(step).lower(*ShapeDtypeStructs).compile()`` must succeed on
+    the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh,
+  * ``memory_analysis()`` proves the cell fits per-chip HBM,
+  * ``cost_analysis()`` + HLO collective parsing feed §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k --mesh single --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse
+import contextlib
+import dataclasses
+import gc
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.distributed import ctx, planner
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh, mesh_shape_dict
+from repro.roofline import analysis, hlo_parse
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path, keep_hlo: bool = False,
+             variant: str = "", plan_overrides: dict | None = None,
+             cfg_overrides: dict | None = None) -> dict:
+    cfg = configs.get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = configs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    msd = mesh_shape_dict(mesh)
+    n_dev = mesh.devices.size
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{variant}" if variant else ""
+
+    best, all_costs = planner.plan_cell(cfg, shape, msd)
+    # shard_map expert parallelism is the default for MoE (EXPERIMENTS.md
+    # §Perf Cell C: 852 s -> 7.2 s); --no-moe-ep reproduces the ablation
+    moe_ep = cfg.family == "moe"
+    if plan_overrides and "_moe_ep" in plan_overrides:
+        moe_ep = bool(plan_overrides.pop("_moe_ep"))
+    if plan_overrides:
+        best = dataclasses.replace(
+            best, plan=dataclasses.replace(best.plan, **plan_overrides))
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": n_dev,
+        "plan": {
+            "fsdp_axes": list(best.plan.fsdp_axes),
+            "optimizer": best.plan.optimizer,
+            "remat": best.plan.remat,
+            "seq_shard": best.plan.seq_shard,
+            "fits": best.fits,
+            "predicted_mem_gib": best.total_bytes_per_chip / 2 ** 30,
+            "predicted_coll_gib": best.collective_bytes_per_step / 2 ** 30,
+        },
+        "planner_candidates": [c.summary() for c in all_costs],
+    }
+    record["variant"] = variant
+    t0 = time.time()
+    try:
+        shard_ctx = (ctx.ShardCtx(best.plan.batch_axes,
+                                  seq_parallel=best.plan.seq_parallel,
+                                  moe_ep=moe_ep, mesh=mesh,
+                                  fsdp_axes=best.plan.fsdp_axes
+                                  if best.plan.fsdp else ())
+                     if best.plan.constraints else None)
+        cm = ctx.use(shard_ctx) if shard_ctx else contextlib.nullcontext()
+        with mesh, cm:
+            fn, args = steps.cell_lowerable(cfg, shape, mesh, best.plan)
+            lowered = fn.lower(*args)
+            record["lower_s"] = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = time.time() - t1
+
+            mem = compiled.memory_analysis()
+            if mem is not None:
+                record["memory_analysis"] = {
+                    k: getattr(mem, k) for k in (
+                        "argument_size_in_bytes", "output_size_in_bytes",
+                        "temp_size_in_bytes",
+                        "generated_code_size_in_bytes")
+                    if hasattr(mem, k)}
+                print(f"[{arch}/{shape_name}/{mesh_name}] memory_analysis:",
+                      record["memory_analysis"])
+            cost = compiled.cost_analysis() or {}
+            record["cost_analysis"] = {
+                k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "optimal_seconds")}
+            print(f"[{arch}/{shape_name}/{mesh_name}] cost_analysis:",
+                  record["cost_analysis"])
+
+            hlo = compiled.as_text()
+            parsed = hlo_parse.parse(hlo, n_dev)
+            coll = parsed.collectives
+            record["collectives"] = {
+                "counts": coll.counts,
+                "operand_bytes": coll.operand_bytes,
+                "wire_bytes_per_chip": coll.wire_bytes_per_chip,
+                "loop_multipliers": {k: v for k, v in
+                                     sorted(parsed.loop_multipliers.items())
+                                     if "region" in k},
+                "unknown_trip_loops": parsed.unknown_trip_loops,
+            }
+            # trip-corrected compute term from parsed dot ops; analytic
+            # HBM traffic (cost_analysis bytes are loop-body-once floors)
+            mf = analysis.model_flops(cfg, shape)
+            hbm = analysis.analytic_hbm_bytes(cfg, shape, best.plan, msd)
+            cost_corrected = dict(record["cost_analysis"])
+            cost_corrected["flops"] = parsed.dot_flops
+            cost_corrected["bytes accessed"] = max(
+                hbm, cost_corrected.get("bytes accessed", 0.0))
+            roof = analysis.roofline_terms(cost_corrected, coll, n_dev, mf)
+            record["roofline"] = roof.as_dict()
+            record["roofline"]["raw_cost_flops"] = \
+                record["cost_analysis"].get("flops")
+            record["roofline"]["analytic_hbm_bytes"] = hbm
+            if keep_hlo:
+                (out_dir /
+                 f"{arch}_{shape_name}_{mesh_name}{suffix}.hlo.txt"
+                 ).write_text(hlo)
+            del compiled, lowered, hlo
+        record["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["total_s"] = time.time() - t0
+    out_path = out_dir / f"{arch}_{shape_name}_{mesh_name}{suffix}.json"
+    out_path.write_text(json.dumps(record, indent=1, default=str))
+    gc.collect()
+    status = record["status"]
+    extra = "" if status == "ok" else f" ({record.get('error', '')[:120]})"
+    print(f"[{arch}/{shape_name}/{mesh_name}] {status} "
+          f"in {record['total_s']:.1f}s{extra}", flush=True)
+    return record
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", default="single",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--keep-hlo", action="store_true")
+    p.add_argument("--variant", default="",
+                   help="suffix for perf-experiment output files")
+    p.add_argument("--no-constraints", action="store_true")
+    p.add_argument("--seq-parallel", action="store_true")
+    p.add_argument("--force-fsdp", default=None,
+                   help="comma list of fsdp axes, or 'off'")
+    p.add_argument("--dp-only", action="store_true",
+                   help="force pure weight-streaming (no TP)")
+    p.add_argument("--remat-policy", default=None,
+                   choices=["full", "dots"])
+    p.add_argument("--kv-quant", action="store_true",
+                   help="int8 KV cache for decode cells")
+    p.add_argument("--moe-ep", action="store_true",
+                   help="force shard_map expert-parallel MoE dispatch")
+    p.add_argument("--no-moe-ep", action="store_true",
+                   help="disable the shard_map MoE path (ablation)")
+    args = p.parse_args()
+    overrides = {}
+    if args.no_constraints:
+        overrides["constraints"] = False
+    if args.seq_parallel:
+        overrides["seq_parallel"] = True
+    if args.dp_only:
+        overrides["tp"] = False
+        overrides["fsdp"] = True
+    if args.remat_policy:
+        overrides["remat_policy"] = args.remat_policy
+    cfg_overrides = {"kv_quant": True} if args.kv_quant else None
+    if args.moe_ep:
+        overrides["_moe_ep"] = True
+    if args.no_moe_ep:
+        overrides["_moe_ep"] = False
+    if args.force_fsdp is not None:
+        if args.force_fsdp == "off":
+            overrides.update(fsdp=False, fsdp_axes=(), tp=True)
+        else:
+            axes = tuple(a for a in args.force_fsdp.split(",") if a)
+            overrides.update(fsdp=True, fsdp_axes=axes)
+    out = pathlib.Path(args.out)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = [(a, s) for a, s, skipped in configs.cells()
+                 if not skipped]
+    else:
+        shapes = [args.shape] if args.shape else list(configs.SHAPES)
+        archs = [args.arch] if args.arch else list(configs.ARCHS)
+        cells = [(a, s) for a in archs for s in shapes
+                 if not (s == "long_500k"
+                         and a not in configs.LONG_CONTEXT_ARCHS)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, out, keep_hlo=args.keep_hlo,
+                           variant=args.variant,
+                           plan_overrides=overrides or None,
+                           cfg_overrides=cfg_overrides)
+            failures += rec["status"] != "ok"
+    print(f"dry-run done: {len(cells) * len(meshes) - failures} ok, "
+          f"{failures} failed")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

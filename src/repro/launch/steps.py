@@ -1,0 +1,147 @@
+"""Jitted step builders + abstract input specs for every dry-run cell.
+
+``input_specs`` follows the shannon/kernels pattern: every model input is
+a ShapeDtypeStruct (weak-type-correct, shardable, no device allocation),
+so ``jax.jit(step).lower(**specs).compile()`` exercises the full SPMD
+pipeline without touching memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ShapeConfig
+from repro.distributed import sharding
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.optim import adamw as optim
+
+PyTree = Any
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.OptimizerConfig
+                    ) -> Callable:
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(api.loss_fn)(params, cfg, batch)
+        params, opt_state, gnorm = optim.update(opt_cfg, grads, opt_state,
+                                                params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return api.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, token, pos):
+        logits, cache = api.decode(params, cfg, token, cache, pos)
+        return logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh: Mesh | None = None, spec: P | None = None):
+    sh = None
+    if mesh is not None and spec is not None:
+        sh = jax.sharding.NamedSharding(mesh, spec)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                plan: sharding.ShardingPlan) -> dict:
+    b = shape.global_batch
+    ba = P(plan.batch_axes)
+    if cfg.family == "encdec":
+        s_dec = min(cfg.dec_train_len, shape.seq_len)
+        return {
+            "frames": _sds((b, shape.seq_len, cfg.d_model), cfg.cdt,
+                           mesh, P(plan.batch_axes, None, None)),
+            "tokens": _sds((b, s_dec), jnp.int32, mesh,
+                           P(plan.batch_axes, None)),
+            "labels": _sds((b, s_dec), jnp.int32, mesh,
+                           P(plan.batch_axes, None)),
+        }
+    return {
+        "tokens": _sds((b, shape.seq_len), jnp.int32, mesh,
+                       P(plan.batch_axes, None)),
+        "labels": _sds((b, shape.seq_len), jnp.int32, mesh,
+                       P(plan.batch_axes, None)),
+    }
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh,
+                    plan: sharding.ShardingPlan):
+    aparams = api.init_abstract(cfg)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pspecs = sharding.params_pspec(plan, aparams, axis_sizes)
+    return sharding.attach(aparams, sharding.named(mesh, pspecs)), pspecs
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh: Mesh,
+                       plan: sharding.ShardingPlan, aparams, pspecs,
+                       opt_cfg: optim.OptimizerConfig):
+    aopt = jax.eval_shape(functools.partial(optim.init, opt_cfg), aparams)
+    ospecs = sharding.opt_state_pspec(plan, pspecs, aparams, opt_cfg.name)
+    return sharding.attach(aopt, sharding.named(mesh, ospecs))
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   plan: sharding.ShardingPlan):
+    b = shape.global_batch
+    enc_len = shape.seq_len if cfg.family == "encdec" else 0
+    acache = jax.eval_shape(
+        functools.partial(api.init_cache, cfg, b, shape.seq_len,
+                          enc_len=enc_len))
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cspecs = sharding.cache_pspec(plan, acache, b, axis_sizes)
+    return sharding.attach(acache, sharding.named(mesh, cspecs))
+
+
+def cell_lowerable(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   plan: sharding.ShardingPlan,
+                   opt_cfg: optim.OptimizerConfig | None = None):
+    """Returns (jitted_fn, kwargs-of-ShapeDtypeStructs) for a cell.
+
+    NOTE: the returned fn must be .lower()'d inside
+    ``ctx.use(shard_ctx(plan))`` (and the mesh context) so the model's
+    activation sharding constraints bind — dryrun does this.
+    """
+    opt_cfg = opt_cfg or optim.OptimizerConfig(name=plan.optimizer)
+    cfg = cfg.replace(remat=plan.remat, remat_policy=plan.remat_policy)
+    if shape.kind == "train":
+        aparams, pspecs = abstract_params(cfg, mesh, plan)
+        aopt = abstract_opt_state(cfg, mesh, plan, aparams, pspecs, opt_cfg)
+        fn = jax.jit(make_train_step(cfg, opt_cfg),
+                     donate_argnums=(0, 1))
+        args = (aparams, aopt, batch_specs(cfg, shape, mesh, plan))
+        return fn, args
+    if shape.kind == "prefill":
+        aparams, _ = abstract_params(cfg, mesh, plan)
+        batch = batch_specs(cfg, shape, mesh, plan)
+        batch.pop("labels")
+        fn = jax.jit(make_prefill_step(cfg))
+        return fn, (aparams, batch)
+    # decode
+    aparams, _ = abstract_params(cfg, mesh, plan)
+    acache = abstract_cache(cfg, shape, mesh, plan)
+    token = _sds((shape.global_batch, 1), jnp.int32, mesh,
+                 P(plan.batch_axes if shape.global_batch > 1 else None,
+                   None))
+    pos = _sds((), jnp.int32, mesh, P())
+    fn = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    return fn, (aparams, acache, token, pos)

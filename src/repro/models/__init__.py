@@ -1,0 +1,6 @@
+"""Model substrate: layers, attention, MoE, SSM, xLSTM, assemblies.
+
+Public entry point: ``repro.models.api`` (init / forward / decode) driven
+by ``repro.models.config.ModelConfig``; architecture configs live in
+``repro.configs``.
+"""

@@ -1,0 +1,81 @@
+"""Unified model API: init / forward / decode / caches for every family.
+
+Families:
+  dense   — decoder-only transformer (qwen3, yi, smollm, h2o-danube,
+            chameleon backbone)
+  moe     — decoder-only with MoE FFN (moonshot, kimi-k2)
+  hybrid  — Mamba2 backbone + shared attention (zamba2)
+  xlstm   — mLSTM/sLSTM stack (xlstm-350m)
+  encdec  — whisper backbone (stub frame frontend)
+
+All functions are pure; parameters and caches are pytrees, so the same
+API lowers for the dry-run via ``jax.eval_shape`` without allocating.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, transformer, xlstm_model
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "hybrid": hybrid,
+    "xlstm": xlstm_model,
+    "encdec": encdec,
+}
+
+
+def module(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    return module(cfg).init(key, cfg)
+
+
+def init_abstract(cfg: ModelConfig, seed: int = 0):
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(seed), cfg))
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict,
+            last_only: bool = False) -> Array:
+    """batch: {'tokens': [B,S]} or {'frames':..., 'tokens':...} (encdec)."""
+    if cfg.family == "encdec":
+        return encdec.forward(params, cfg, batch, last_only=last_only)
+    inputs = batch["frames"] if cfg.frontend == "frames" else batch["tokens"]
+    return module(cfg).forward(params, cfg, inputs, last_only=last_only)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict) -> Array:
+    """Prefill serving step: logits for the final position only."""
+    return forward(params, cfg, batch, last_only=True)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> Array:
+    logits = forward(params, cfg, batch)
+    return L.cross_entropy_loss(logits, batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0):
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_len, enc_len)
+    if cfg.family == "xlstm":
+        return xlstm_model.init_state(cfg, batch)
+    if cfg.family == "hybrid":
+        return hybrid.init_cache(cfg, batch, max_len)
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def decode(params: dict, cfg: ModelConfig, token: Array, cache,
+           pos: Array):
+    """One decode step: token [B, 1] -> (logits [B, 1, V], new cache)."""
+    return module(cfg).decode(params, cfg, token, cache, pos)

@@ -1,0 +1,283 @@
+"""Grouped-query attention with qk-norm / sliding-window / KV-cache decode.
+
+Two execution paths:
+  * ``impl='reference'`` — fused-by-XLA jnp attention (default; used for
+    dry-run lowering and CPU smoke tests),
+  * ``impl='flash'``    — the Pallas flash-attention kernel
+    (repro.kernels.flash_attention), interpret-mode on CPU.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    window: int | None = None        # sliding-window size (None = full)
+    causal: bool = True
+    use_rope: bool = True
+
+
+def init(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": L.dense_init(ks[0], d, h * hd, dtype),
+        "wk": L.dense_init(ks[1], d, g * hd, dtype),
+        "wv": L.dense_init(ks[2], d, g * hd, dtype),
+        "wo": L.dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(params: dict, cfg: AttnConfig, x: Array,
+                 positions: Array) -> tuple[Array, Array, Array]:
+    b, s, _ = x.shape
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(b, s, g, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(b, s, g, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_norm"])
+        k = L.rms_norm(k, params["k_norm"])
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if cfg.use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, cfg: AttnConfig,
+          q_positions: Array, k_positions: Array,
+          kv_valid: Array | None = None) -> Array:
+    """Reference attention. q: [B,H,S,D], k/v: [B,G,Skv,D]."""
+    b, h, s, hd = q.shape
+    g = k.shape[1]
+    rep = h // g
+    qg = q.reshape(b, g, rep, s, hd)
+    logits = jnp.einsum("bgrqd,bgkd->bgrqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    qi = q_positions.reshape(b, 1, 1, s, 1)
+    ki = k_positions.reshape(b, 1, 1, 1, -1)
+    mask = jnp.ones(logits.shape[-2:], bool)
+    if cfg.causal:
+        mask = ki <= qi
+    if cfg.window is not None:
+        mask = mask & (ki > qi - cfg.window)
+    if kv_valid is not None:
+        mask = mask & kv_valid.reshape(b, 1, 1, 1, -1)
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bgkd->bgrqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, hd).astype(q.dtype)
+
+
+def _chunked_sdpa(q: Array, k: Array, v: Array, cfg: AttnConfig,
+                  q_positions: Array, k_positions: Array,
+                  chunk: int = 1024) -> Array:
+    """Flash-style online-softmax attention in pure XLA: lax.scan over KV
+    chunks with running (max, denom, acc) — O(Sq * chunk) live memory so
+    32k-500k cells pass memory analysis.  Matches ``_sdpa`` exactly."""
+    b, h, sq, hd = q.shape
+    g = k.shape[1]
+    rep = h // g
+    skv = k.shape[2]
+    chunk = min(chunk, skv)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_positions = jnp.pad(k_positions, ((0, 0), (0, pad)),
+                              constant_values=jnp.iinfo(jnp.int32).max)
+    n_chunks = k.shape[2] // chunk
+    qg = q.reshape(b, g, rep, sq, hd).astype(jnp.float32)
+    kc = k.reshape(b, g, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, g, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    kp = k_positions.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    qi = q_positions.reshape(b, 1, 1, sq, 1)
+    scale = hd ** -0.5
+    neg = jnp.float32(-1e30)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, kpb = inp
+        logits = jnp.einsum("bgrqd,bgkd->bgrqk", qg,
+                            kb.astype(jnp.float32)) * scale
+        ki = kpb.reshape(b, 1, 1, 1, chunk)
+        mask = jnp.ones(logits.shape[-2:], bool)
+        if cfg.causal:
+            mask = ki <= qi
+        if cfg.window is not None:
+            mask = mask & (ki > qi - cfg.window)
+        mask = mask & (ki < jnp.iinfo(jnp.int32).max)
+        logits = jnp.where(mask, logits, neg)
+        m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(m_new > neg / 2, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bgrqk,bgkd->bgrqd", p,
+                                       vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, g, rep, sq, 1), neg, jnp.float32)
+    l0 = jnp.zeros((b, g, rep, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, g, rep, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, kp))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+# sequences at or above this length use the chunked online-softmax path
+CHUNKED_THRESHOLD = 4096
+
+
+def forward(params: dict, cfg: AttnConfig, x: Array,
+            positions: Array | None = None,
+            impl: str = "auto") -> Array:
+    """Self-attention over a full sequence (train / prefill)."""
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if impl == "flash":
+        from repro.kernels import ops
+        out = ops.attention(q, k, v, causal=cfg.causal, window=cfg.window)
+    elif impl == "chunked" or (impl == "auto" and s >= CHUNKED_THRESHOLD):
+        out = _chunked_sdpa(q, k, v, cfg, positions, positions)
+    else:
+        out = _sdpa(q, k, v, cfg, positions, positions)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def cross_forward(params: dict, cfg: AttnConfig, x: Array,
+                  kv: tuple[Array, Array]) -> Array:
+    """Cross-attention against precomputed encoder K/V [B,G,Senc,D]."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    q = q.transpose(0, 2, 1, 3)
+    k, v = kv
+    senc = k.shape[2]
+    pos_q = jnp.zeros((b, s), jnp.int32)
+    pos_k = jnp.zeros((b, senc), jnp.int32)
+    nc_cfg = cfg._replace(causal=False, window=None)
+    out = _sdpa(q, k, v, nc_cfg, pos_q, pos_k)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def encode_kv(params: dict, cfg: AttnConfig, enc: Array
+              ) -> tuple[Array, Array]:
+    """Project encoder states once into cross-attention K/V."""
+    b, s, _ = enc.shape
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc @ params["wk"].astype(enc.dtype)).reshape(b, s, g, hd)
+    v = (enc @ params["wv"].astype(enc.dtype)).reshape(b, s, g, hd)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Ring-buffered KV cache.  For full attention the buffer length is the
+    max context; for sliding-window layers it is the window size — the
+    O(window) memory that makes long_500k runnable on SWA archs."""
+
+    k: Array           # [B, G, L, D]
+    v: Array           # [B, G, L, D]
+
+
+class QuantKVCache(NamedTuple):
+    """Int8 KV cache with per-(token, head) symmetric scales — halves the
+    HBM traffic of the memory-bound decode cells (§Roofline 'next
+    lever'); dequantized on the fly inside attention."""
+
+    k_q: Array         # int8 [B, G, L, D]
+    v_q: Array         # int8 [B, G, L, D]
+    k_s: Array         # f32  [B, G, L, 1]
+    v_s: Array         # f32  [B, G, L, 1]
+
+
+def _quantize_rows(x: Array) -> tuple[Array, Array]:
+    """x: [..., D] -> (int8 values, f32 scale over the last dim)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int,
+               dtype=jnp.float32, quant: bool = False
+               ) -> KVCache | QuantKVCache:
+    length = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (batch, cfg.n_kv_heads, length, cfg.head_dim)
+    if quant:
+        sshape = shape[:-1] + (1,)
+        return QuantKVCache(jnp.zeros(shape, jnp.int8),
+                            jnp.zeros(shape, jnp.int8),
+                            jnp.ones(sshape, jnp.float32),
+                            jnp.ones(sshape, jnp.float32))
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def decode_step(params: dict, cfg: AttnConfig, x: Array,
+                cache: KVCache | QuantKVCache, pos: Array
+                ) -> tuple[Array, KVCache | QuantKVCache]:
+    """One-token attention.  x: [B, 1, d], pos: [] or [B] current index."""
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k_new, v_new = _project_qkv(params, cfg, x, pos[:, None])
+    quant = isinstance(cache, QuantKVCache)
+    length = (cache.k_q if quant else cache.k).shape[2]
+    slot = pos % length
+    bidx = jnp.arange(b)
+    if quant:
+        kq, ks = _quantize_rows(k_new[:, :, 0])
+        vq, vs = _quantize_rows(v_new[:, :, 0])
+        new_cache = QuantKVCache(
+            cache.k_q.at[bidx, :, slot].set(kq),
+            cache.v_q.at[bidx, :, slot].set(vq),
+            cache.k_s.at[bidx, :, slot].set(ks),
+            cache.v_s.at[bidx, :, slot].set(vs))
+        k = (new_cache.k_q.astype(x.dtype)
+             * new_cache.k_s.astype(x.dtype))
+        v = (new_cache.v_q.astype(x.dtype)
+             * new_cache.v_s.astype(x.dtype))
+    else:
+        k = cache.k.at[bidx, :, slot].set(k_new[:, :, 0])
+        v = cache.v.at[bidx, :, slot].set(v_new[:, :, 0])
+
+    # absolute positions of cache slots (ring arithmetic)
+    slots = jnp.arange(length)[None, :]                      # [1, L]
+    wrap = jnp.where(slots <= slot[:, None], 0, length)      # [B, L]
+    k_pos = slots - wrap + (pos[:, None] // length) * length
+    k_valid = (k_pos >= 0) & (k_pos <= pos[:, None])
+
+    out = _sdpa(q, k, v, cfg, pos[:, None], k_pos, kv_valid=k_valid)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    final = new_cache if quant else KVCache(k, v)
+    return out @ params["wo"].astype(x.dtype), final

@@ -1,0 +1,189 @@
+"""Zamba2-style hybrid stack: Mamba2 backbone + a SHARED attention block.
+
+The backbone is ``n_layers`` Mamba2 blocks; before every ``attn_every``-th
+block the single shared transformer block (attention + MLP, one parameter
+set reused at every application — Zamba2's signature trick) refines the
+residual stream.  Layers are scanned in groups of ``attn_every`` so the
+HLO stays depth-independent:
+
+    [shared attn] -> ssm x attn_every   ... repeated, remainder unrolled.
+
+Each shared-block application has its own KV cache (it sees the stream at
+a different depth), so decode carries ``n_groups (+1)`` caches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def ssm_config(cfg: ModelConfig) -> ssm_lib.SSMConfig:
+    return ssm_lib.SSMConfig(
+        d_model=cfg.d_model, d_inner=cfg.d_inner,
+        n_heads=cfg.ssm_heads, d_state=cfg.ssm_state,
+        chunk=cfg.ssm_chunk)
+
+
+def _group_sizes(cfg: ModelConfig) -> tuple[int, int]:
+    n_groups = cfg.n_layers // cfg.attn_every
+    remainder = cfg.n_layers - n_groups * cfg.attn_every
+    return n_groups, remainder
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    scfg = ssm_config(cfg)
+    n_groups, remainder = _group_sizes(cfg)
+
+    def init_ssm_block(k):
+        return {"norm": tf._norm_init(cfg),
+                "ssm": ssm_lib.init(k, scfg, cfg.pdt)}
+
+    grouped = jax.vmap(jax.vmap(lambda k: init_ssm_block(k)))(
+        jax.random.split(ks[0], n_groups * cfg.attn_every
+                         ).reshape(n_groups, cfg.attn_every, 2))
+    p = {
+        "embed": L.embed_init(ks[1], cfg.vocab, cfg.d_model, cfg.pdt),
+        "groups": grouped,
+        "shared": tf.init_block(ks[2], cfg),
+        "final_norm": tf._norm_init(cfg),
+        "unembed": L.dense_init(ks[3], cfg.d_model, cfg.vocab, cfg.pdt),
+    }
+    if remainder:
+        p["rem"] = jax.vmap(lambda k: init_ssm_block(k))(
+            jax.random.split(ks[4], remainder))
+    return p
+
+
+def _ssm_block_fwd(blk, cfg: ModelConfig, x: Array,
+                   state: dict | None) -> tuple[Array, dict]:
+    h = tf.apply_norm(cfg, blk["norm"], x)
+    y, new_state = ssm_lib.forward(blk["ssm"], ssm_config(cfg), h, state)
+    return x + y, new_state
+
+
+def _ssm_block_step(blk, cfg: ModelConfig, x: Array,
+                    state: dict) -> tuple[Array, dict]:
+    h = tf.apply_norm(cfg, blk["norm"], x)
+    y, new_state = ssm_lib.decode_step(blk["ssm"], ssm_config(cfg), h,
+                                       state)
+    return x + y, new_state
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array,
+            positions: Array | None = None,
+            last_only: bool = False) -> Array:
+    x = tf.embed_tokens(params, cfg, tokens)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None].repeat(b, 0)
+    n_groups, remainder = _group_sizes(cfg)
+    shared = params["shared"]
+
+    def group_body(carry, group_params):
+        x = carry
+        x = tf.block_forward(shared, cfg, x, positions)     # shared attn
+
+        def inner(c, blk):
+            y, _ = _ssm_block_fwd(blk, cfg, c, None)
+            return y, None
+
+        inner_fn = jax.checkpoint(inner) if cfg.remat else inner
+        x, _ = jax.lax.scan(inner_fn, x, group_params)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    if remainder:
+        x = tf.block_forward(shared, cfg, x, positions)
+
+        def inner(c, blk):
+            y, _ = _ssm_block_fwd(blk, cfg, c, None)
+            return y, None
+
+        x, _ = jax.lax.scan(inner, x, params["rem"])
+    if last_only:
+        x = x[:, -1:]
+    return tf.logits_head(params, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    n_groups, remainder = _group_sizes(cfg)
+    scfg = ssm_config(cfg)
+    acfg = tf.attn_config(cfg)
+    n_attn = n_groups + (1 if remainder else 0)
+    attn_caches = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[attn.init_cache(acfg, batch, max_len, cfg.cdt,
+                          quant=cfg.kv_quant)
+          for _ in range(n_attn)])
+    ssm_states = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[ssm_lib.init_state(scfg, batch, cfg.cdt)
+          for _ in range(n_groups * cfg.attn_every)])
+    ssm_states = jax.tree.map(
+        lambda a: a.reshape((n_groups, cfg.attn_every) + a.shape[1:]),
+        ssm_states)
+    cache = {"attn": attn_caches, "ssm": ssm_states}
+    if remainder:
+        cache["ssm_rem"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[ssm_lib.init_state(scfg, batch, cfg.cdt)
+              for _ in range(remainder)])
+    return cache
+
+
+def decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
+           pos: Array) -> tuple[Array, dict]:
+    x = tf.embed_tokens(params, cfg, token)
+    n_groups, remainder = _group_sizes(cfg)
+    shared = params["shared"]
+    attn_caches = cache["attn"]
+    group_attn = jax.tree.map(lambda a: a[:n_groups], attn_caches)
+
+    def group_body(carry, inp):
+        x = carry
+        gp, a_cache, s_states = inp
+        x, new_a = tf.block_decode(shared, cfg, x, a_cache, pos)
+
+        def inner(c, blk_state):
+            blk, st = blk_state
+            y, new_st = _ssm_block_step(blk, cfg, c, st)
+            return y, new_st
+
+        x, new_s = jax.lax.scan(inner, x, (gp, s_states))
+        return x, (new_a, new_s)
+
+    x, (new_attn, new_ssm) = jax.lax.scan(
+        group_body, x, (params["groups"], group_attn, cache["ssm"]))
+    new_cache = {"attn": new_attn, "ssm": new_ssm}
+    if remainder:
+        last_attn = jax.tree.map(lambda a: a[n_groups], attn_caches)
+        x, new_last = tf.block_decode(shared, cfg, x, last_attn, pos)
+        new_cache["attn"] = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b[None]], 0),
+            new_attn, new_last)
+
+        def inner(c, blk_state):
+            blk, st = blk_state
+            y, new_st = _ssm_block_step(blk, cfg, c, st)
+            return y, new_st
+
+        x, new_rem = jax.lax.scan(inner, x, (params["rem"],
+                                             cache["ssm_rem"]))
+        new_cache["ssm_rem"] = new_rem
+    return tf.logits_head(params, cfg, x), new_cache

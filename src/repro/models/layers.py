@@ -1,0 +1,120 @@
+"""Shared neural-net layers (pure functional JAX, pytree params)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = object
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> Array:
+    if scale is None:
+        scale = d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array,
+               eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [B, H, S, D]; positions: [B, S] or [S]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,D/2]
+    cos = jnp.cos(angles)[:, None, :, :]
+    sin = jnp.sin(angles)[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu_mlp(params: dict, x: Array) -> Array:
+    gate = jax.nn.silu(x @ params["w_gate"].astype(x.dtype))
+    up = x @ params["w_up"].astype(x.dtype)
+    return (gate * up) @ params["w_down"].astype(x.dtype)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params: dict, x: Array) -> Array:
+    h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype)
+                    + params["b_up"].astype(x.dtype))
+    return h @ params["w_down"].astype(x.dtype) \
+        + params["b_down"].astype(x.dtype)
+
+
+def cross_entropy_loss(logits: Array, labels: Array,
+                       ignore_index: int = -100) -> Array:
+    """Mean token NLL in f32; labels == ignore_index are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_index).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def causal_conv1d(x: Array, w: Array, state: Array | None = None
+                  ) -> tuple[Array, Array]:
+    """Depthwise causal conv over time.  x: [B, S, C], w: [K, C].
+
+    Returns (y, new_state) where state is the trailing K-1 inputs
+    [B, K-1, C] for streaming decode."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return y, new_state

@@ -1,0 +1,194 @@
+"""Mamba2-style selective state-space block (chunked SSD algorithm).
+
+Recurrence per head h with scalar decay (Mamba2's A is scalar/head):
+
+    S_t = exp(A dt_t) S_{t-1} + dt_t * x_t B_t^T        S in R^{P x N}
+    y_t = S_t C_t + D x_t
+
+Training/prefill uses the chunked state-space-dual form: within a chunk
+of length Lc an attention-like (masked, decay-weighted) product; across
+chunks a scan over compressed chunk states — O(T Lc) work and O(T/Lc)
+scan length instead of a length-T scan, which keeps both compile time and
+activation memory small at 4k-512k tokens.  Decode keeps the [H, P, N]
+state and applies one recurrence step.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_inner: int              # H * P
+    n_heads: int
+    d_state: int              # N
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def init(key, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    d, di, h, n = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.d_state
+    conv_ch = di + 2 * n
+    return {
+        # separate projections so the big ones (wx, wz: d -> d_inner)
+        # shard cleanly over 'model' while the small B/C/dt heads stay
+        # replicated (see distributed/sharding.py)
+        "wx": L.dense_init(ks[0], d, di, dtype),
+        "wbc": L.dense_init(ks[1], d, 2 * n, dtype),
+        "wdt": L.dense_init(ks[2], d, h, dtype),
+        "wz": L.dense_init(ks[3], d, di, dtype),
+        "conv_w": (jax.random.normal(ks[4], (cfg.d_conv, conv_ch),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),        # A = -exp(a_log)
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus ~ 0.12
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.ones((di,), dtype),
+        "out_proj": L.dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _project(params: dict, cfg: SSMConfig, u: Array):
+    n = cfg.d_state
+    x = u @ params["wx"].astype(u.dtype)
+    bc = u @ params["wbc"].astype(u.dtype)
+    dt = u @ params["wdt"].astype(u.dtype)
+    z = u @ params["wz"].astype(u.dtype)
+    return x, bc[..., :n], bc[..., n:], dt, z
+
+
+def _ssd_chunked(cfg: SSMConfig, xh: Array, b: Array, c: Array,
+                 la: Array, dt: Array, s0: Array | None
+                 ) -> tuple[Array, Array]:
+    """Chunked scan.  xh: [B,T,H,P], b/c: [B,T,N], la/dt: [B,T,H].
+
+    Returns (y [B,T,H,P], final_state [B,H,P,N]).
+    """
+    bs, t, h, p = xh.shape
+    n = b.shape[-1]
+    lc = min(cfg.chunk, t)
+    assert t % lc == 0, "sequence length must divide the SSD chunk"
+    nc = t // lc
+
+    xh = xh.reshape(bs, nc, lc, h, p)
+    bc = b.reshape(bs, nc, lc, n)
+    cc = c.reshape(bs, nc, lc, n)
+    la = la.reshape(bs, nc, lc, h)
+    dt = dt.reshape(bs, nc, lc, h)
+
+    cum = jnp.cumsum(la, axis=2)                       # [B,NC,LC,H]
+    # intra-chunk: y[l] = sum_{l'<=l} exp(cum_l - cum_l') dt_l' (C_l.B_l')
+    #                     * x_l'
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,NC,L,L,H]
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+    gate = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    scores = jnp.einsum("bcln,bcmn->bclm", cc, bc)          # [B,NC,L,L]
+    w = scores[..., None] * gate * dt[:, :, None, :, :]     # [B,NC,L,L,H]
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", w, xh)
+
+    # chunk summary state: S_c = sum_l exp(cum_L - cum_l) dt_l x_l B_l^T
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dt            # [B,NC,L,H]
+    s_chunk = jnp.einsum("bclh,bclhp,bcln->bchpn", tail, xh, bc)
+    a_chunk = jnp.exp(cum[:, :, -1, :])                     # [B,NC,H]
+
+    # inter-chunk scan:  S_c_out = a_c * S_{c-1} + S_c
+    def op(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, a2[..., None, None] * s1 + s2
+
+    a_sc, s_sc = jax.lax.associative_scan(
+        op, (a_chunk, s_chunk), axis=1)                     # [B,NC,H,P,N]
+    if s0 is not None:
+        s_sc = s_sc + a_sc[..., None, None] * s0[:, None]
+    # state entering chunk c: s0 for c = 0, scanned state of c-1 otherwise
+    first = (s0[:, None] if s0 is not None
+             else jnp.zeros_like(s_sc[:, :1]))
+    s_prev = jnp.concatenate([first, s_sc[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                         cc, jnp.exp(cum), s_prev)
+    y = (y_intra + y_inter).reshape(bs, t, h, p)
+    return y, s_sc[:, -1]
+
+
+def forward(params: dict, cfg: SSMConfig, u: Array,
+            state: dict | None = None) -> tuple[Array, dict]:
+    """Full-sequence forward.  u: [B, T, d_model]."""
+    bs, t, _ = u.shape
+    h, p, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    x, b, c, dt_raw, z = _project(params, cfg, u)
+
+    conv_in = jnp.concatenate([x, b, c], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = L.causal_conv1d(conv_in, params["conv_w"],
+                                         conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    x, b, c = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                   # [B,T,H]
+    a = -jnp.exp(params["a_log"])                               # [H]
+    la = dt * a                                                 # log decay
+    xh = x.reshape(bs, t, h, p).astype(jnp.float32)
+
+    s0 = None if state is None else state["ssm"]
+    y, s_last = _ssd_chunked(cfg, xh, b.astype(jnp.float32),
+                             c.astype(jnp.float32), la, dt, s0)
+    y = y + params["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bs, t, cfg.d_inner).astype(u.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), params["out_norm"])
+    out = y @ params["out_proj"].astype(u.dtype)
+    return out, {"conv": new_conv, "ssm": s_last}
+
+
+def init_state(cfg: SSMConfig, batch: int, dtype=jnp.float32) -> dict:
+    conv_ch = cfg.d_inner + 2 * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                         jnp.float32),
+    }
+
+
+def decode_step(params: dict, cfg: SSMConfig, u: Array, state: dict
+                ) -> tuple[Array, dict]:
+    """One-token step.  u: [B, 1, d_model]."""
+    bs = u.shape[0]
+    h, p, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    x, b, c, dt_raw, z = _project(params, cfg, u)
+
+    conv_in = jnp.concatenate([x, b, c], axis=-1)
+    conv_out, new_conv = L.causal_conv1d(conv_in, params["conv_w"],
+                                         state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    x, b, c = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])[:, 0]             # [B,H]
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)                                     # [B,H]
+    xh = x.reshape(bs, h, p).astype(jnp.float32)
+    bv = b[:, 0].astype(jnp.float32)                            # [B,N]
+    cv = c[:, 0].astype(jnp.float32)
+
+    s_new = (decay[..., None, None] * state["ssm"]
+             + dt[..., None, None] * xh[..., None] * bv[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", s_new, cv) \
+        + params["d_skip"][None, :, None] * xh
+    y = y.reshape(bs, 1, cfg.d_inner).astype(u.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), params["out_norm"])
+    out = y @ params["out_proj"].astype(u.dtype)
+    return out, {"conv": new_conv, "ssm": s_new}

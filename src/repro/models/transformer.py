@@ -1,0 +1,184 @@
+"""Decoder-only transformer stack (dense and MoE families).
+
+Layers are stacked pytrees scanned with ``lax.scan`` so the lowered HLO is
+depth-independent (critical for the 80-cell dry-run compile matrix).
+``cfg.remat`` wraps the block body in ``jax.checkpoint`` for training.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain, current as current_ctx
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def attn_config(cfg: ModelConfig) -> attn.AttnConfig:
+    return attn.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+        window=cfg.window, use_rope=True)
+
+
+def moe_config(cfg: ModelConfig) -> moe_lib.MoEConfig:
+    return moe_lib.MoEConfig(cfg.d_model, cfg.d_ff, cfg.n_experts,
+                             cfg.top_k, cfg.capacity_factor)
+
+
+def _norm_init(cfg: ModelConfig) -> dict:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), cfg.pdt),
+                "bias": jnp.zeros((cfg.d_model,), cfg.pdt)}
+    return {"scale": jnp.ones((cfg.d_model,), cfg.pdt)}
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: Array) -> Array:
+    if cfg.norm == "layernorm":
+        return L.layer_norm(x, p["scale"], p["bias"])
+    return L.rms_norm(x, p["scale"])
+
+
+def init_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": _norm_init(cfg),
+        "attn": attn.init(k1, attn_config(cfg), cfg.pdt),
+        "mlp_norm": _norm_init(cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.init(k2, moe_config(cfg), cfg.pdt)
+    elif cfg.mlp == "gelu":
+        p["mlp"] = L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.pdt)
+    else:
+        p["mlp"] = L.swiglu_mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.pdt)
+    return p
+
+
+def block_forward(p: dict, cfg: ModelConfig, x: Array,
+                  positions: Array) -> Array:
+    h = apply_norm(cfg, p["attn_norm"], x)
+    x = x + attn.forward(p["attn"], attn_config(cfg), h, positions)
+    h = apply_norm(cfg, p["mlp_norm"], x)
+    if cfg.family == "moe":
+        ctx = current_ctx()
+        if ctx is not None and ctx.moe_ep and ctx.mesh is not None:
+            y, _aux = moe_lib.forward_ep(
+                p["moe"], moe_config(cfg), h, mesh=ctx.mesh,
+                data_axes=ctx.batch_axes, model_axis=ctx.model_axis,
+                fsdp_axes=ctx.fsdp_axes)
+        else:
+            y, _aux = moe_lib.forward(p["moe"], moe_config(cfg), h)
+    elif cfg.mlp == "gelu":
+        y = L.gelu_mlp(p["mlp"], h)
+    else:
+        y = L.swiglu_mlp(p["mlp"], h)
+    return x + y
+
+
+def block_decode(p: dict, cfg: ModelConfig, x: Array,
+                 cache: attn.KVCache, pos: Array
+                 ) -> tuple[Array, attn.KVCache]:
+    h = apply_norm(cfg, p["attn_norm"], x)
+    y, cache = attn.decode_step(p["attn"], attn_config(cfg), h, cache, pos)
+    x = x + y
+    h = apply_norm(cfg, p["mlp_norm"], x)
+    if cfg.family == "moe":
+        y, _ = moe_lib.forward(p["moe"], moe_config(cfg), h)
+    elif cfg.mlp == "gelu":
+        y = L.gelu_mlp(p["mlp"], h)
+    else:
+        y = L.swiglu_mlp(p["mlp"], h)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig) -> dict:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(
+        jax.random.split(k_blocks, cfg.n_layers))
+    p = {
+        "embed": L.embed_init(k_embed, cfg.vocab, cfg.d_model, cfg.pdt),
+        "blocks": blocks,
+        "final_norm": _norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_init(k_head, cfg.d_model, cfg.vocab, cfg.pdt)
+    return p
+
+
+def logits_head(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    x = apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        return x @ params["embed"].astype(x.dtype).T
+    return x @ params["unembed"].astype(x.dtype)
+
+
+def embed_tokens(params: dict, cfg: ModelConfig, tokens: Array) -> Array:
+    return params["embed"].astype(cfg.cdt)[tokens]
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array,
+            positions: Array | None = None,
+            last_only: bool = False) -> Array:
+    """tokens: [B, S] int32 (or [B, S, d] frames for stub frontends).
+    ``last_only`` heads only the final position (prefill serving)."""
+    if tokens.ndim == 2:
+        x = embed_tokens(params, cfg, tokens)
+    else:
+        x = tokens.astype(cfg.cdt)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None].repeat(b, 0)
+
+    body = functools.partial(block_forward, cfg=cfg)
+
+    def scan_body(carry, blk):
+        if cfg.remat:
+            policy = (jax.checkpoint_policies
+                      .dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots" else None)
+            fn = jax.checkpoint(body, policy=policy)
+        else:
+            fn = body
+        return constrain(fn(blk, x=carry, positions=positions),
+                         "residual"), None
+
+    x = constrain(x, "residual")
+    x, _ = jax.lax.scan(scan_body, x, params["blocks"])
+    if last_only:
+        x = x[:, -1:]
+    return logits_head(params, cfg, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> attn.KVCache:
+    one = lambda: attn.init_cache(attn_config(cfg), batch, max_len,
+                                  cfg.cdt, quant=cfg.kv_quant)
+    caches = [one() for _ in range(cfg.n_layers)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def decode(params: dict, cfg: ModelConfig, token: Array,
+           cache: attn.KVCache, pos: Array
+           ) -> tuple[Array, attn.KVCache]:
+    """token: [B, 1] int32; pos: scalar absolute position."""
+    x = embed_tokens(params, cfg, token)
+
+    def scan_body(carry, inp):
+        blk, layer_cache = inp
+        y, new_cache = block_decode(blk, cfg, carry, layer_cache, pos)
+        return y, new_cache
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["blocks"], cache))
+    return logits_head(params, cfg, x), new_caches

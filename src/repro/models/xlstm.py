@@ -1,0 +1,214 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Recurrent, attention-free token mixing — the 'ssm' family arch of the
+assignment (xlstm-350m).  Both cells use exponential input gating with
+the max-stabilizer from the xLSTM paper; sequences run under
+``lax.scan`` (compile size is depth-independent), decode carries the
+explicit recurrent state, so long_500k decoding is O(1) per token.
+
+mLSTM (per head, head dim P):
+    m_t = max(f~_t + m_{t-1}, i~_t)
+    f'  = exp(f~_t + m_{t-1} - m_t),  i' = exp(i~_t - m_t)
+    C_t = f' C_{t-1} + i' v_t k_t^T          C in R^{P x P}
+    n_t = f' n_{t-1} + i' k_t
+    h_t = o_t * (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+sLSTM (per unit, block-diagonal recurrence over heads):
+    z = tanh(Wz x + Rz h_{t-1}),  gates i~, f~, o from x and h_{t-1}
+    c_t = f' c_{t-1} + i' z,  n_t = f' n_{t-1} + i',  h_t = o * c_t / n_t
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+class XLSTMConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0
+    d_conv: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "w_up": L.dense_init(ks[0], d, di, dtype),
+        "w_gate": L.dense_init(ks[1], d, di, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.d_conv, di), jnp.float32)
+                   * 0.2).astype(dtype),
+        "wq": L.dense_init(ks[3], di, di, dtype),
+        "wk": L.dense_init(ks[4], di, di, dtype),
+        "wv": L.dense_init(ks[5], di, di, dtype),
+        "w_if": L.dense_init(ks[6], di, 2 * h, dtype),
+        "if_bias": jnp.concatenate([jnp.zeros((h,), jnp.float32),
+                                    jnp.full((h,), 3.0, jnp.float32)]),
+        "out_norm": jnp.ones((di,), dtype),
+        "w_down": L.dense_init(ks[7], di, d, dtype),
+    }
+
+
+def mlstm_state(cfg: XLSTMConfig, batch: int) -> dict:
+    h, p = cfg.n_heads, cfg.head_dim
+    return {
+        "c": jnp.zeros((batch, h, p, p), jnp.float32),
+        "n": jnp.zeros((batch, h, p), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner),
+                          jnp.float32),
+    }
+
+
+def _mlstm_gates(params, cfg, conv_out, u):
+    bsz, t, _ = conv_out.shape
+    h, p = cfg.n_heads, cfg.head_dim
+    q = (conv_out @ params["wq"].astype(conv_out.dtype)
+         ).reshape(bsz, t, h, p) * p ** -0.5
+    k = (conv_out @ params["wk"].astype(conv_out.dtype)
+         ).reshape(bsz, t, h, p) * p ** -0.5
+    v = (u @ params["wv"].astype(u.dtype)).reshape(bsz, t, h, p)
+    if_raw = (conv_out @ params["w_if"].astype(conv_out.dtype)
+              ).astype(jnp.float32) + params["if_bias"]
+    i_t, f_raw = jnp.split(if_raw, 2, axis=-1)              # [B,T,H]
+    f_t = jax.nn.log_sigmoid(f_raw)
+    return (q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), i_t, f_t)
+
+
+def _mlstm_step(state, qkvif):
+    q, k, v, i_t, f_t = qkvif
+    m_new = jnp.maximum(f_t + state["m"], i_t)
+    fp = jnp.exp(f_t + state["m"] - m_new)[..., None]
+    ip = jnp.exp(i_t - m_new)[..., None]
+    c = fp[..., None] * state["c"] + ip[..., None] * (
+        v[..., :, None] * k[..., None, :])
+    n = fp * state["n"] + ip * k
+    denom = jnp.maximum(jnp.abs(jnp.sum(n * q, -1)), jnp.exp(-m_new))
+    h_t = jnp.einsum("bhpn,bhn->bhp", c, q) / denom[..., None]
+    new = dict(state, c=c, n=n, m=m_new)
+    return new, h_t
+
+
+def mlstm_forward(params: dict, cfg: XLSTMConfig, x: Array,
+                  state: dict | None = None) -> tuple[Array, dict]:
+    """x: [B, T, d_model]."""
+    bsz, t, _ = x.shape
+    if state is None:
+        state = mlstm_state(cfg, bsz)
+    u = x @ params["w_up"].astype(x.dtype)
+    z = x @ params["w_gate"].astype(x.dtype)
+    conv_out, new_conv = L.causal_conv1d(u, params["conv_w"],
+                                         state["conv"].astype(u.dtype))
+    conv_out = jax.nn.silu(conv_out)
+    q, k, v, i_t, f_t = _mlstm_gates(params, cfg, conv_out, u)
+
+    cell = {k2: state[k2] for k2 in ("c", "n", "m")}
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_t, f_t))
+    cell, hs = jax.lax.scan(_mlstm_step, cell, xs)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(bsz, t, cfg.d_inner)
+
+    y = L.rms_norm(hs.astype(x.dtype), params["out_norm"])
+    y = y * jax.nn.silu(z)
+    out = y @ params["w_down"].astype(x.dtype)
+    return out, dict(cell, conv=new_conv.astype(jnp.float32))
+
+
+def mlstm_decode(params: dict, cfg: XLSTMConfig, x: Array, state: dict
+                 ) -> tuple[Array, dict]:
+    return mlstm_forward(params, cfg, x, state)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    w = jax.random.normal(ks[0], (d, 4 * d), jnp.float32) * d ** -0.5
+    r = jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32) * hd ** -0.5
+    return {
+        "w": w.astype(dtype),
+        "r": r.astype(dtype),                     # block-diag recurrence
+        "bias": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                                 jnp.full((d,), 3.0, jnp.float32),
+                                 jnp.zeros((d,), jnp.float32)]),
+        "ffn": L.swiglu_mlp_init(ks[2], d, int(d * 4 / 3), dtype),
+        "ffn_norm": jnp.ones((d,), dtype),
+    }
+
+
+def slstm_state(cfg: XLSTMConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_step(params, cfg, state, x_t):
+    """x_t: [B, 4d] pre-projected input; recurrent term added here."""
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    b = x_t.shape[0]
+    h_prev = state["h"].reshape(b, h, hd)
+    rec = jnp.einsum("bhi,hij->bhj", h_prev,
+                     params["r"].astype(jnp.float32)).reshape(b, 4 * d)
+    pre = x_t.astype(jnp.float32) + rec + params["bias"]
+    zr, ir, fr, orr = jnp.split(pre.reshape(b, 4, d), 4, axis=1)
+    z = jnp.tanh(zr[:, 0])
+    i_t = ir[:, 0]
+    f_t = jax.nn.log_sigmoid(fr[:, 0])
+    o = jax.nn.sigmoid(orr[:, 0])
+    m_new = jnp.maximum(f_t + state["m"], i_t)
+    fp = jnp.exp(f_t + state["m"] - m_new)
+    ip = jnp.exp(i_t - m_new)
+    c = fp * state["c"] + ip * z
+    n = fp * state["n"] + ip
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return dict(c=c, n=n, m=m_new, h=h_new), h_new
+
+
+def slstm_forward(params: dict, cfg: XLSTMConfig, x: Array,
+                  state: dict | None = None) -> tuple[Array, dict]:
+    bsz, t, d = x.shape
+    if state is None:
+        state = slstm_state(cfg, bsz)
+    pre = x @ params["w"].astype(x.dtype)                   # [B,T,4d]
+
+    def step(st, x_t):
+        return _slstm_step(params, cfg, st, x_t)
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    out = hs + L.swiglu_mlp(params["ffn"],
+                            L.rms_norm(hs, params["ffn_norm"]))
+    return out, state
+
+
+def slstm_decode(params: dict, cfg: XLSTMConfig, x: Array, state: dict
+                 ) -> tuple[Array, dict]:
+    return slstm_forward(params, cfg, x, state)

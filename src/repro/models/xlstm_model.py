@@ -1,0 +1,128 @@
+"""xLSTM stack assembly: groups of (slstm_every - 1) mLSTM + 1 sLSTM.
+
+xlstm-350m: 24 blocks with an sLSTM every 8th block (7:1 ratio as in the
+xLSTM paper); the remainder (if depth % slstm_every != 0) is mLSTM-only.
+Scanned in groups so compile size is depth-independent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as tf
+from repro.models import xlstm as xl
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def xl_config(cfg: ModelConfig) -> xl.XLSTMConfig:
+    return xl.XLSTMConfig(d_model=cfg.d_model, n_heads=cfg.n_heads)
+
+
+def _group_sizes(cfg: ModelConfig) -> tuple[int, int, int]:
+    per = cfg.slstm_every
+    n_groups = cfg.n_layers // per
+    remainder = cfg.n_layers - n_groups * per
+    return n_groups, per - 1, remainder
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    xcfg = xl_config(cfg)
+    n_groups, m_per, remainder = _group_sizes(cfg)
+
+    def init_m(k):
+        return {"norm": tf._norm_init(cfg),
+                "cell": xl.mlstm_init(k, xcfg, cfg.pdt)}
+
+    def init_s(k):
+        return {"norm": tf._norm_init(cfg),
+                "cell": xl.slstm_init(k, xcfg, cfg.pdt)}
+
+    p = {
+        "embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model, cfg.pdt),
+        "m_groups": jax.vmap(jax.vmap(init_m))(
+            jax.random.split(ks[1], n_groups * m_per
+                             ).reshape(n_groups, m_per, 2)),
+        "s_blocks": jax.vmap(init_s)(jax.random.split(ks[2], n_groups)),
+        "final_norm": tf._norm_init(cfg),
+        "unembed": L.dense_init(ks[3], cfg.d_model, cfg.vocab, cfg.pdt),
+    }
+    if remainder:
+        p["rem"] = jax.vmap(init_m)(jax.random.split(ks[4], remainder))
+    return p
+
+
+def _run(params: dict, cfg: ModelConfig, tokens: Array,
+         states: dict | None, last_only: bool = False
+         ) -> tuple[Array, dict]:
+    xcfg = xl_config(cfg)
+    n_groups, m_per, remainder = _group_sizes(cfg)
+    x = params["embed"].astype(cfg.cdt)[tokens]
+    bsz = x.shape[0]
+
+    if states is None:
+        states = init_state(cfg, bsz)
+
+    def m_block(c, blk_st):
+        blk, st = blk_st
+        h = tf.apply_norm(cfg, blk["norm"], c)
+        y, new_st = xl.mlstm_forward(blk["cell"], xcfg, h, st)
+        return c + y, new_st
+
+    def group_body(carry, inp):
+        x = carry
+        gp, sp, m_states, s_state = inp
+        fn = jax.checkpoint(m_block) if cfg.remat else m_block
+        x, new_m = jax.lax.scan(fn, x, (gp, m_states))
+        h = tf.apply_norm(cfg, sp["norm"], x)
+        y, new_s = xl.slstm_forward(sp["cell"], xcfg, h, s_state)
+        return x + y, (new_m, new_s)
+
+    x, (new_m, new_s) = jax.lax.scan(
+        group_body, x,
+        (params["m_groups"], params["s_blocks"],
+         states["m"], states["s"]))
+    new_states = {"m": new_m, "s": new_s}
+    if remainder:
+        x, new_rem = jax.lax.scan(m_block, x,
+                                  (params["rem"], states["rem"]))
+        new_states["rem"] = new_rem
+    if last_only:
+        x = x[:, -1:]
+    logits = tf.apply_norm(cfg, params["final_norm"], x) \
+        @ params["unembed"].astype(cfg.cdt)
+    return logits, new_states
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array,
+            positions: Array | None = None,
+            last_only: bool = False) -> Array:
+    return _run(params, cfg, tokens, None, last_only)[0]
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict:
+    xcfg = xl_config(cfg)
+    n_groups, m_per, remainder = _group_sizes(cfg)
+    stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
+    m_states = stack([xl.mlstm_state(xcfg, batch)
+                      for _ in range(n_groups * m_per)])
+    m_states = jax.tree.map(
+        lambda a: a.reshape((n_groups, m_per) + a.shape[1:]), m_states)
+    st = {
+        "m": m_states,
+        "s": stack([xl.slstm_state(xcfg, batch) for _ in range(n_groups)]),
+    }
+    if remainder:
+        st["rem"] = stack([xl.mlstm_state(xcfg, batch)
+                           for _ in range(remainder)])
+    return st
+
+
+def decode(params: dict, cfg: ModelConfig, token: Array, states: dict,
+           pos: Array) -> tuple[Array, dict]:
+    """Recurrent one-token step — pos is unused (stateful model)."""
+    return _run(params, cfg, token, states)

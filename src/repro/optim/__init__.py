@@ -1,0 +1,4 @@
+"""Optimizers + schedules + gradient compression."""
+
+from repro.optim.adamw import (OptimizerConfig, clip_by_global_norm,  # noqa
+                               global_norm, init, update)

@@ -1,0 +1,173 @@
+"""AdamW and Adafactor (factored second moment) optimizers.
+
+Pure-pytree implementations (no optax dependency).  Adafactor is the
+planner's answer for the 1 T-parameter arch: AdamW's 8 bytes/param of
+f32 moments do not fit 512 chips, the factored second moment (row+col
+statistics per matrix) does — the paper's reuse-vs-stream trade
+replayed against optimizer state (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor
+    decay: float = 0.8             # t^-decay second-moment schedule
+    min_dim_size_to_factor: int = 128
+
+
+def global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: PyTree) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads: PyTree, state: dict,
+                 params: PyTree) -> tuple[PyTree, dict]:
+    count = state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * step
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["mu"])
+    flat_v = tdef.flatten_up_to(state["nu"])
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "mu": tdef.unflatten([o[1] for o in out]),
+        "nu": tdef.unflatten([o[2] for o in out]),
+        "count": count,
+    }
+    return new_p, new_state
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment)
+# ---------------------------------------------------------------------------
+
+def _factored(shape: tuple[int, ...], threshold: int) -> bool:
+    return len(shape) >= 2 and shape[-1] >= threshold \
+        and shape[-2] >= threshold
+
+
+def adafactor_init(params: PyTree,
+                   cfg: OptimizerConfig = OptimizerConfig()) -> dict:
+    def per_leaf(p):
+        if _factored(p.shape, cfg.min_dim_size_to_factor):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(per_leaf, params,
+                          is_leaf=lambda x: isinstance(x, jax.Array)
+                          or hasattr(x, "shape")),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptimizerConfig, grads: PyTree, state: dict,
+                     params: PyTree) -> tuple[PyTree, dict]:
+    count = state["count"] + 1
+    beta2 = 1.0 - count.astype(jnp.float32) ** -cfg.decay
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if "vr" in v:
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = vr.mean(axis=-1, keepdims=True)
+            rms = (vr / jnp.maximum(denom, 1e-30))[..., None] \
+                * vc[..., None, :]
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            rms = beta2 * v["v"] + (1 - beta2) * g2
+            new_v = {"v": rms}
+        step = g * jax.lax.rsqrt(rms + 1e-30)
+        # update clipping (Adafactor's d=1.0 RMS clip)
+        step = step / jnp.maximum(
+            1.0, jnp.sqrt(jnp.mean(step * step)))
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * step
+        return new_p.astype(p.dtype), new_v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    return (tdef.unflatten([o[0] for o in out]),
+            {"v": tdef.unflatten([o[1] for o in out]), "count": count})
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def init(cfg: OptimizerConfig, params: PyTree) -> dict:
+    if cfg.name == "adamw":
+        return adamw_init(params)
+    if cfg.name == "adafactor":
+        return adafactor_init(params, cfg)
+    raise ValueError(cfg.name)
+
+
+def update(cfg: OptimizerConfig, grads: PyTree, state: dict, params: PyTree
+           ) -> tuple[PyTree, dict, Array]:
+    grads, norm = clip_by_global_norm(grads, cfg.grad_clip)
+    if cfg.name == "adamw":
+        p, s = adamw_update(cfg, grads, state, params)
+    else:
+        p, s = adafactor_update(cfg, grads, state, params)
+    return p, s, norm

@@ -1,0 +1,67 @@
+"""Int8 error-feedback gradient compression for DP all-reduce.
+
+At 1000+-node scale the data-parallel gradient all-reduce is the largest
+single collective; int8 quantization cuts its wire bytes 4x (vs f32).
+Error feedback (residual carried to the next step) keeps SGD/Adam
+convergence unbiased in practice (1-bit Adam / EF-SGD literature).
+
+Usage inside a train step:
+    comp, new_residual = compress(grads, residual)
+    comp = jax.lax.pmean(comp, 'data')        # or implicit via sharding
+    grads = decompress(comp)
+
+The compression is per-tensor symmetric: q = round(g / scale), scale =
+max|g| / 127.  Tested for round-trip error bounds and error-feedback
+convergence in tests/test_optim.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Compressed(NamedTuple):
+    q: jax.Array          # int8 payload
+    scale: jax.Array      # f32 scalar
+
+
+def init_residual(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _compress_leaf(g: jax.Array, r: jax.Array
+                   ) -> tuple[Compressed, jax.Array]:
+    g = g.astype(jnp.float32) + r
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    residual = g - q.astype(jnp.float32) * scale
+    return Compressed(q, scale), residual
+
+
+def compress(grads: PyTree, residual: PyTree
+             ) -> tuple[PyTree, PyTree]:
+    """Returns (tree of Compressed, new residual tree)."""
+    pairs = jax.tree.map(_compress_leaf, grads, residual)
+    comp = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, res
+
+
+def decompress(comp: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda c: c.q.astype(jnp.float32) * c.scale, comp,
+        is_leaf=lambda x: isinstance(x, Compressed))
+
+
+def wire_bytes(grads: PyTree) -> tuple[int, int]:
+    """(uncompressed f32 bytes, compressed int8 bytes) for reporting."""
+    full = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    comp = sum(g.size * 1 + 4 for g in jax.tree.leaves(grads))
+    return full, comp

@@ -1,0 +1,203 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+memory term     = HLO_bytes_per_chip / HBM_bw
+collective term = wire_bytes_per_chip / (links * link_bw)
+
+``cost_analysis()`` yields per-chip FLOPs/bytes of the SPMD module.
+Collective bytes are parsed from the compiled HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op's tensor sizes, converted to per-chip wire bytes
+with ring-algorithm factors over the op's replica-group size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e-class constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+ICI_LINKS = 3                # usable links per chip in a 2-D/3-D torus
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[sufbc]\w*?\d+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9,]+\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    operand_bytes: dict          # sum of tensor bytes by op kind
+    wire_bytes_per_chip: float   # ring-model bytes a single chip moves
+
+    def total_operand_bytes(self) -> float:
+        return sum(self.operand_bytes.values())
+
+
+def _tensor_bytes(lhs: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(lhs):
+        base = _DTYPE_BYTES.get(dt)
+        if base is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += base * n
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).strip("{}").split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    op_bytes: dict[str, float] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        eq = line.find("=")
+        if eq < 0:
+            continue
+        rhs = line[eq + 1:]
+        m = _COLL_RE.search(rhs)
+        if m is None:
+            continue
+        kind = m.group(1)
+        out_bytes = _tensor_bytes(rhs[:m.start()])
+        if out_bytes == 0:
+            continue
+        g = max(2, _group_size(line, n_devices))
+        counts[kind] = counts.get(kind, 0) + 1
+        if kind == "all-gather":
+            operand = out_bytes / g
+            w = out_bytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            operand = out_bytes * g
+            w = out_bytes * (g - 1)
+        elif kind == "all-reduce":
+            operand = out_bytes
+            w = 2 * out_bytes * (g - 1) / g
+        elif kind == "all-to-all":
+            operand = out_bytes
+            w = out_bytes * (g - 1) / g
+        else:  # collective-permute
+            operand = out_bytes
+            w = out_bytes
+        op_bytes[kind] = op_bytes.get(kind, 0.0) + operand
+        wire += w
+    return CollectiveStats(counts, op_bytes, wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_frac: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats, n_devices: int,
+                   model_flops_total: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    wire = coll.wire_bytes_per_chip
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = wire / (ICI_LINKS * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    model_per_chip = model_flops_total / n_devices
+    frac = model_per_chip / flops if flops else 0.0
+    return Roofline(flops, hbm, wire, compute_s, memory_s, collective_s,
+                    bottleneck, model_per_chip, frac)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D train, 2*N*D forward/decode, MoE uses N_active."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # one token per sequence
+
+
+def analytic_hbm_bytes(cfg, shape, plan, mesh_shape: dict) -> float:
+    """Per-chip HBM traffic estimate for one step (documented model).
+
+    XLA's 'bytes accessed' counts loop bodies once, so it is only a floor;
+    this closed-form estimate is what the §Roofline memory term uses:
+
+      train:   2x weight reads (fwd+bwd) + grad write + optimizer state
+               read/write + activation save/reload (remat ~ one residual
+               stream per layer each way)
+      prefill: 1x weight read + activation stream
+      decode:  1x weight read (N_active for MoE) + full KV cache read +
+               one KV slot write
+    """
+    model = mesh_shape.get("model", 1)
+    data = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    chips = model * data
+    bpp = 2 if cfg.param_dtype == "bfloat16" else 4
+    n_total = cfg.param_count()
+    n_active = cfg.active_param_count()
+    # weights streamed through a chip per step: TP reads the local shard;
+    # under FSDP the all-gathered layer weights transit HBM anyway, so
+    # the per-chip weight traffic is the model-sharded volume either way.
+    w_local = n_total * bpp / model
+    tokens_local = shape.seq_len * shape.global_batch / max(data, 1)
+
+    if shape.kind == "train":
+        opt_mult = 8.0 if plan.optimizer == "adamw" else 0.2
+        fsdp_ways = 1
+        for ax in plan.fsdp_axes:
+            fsdp_ways *= mesh_shape.get(ax, 1)
+        opt_local = n_total * opt_mult / model / max(fsdp_ways, 1)
+        acts = tokens_local * cfg.d_model * 2 * cfg.n_layers * 4
+        return 3 * w_local + 2 * opt_local + acts
+    if shape.kind == "prefill":
+        acts = tokens_local * cfg.d_model * 2 * cfg.n_layers * 2
+        return w_local + acts
+    # decode: weights (active only for MoE) + KV cache scan
+    w_read = n_active * bpp / model
+    kv_len = min(shape.seq_len, cfg.window or shape.seq_len)
+    if cfg.family in ("xlstm",):
+        kv_len = 1
+    layers = cfg.n_layers if cfg.family != "hybrid" else \
+        -(-cfg.n_layers // cfg.attn_every)
+    kv_bytes_per_el = (1.0 + 1.0 / cfg.hd) if getattr(
+        cfg, "kv_quant", False) else 2.0
+    kv = (2 * layers * cfg.n_kv_heads * cfg.hd * kv_len
+          * shape.global_batch * kv_bytes_per_el) / chips
+    return w_read + kv

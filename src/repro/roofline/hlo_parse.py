@@ -1,0 +1,215 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports)
+counts each ``while`` body ONCE — so any lax.scan'd layer stack or
+chunked-attention loop is undercounted by its trip count, and so are the
+collectives inside it.  The optimized HLO, however, annotates every scan
+loop with ``backend_config={"known_trip_count":{"n":...}}``.
+
+This module parses the HLO text into computations, propagates loop
+multipliers through while bodies/conditions (nested loops multiply), and
+produces:
+
+  * ``dot_flops``  — MXU FLOPs with loop multipliers applied (the
+    dominant compute term; elementwise ops excluded, which understates
+    by a few % on LM workloads),
+  * trip-corrected collective statistics (op counts, operand bytes and
+    ring-model wire bytes per chip).
+
+Validated against analytic counts in tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.roofline.analysis import (_DTYPE_BYTES, _SHAPE_RE,
+                                     CollectiveStats)
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE = re.compile(
+    r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|to_apply|condition|body|true_computation|"
+                    r"false_computation)=%?([\w\.\-]+)")
+_DEF = re.compile(r"^\s*(?:ROOT )?%([\w\.\-]+)\s*=\s*(.*)$")
+_DOT = re.compile(r"\bdot\(%?([\w\.\-]+),")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COLL = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9,]+\})")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _first_shape(text: str) -> tuple[str, tuple[int, ...]] | None:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    return dt, shape
+
+
+def _tensor_bytes_all(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        base = _DTYPE_BYTES.get(dt)
+        if base is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += base * n
+    return total
+
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    dot_flops: float
+    collectives: CollectiveStats
+    loop_multipliers: dict
+    unknown_trip_loops: int
+
+
+def parse(hlo_text: str, n_devices: int) -> HLOAnalysis:
+    # ---- split into computations -----------------------------------------
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+
+    # ---- call graph + loop trip counts ------------------------------------
+    parents: dict[str, list[tuple[str, int]]] = {}
+    unknown = 0
+    for name, lines in comps.items():
+        for line in lines:
+            w = _WHILE.search(line)
+            if w:
+                t = _TRIP.search(line)
+                trip = int(t.group(1)) if t else 1
+                if not t:
+                    unknown += 1
+                for callee in w.groups():
+                    parents.setdefault(callee, []).append((name, trip))
+            else:
+                for callee in _CALLS.findall(line):
+                    if callee != name:
+                        parents.setdefault(callee, []).append((name, 1))
+
+    mult: dict[str, float] = {}
+
+    def resolve(name: str, seen=frozenset()) -> float:
+        if name in mult:
+            return mult[name]
+        if name in seen:
+            return 1.0
+        ps = parents.get(name)
+        if not ps:
+            m = 1.0
+        else:
+            # a computation is invoked from (normally) one site
+            caller, trip = ps[0]
+            m = resolve(caller, seen | {name}) * trip
+        mult[name] = m
+        return m
+
+    for name in comps:
+        resolve(name)
+
+    # ---- dot FLOPs ---------------------------------------------------------
+    dot_flops = 0.0
+    for name, lines in comps.items():
+        m = mult.get(name, 1.0)
+        shapes: dict[str, tuple[str, tuple[int, ...]]] = {}
+        for line in lines:
+            d = _DEF.match(line)
+            if not d:
+                continue
+            op_name, rhs = d.groups()
+            sh = _first_shape(rhs)
+            if sh:
+                shapes[op_name] = sh
+            dm = _DOT.search(rhs)
+            if dm:
+                out = _first_shape(rhs)
+                lhs_name = dm.group(1)
+                lhs = shapes.get(lhs_name)
+                cm = _CONTRACT.search(rhs)
+                if out is None or lhs is None or cm is None:
+                    continue
+                out_elems = 1
+                for dim in out[1]:
+                    out_elems *= dim
+                contract = 1
+                if cm.group(1):
+                    for ci in cm.group(1).split(","):
+                        contract *= lhs[1][int(ci)]
+                dot_flops += m * 2.0 * out_elems * contract
+
+    # ---- collectives (trip-corrected) --------------------------------------
+    counts: dict[str, float] = {}
+    op_bytes: dict[str, float] = {}
+    wire = 0.0
+    for name, lines in comps.items():
+        cmult = mult.get(name, 1.0)
+        for line in lines:
+            eq = line.find("=")
+            if eq < 0:
+                continue
+            rhs = line[eq + 1:]
+            cm = _COLL.search(rhs)
+            if cm is None:
+                continue
+            kind = cm.group(1)
+            # output tensor type(s) sit between '=' and the op token
+            out_bytes = _tensor_bytes_all(rhs[:cm.start()])
+            if out_bytes == 0:
+                continue
+            # XLA:CPU promotes bf16 all-reduces to f32 ("..._promoted"
+            # reducers); a TPU lowering keeps them bf16 — count the
+            # operand's true width, not the CPU artifact's.
+            if "_promoted" in rhs and "f32[" in rhs[:cm.start()]:
+                out_bytes /= 2
+            g = n_devices
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                g = len(gm.group(1).strip("{}").split(","))
+            else:
+                gm = _GROUPS_IOTA_RE.search(line)
+                if gm:
+                    g = int(gm.group(2))
+            g = max(2, g)
+            counts[kind] = counts.get(kind, 0) + cmult
+            if kind == "all-gather":
+                operand, w = out_bytes / g, out_bytes * (g - 1) / g
+            elif kind == "reduce-scatter":
+                operand, w = out_bytes * g, out_bytes * (g - 1)
+            elif kind == "all-reduce":
+                operand, w = out_bytes, 2 * out_bytes * (g - 1) / g
+            elif kind == "all-to-all":
+                operand, w = out_bytes, out_bytes * (g - 1) / g
+            else:
+                operand, w = out_bytes, out_bytes
+            op_bytes[kind] = op_bytes.get(kind, 0.0) + cmult * operand
+            wire += cmult * w
+
+    loops = {k: v for k, v in mult.items() if v > 1}
+    return HLOAnalysis(dot_flops, CollectiveStats(counts, op_bytes, wire),
+                       loops, unknown)

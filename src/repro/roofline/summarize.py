@@ -1,0 +1,96 @@
+"""Aggregate dry-run JSONs into the §Roofline markdown table.
+
+  PYTHONPATH=src python -m repro.roofline.summarize [dir] [--mesh single]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from repro import configs
+
+HINTS = {
+    ("compute", "train"): "more useful-FLOP fraction: lighter remat "
+                          "policy / fused attention kernel",
+    ("compute", "prefill"): "flash-attention Pallas kernel to cut "
+                            "softmax/elementwise overhead around the dots",
+    ("compute", "decode"): "batch more sequences per chip; MXU is idle "
+                           "at batch-per-chip this small",
+    ("memory", "decode"): "KV/weight streaming dominates: quantize KV "
+                          "cache, shard KV further, or grow batch",
+    ("memory", "train"): "recompute less / raise arithmetic intensity "
+                         "with larger per-chip batch",
+    ("memory", "prefill"): "activation traffic: fuse norms into matmuls",
+    ("collective", "train"): "bf16 collectives + sharding constraints to "
+                             "kill resharding; overlap via async "
+                             "collectives; sequence-parallel norms",
+    ("collective", "prefill"): "same as train fwd: bf16 + constraints",
+    ("collective", "decode"): "replicate small weights (collective "
+                              "latency-bound at 1-token steps)",
+}
+
+
+def load(out_dir: str, mesh: str) -> list[dict]:
+    rows = []
+    for arch, shape, skipped in configs.cells(include_skipped=True):
+        path = pathlib.Path(out_dir) / f"{arch}_{shape}_{mesh}.json"
+        if skipped:
+            rows.append({"arch": arch, "shape": shape, "skipped": True})
+            continue
+        if not path.exists():
+            rows.append({"arch": arch, "shape": shape, "missing": True})
+            continue
+        rows.append(json.loads(path.read_text()))
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("skipped"):
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | skipped "
+                f"(full attention; DESIGN.md §Arch-applicability) | | |")
+    if r.get("missing") or r.get("status") != "ok":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | "
+                f"{r.get('status', 'missing')} | | |")
+    rf = r["roofline"]
+    kind = configs.SHAPES[r["shape"]].kind
+    hint = HINTS.get((rf["bottleneck"], kind), "")
+    # recompute MODEL_FLOPS/HLO fraction from the config (records may
+    # predate the active-param fix); stored flops_per_chip is unchanged
+    from repro.roofline import analysis
+    cfg = configs.get_config(r["arch"])
+    mf = analysis.model_flops(cfg, configs.SHAPES[r["shape"]])
+    frac = mf / r["n_devices"] / max(rf["flops_per_chip"], 1e-9)
+    note = hint
+    if not r["plan"].get("fits", True):
+        note = "DOES NOT FIT this mesh (planner); " + hint
+    return ("| {arch} | {shape} | {c:.3f} | {m:.3f} | {x:.3f} | "
+            "**{b}** | {f:.2f} | {hint} |").format(
+        arch=r["arch"], shape=r["shape"], c=rf["compute_s"],
+        m=rf["memory_s"], x=rf["collective_s"], b=rf["bottleneck"],
+        f=frac, hint=note)
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    mesh = "single"
+    rows = load(out_dir, mesh)
+    print("| arch | shape | compute s | memory s | collective s | "
+          "bottleneck | MODEL/HLO flops | next lever |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(fmt_row(r))
+
+    ok = [r for r in rows if r.get("status") == "ok"]
+    worst = sorted(
+        (r for r in ok if r["roofline"]["useful_flops_frac"] > 0),
+        key=lambda r: min(1.0, r["roofline"]["useful_flops_frac"])
+        / max(1e-9, 1.0))
+    coll_bound = [r for r in ok
+                  if r["roofline"]["bottleneck"] == "collective"]
+    print(f"\nok={len(ok)}  collective-bound={len(coll_bound)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Complexity models (Eqs 6-13) + Alg 1 dataflow optimizer."""
+
+import numpy as np
+import pytest
+
+from repro.core import dataflow as df
+from repro.core import optimizer as opt
+
+P_PAR, N_PAR, R, K, ALPHA = 9, 64, 10, 8, 4.0
+
+
+def test_vgg16_layer_table():
+    names = [l.name for l in df.VGG16_LAYERS]
+    assert names[0] == "conv1_1" and names[-1] == "conv5_3"
+    assert len(df.VGG16_LAYERS) == 13
+    l = df.VGG16_LAYERS[1]
+    assert (l.c_in, l.c_out, l.h_in) == (64, 64, 224)
+    # tile = K - k + 1 = 6, canvas 228 -> 38x38 tiles
+    assert l.tiles(8) == 38 * 38
+
+
+def test_flow1_bram_explodes_on_early_layers():
+    """Fig 2: streaming input tiles (Flow #1) needs huge #BRAMs early."""
+    conv1_2 = df.VGG16_LAYERS[1]
+    conv5_1 = df.VGG16_LAYERS[10]
+    b_early = df.bram_flow1(conv1_2, K, ALPHA, P_PAR, N_PAR, R)
+    b_late = df.bram_flow1(conv5_1, K, ALPHA, P_PAR, N_PAR, R)
+    assert b_early > 2160, "early layers must exceed the U200 BRAM budget"
+    assert b_late < 2160
+    assert b_early > 4 * b_late
+
+
+def test_flow2_fewer_brams_more_traffic():
+    """Fig 2: streaming kernels = fewer BRAMs, higher communication.
+    (On late small-image layers all operands fit one BRAM depth and the
+    flows tie in storage; the separation binds on the early layers.)"""
+    for layer in df.VGG16_OPT_LAYERS[:3]:
+        b1 = df.bram_flow1(layer, K, ALPHA, P_PAR, N_PAR, R)
+        b2 = df.bram_flow2(layer, K, ALPHA, P_PAR, N_PAR, R)
+        t1 = df.transfers_flow1(layer, K, ALPHA, N_PAR)
+        t2 = df.transfers_flow2(layer, K, ALPHA, P_PAR)
+        assert b2 <= b1
+        assert t2 > t1
+    conv1_2 = df.VGG16_OPT_LAYERS[0]
+    assert df.bram_flow2(conv1_2, K, ALPHA, P_PAR, N_PAR, R) \
+        < df.bram_flow1(conv1_2, K, ALPHA, P_PAR, N_PAR, R)
+
+
+def test_flow3_never_advantageous():
+    """Fig 2: streaming partial sums 'brings no advantages at all'."""
+    for layer in df.VGG16_OPT_LAYERS:
+        t3 = df.transfers_flow3(layer, K, ALPHA)
+        t1 = df.transfers_flow1(layer, K, ALPHA, N_PAR)
+        t2 = df.transfers_flow2(layer, K, ALPHA, P_PAR)
+        assert t3 > min(t1, t2)
+
+
+def test_flexible_interpolates_pure_flows():
+    """Eq 13 == Eq 9 at (Ns=N', Ps=T); == Eq 10 at (Ns=N, Ps=P')."""
+    layer = df.VGG16_LAYERS[4]
+    t = layer.tiles(K)
+    f1 = df.transfers_flow1(layer, K, ALPHA, N_PAR)
+    flex1 = df.transfers_flexible(layer, K, ALPHA, ns=N_PAR, ps=t)
+    # flexible with all tiles resident ~ flow1 modulo the in-tile padding
+    # (flow1 counts h*w raw pixels; flexible re-load factor is identical)
+    assert abs(f1 - flex1) / f1 < 0.05
+    f2 = df.transfers_flow2(layer, K, ALPHA, P_PAR)
+    flex2 = df.transfers_flexible(layer, K, ALPHA, ns=layer.c_out, ps=P_PAR)
+    assert abs(f2 - flex2) / f2 < 0.05
+
+
+def test_latency_budget_partitions_tau():
+    taus = df.layer_latency_budget(df.VGG16_OPT_LAYERS, K, ALPHA, 20e-3)
+    assert len(taus) == 12
+    np.testing.assert_allclose(sum(taus.values()), 20e-3, rtol=1e-9)
+    # conv3_2/3 and conv4_2/3 carry the largest spectral compute share
+    top = max(taus, key=taus.get)
+    assert top in {"conv3_2", "conv3_3", "conv4_2", "conv4_3"}
+    assert taus["conv1_2"] > taus["conv5_1"]
+
+
+class TestAlg1:
+    @pytest.fixture(scope="class")
+    def plan(self):
+        return opt.optimize(arch_candidates=[(9, 64)])
+
+    def test_all_layers_planned(self, plan):
+        assert [l.layer for l in plan.layers] == \
+            [l.name for l in df.VGG16_OPT_LAYERS]
+        assert plan.p_par == 9 and plan.n_par == 64
+
+    def test_bram_cap_respected(self, plan):
+        assert all(l.n_bram < 2160 for l in plan.layers)
+
+    def test_beats_pure_flows(self, plan):
+        """Flow opt transfers fewer words than the best feasible pure flow
+        in (almost) every layer — the paper's 42% reduction claim."""
+        pure = opt.pure_flow_transfers(df.VGG16_OPT_LAYERS, K, ALPHA,
+                                       plan.p_par, plan.n_par)
+        total_opt = plan.total_transfers_words
+        total_flow2 = sum(v["flow2"] for v in pure.values())
+        assert total_opt < total_flow2
+        reduction = 1 - total_opt / total_flow2
+        # paper reports 42% vs the baseline flow; require a substantial cut
+        assert reduction > 0.25, f"only {reduction:.1%} reduction"
+
+    def test_streaming_params_monotone(self, plan):
+        """Later (small-image) layers afford more resident kernels Ns."""
+        ns = {l.layer: l.ns for l in plan.layers}
+        assert ns["conv5_1"] >= ns["conv1_2"]
+
+    def test_bandwidth_under_ddr(self, plan):
+        """Paper: Flow opt keeps VGG16 under a single DDR's ~12-19 GB/s."""
+        assert plan.bw_max_gbps < 19.0
+
+
+def test_optimize_searches_arch_space():
+    plan = opt.optimize(arch_candidates=[(4, 32), (9, 64), (16, 64)])
+    assert (plan.p_par, plan.n_par) in {(4, 32), (9, 64), (16, 64)}
+
+
+def test_infeasible_cap_raises():
+    with pytest.raises(ValueError):
+        opt.optimize(arch_candidates=[(9, 64)], n_bram_cap=10)

@@ -1,0 +1,209 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduler as sch
+from repro.core import sparse as sp
+from repro.core import spectral as spec
+from repro.kernels import fft8, ops, ref
+from repro.kernels import sparse_hadamard as shk
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.spectral_hadamard import FLOWS, spectral_hadamard
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+class TestSpectralHadamard:
+    @pytest.mark.parametrize("flow", FLOWS)
+    @pytest.mark.parametrize(
+        "f,n,m,p,bn,bm,bp",
+        [
+            (4, 48, 24, 40, 16, 8, 16),      # non-multiples of block
+            (2, 128, 128, 128, 128, 128, 128),
+            (1, 7, 3, 5, 8, 8, 8),           # blocks larger than dims
+            (64, 64, 64, 9, 64, 64, 8),      # paper geometry K^2=64, P'=9
+        ],
+    )
+    def test_vs_ref(self, flow, f, n, m, p, bn, bm, bp):
+        rng = np.random.default_rng(f * 1000 + n)
+        wr, wi = _rand(rng, (f, n, m)), _rand(rng, (f, n, m))
+        xr, xi = _rand(rng, (f, m, p)), _rand(rng, (f, m, p))
+        yr, yi = spectral_hadamard(wr, wi, xr, xi, flow=flow,
+                                   block_n=bn, block_m=bm, block_p=bp)
+        rr, ri = ref.spectral_hadamard_ref(wr, wi, xr, xi)
+        np.testing.assert_allclose(np.asarray(yr), np.asarray(rr),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(yi), np.asarray(ri),
+                                   atol=1e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(0)
+        args = [_rand(rng, (2, 16, 8), dtype) for _ in range(2)] + \
+               [_rand(rng, (2, 8, 16), dtype) for _ in range(2)]
+        yr, yi = spectral_hadamard(*args, block_n=8, block_m=8, block_p=8)
+        rr, ri = ref.spectral_hadamard_ref(*[a.astype(jnp.float32)
+                                             for a in args])
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(yr), np.asarray(rr), atol=tol,
+                                   rtol=tol)
+
+    @settings(max_examples=15, deadline=None)
+    @given(f=st.integers(1, 8), n=st.integers(1, 40), m=st.integers(1, 40),
+           p=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+    def test_property_any_shape(self, f, n, m, p, seed):
+        rng = np.random.default_rng(seed)
+        wr, wi = _rand(rng, (f, n, m)), _rand(rng, (f, n, m))
+        xr, xi = _rand(rng, (f, m, p)), _rand(rng, (f, m, p))
+        yr, yi = spectral_hadamard(wr, wi, xr, xi, block_n=16, block_m=16,
+                                   block_p=16)
+        rr, ri = ref.spectral_hadamard_ref(wr, wi, xr, xi)
+        np.testing.assert_allclose(np.asarray(yr), np.asarray(rr),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_flows_agree(self):
+        """All three dataflow variants compute the same function."""
+        rng = np.random.default_rng(5)
+        args = ([_rand(rng, (3, 32, 16)) for _ in range(2)]
+                + [_rand(rng, (3, 16, 24)) for _ in range(2)])
+        outs = [spectral_hadamard(*args, flow=fl, block_n=16, block_m=8,
+                                  block_p=8) for fl in FLOWS]
+        for yr, yi in outs[1:]:
+            np.testing.assert_allclose(np.asarray(yr), np.asarray(outs[0][0]),
+                                       atol=1e-4)
+
+
+class TestFFT8:
+    @pytest.mark.parametrize("fft_size,tile,batch", [(8, 6, 37), (8, 8, 64),
+                                                     (16, 14, 5)])
+    def test_fft_vs_ref(self, fft_size, tile, batch):
+        rng = np.random.default_rng(1)
+        x = _rand(rng, (batch, tile, tile))
+        yr, yi = fft8.fft2_tiles(x, fft_size=fft_size, block_b=16)
+        rr, ri = ref.fft2_tiles_ref(x, fft_size)
+        np.testing.assert_allclose(np.asarray(yr), np.asarray(rr), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(yi), np.asarray(ri), atol=1e-3)
+
+    def test_roundtrip(self):
+        rng = np.random.default_rng(2)
+        x = _rand(rng, (12, 8, 8))
+        yr, yi = fft8.fft2_tiles(x, fft_size=8, block_b=8)
+        back = fft8.ifft2_tiles(yr, yi, block_b=8)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)
+
+
+class TestScheduledSparse:
+    @pytest.mark.parametrize("alpha,r", [(4, 4), (4, 10), (8, 6)])
+    def test_group_vs_masked_dense(self, alpha, r):
+        rng = np.random.default_rng(alpha * 10 + r)
+        x = _rand(rng, (1, 4, 12, 12))
+        w = _rand(rng, (16, 4, 3, 3))
+        geo = spec.make_geometry(12, 12, 3, 8)
+        sk = sp.prune_magnitude(spec.spectral_kernel(w, 8), float(alpha))
+        xf = spec.fft_tiles(spec.extract_tiles(x, geo), geo)
+        y, stats = ops.scheduled_sparse_conv_group(
+            np.asarray(sk.values), np.asarray(sk.indices), xf, r=r)
+        y_ref = jnp.einsum("bmtuv,nmuv->bntuv", xf, sk.values)[0]
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-4)
+        assert 0 < stats["utilization"] <= 1.0
+
+    def test_stack_tables_padding_inert(self):
+        """Channels with fewer cycles are padded; padding must be inert."""
+        rng = np.random.default_rng(3)
+        k2, n_pe = 16, 8
+        tables = []
+        for m in range(2):
+            nnz = 4 if m == 0 else 2   # different cycle counts
+            idx = np.stack([np.sort(rng.choice(k2, nnz, replace=False))
+                            for _ in range(n_pe)])
+            vals = np.zeros((n_pe, k2), np.complex64)
+            for i in range(n_pe):
+                vals[i, idx[i]] = rng.standard_normal(nnz)
+            s = sch.schedule_exact_cover(idx, k2, r=4)
+            tables.append(sch.build_tables(s, vals, idx))
+        packed = shk.stack_tables(tables)
+        assert packed[0].shape[0] == 2
+        assert packed[0].shape[1] == max(t.n_cycles for t in tables)
+        # valid rows beyond a channel's cycle count are all zero
+        t_short = min(t.n_cycles for t in tables)
+        short_ch = int(np.argmin([t.n_cycles for t in tables]))
+        assert float(packed[2][short_ch, t_short:].sum()) == 0.0
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "b,hq,hkv,s,d,bq,bk",
+        [
+            (2, 4, 2, 64, 16, 32, 32),
+            (1, 8, 1, 100, 32, 32, 32),   # MQA, padded seq
+            (1, 2, 2, 128, 64, 128, 64),
+        ],
+    )
+    def test_causal_vs_ref(self, b, hq, hkv, s, d, bq, bk):
+        rng = np.random.default_rng(s)
+        q = _rand(rng, (b, hq, s, d))
+        k = _rand(rng, (b, hkv, s, d))
+        v = _rand(rng, (b, hkv, s, d))
+        o = flash_attention(q, k, v, block_q=bq, block_k=bk)
+        rep = hq // hkv
+        o_ref = ref.attention_ref(q, jnp.repeat(k, rep, 1),
+                                  jnp.repeat(v, rep, 1))
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=2e-4, rtol=2e-4)
+
+    @pytest.mark.parametrize("window", [8, 32])
+    def test_sliding_window(self, window):
+        rng = np.random.default_rng(window)
+        q = _rand(rng, (1, 2, 96, 16))
+        k = _rand(rng, (1, 2, 96, 16))
+        v = _rand(rng, (1, 2, 96, 16))
+        o = flash_attention(q, k, v, window=window, block_q=32, block_k=32)
+        o_ref = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=2e-4, rtol=2e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(s=st.integers(4, 80), d=st.sampled_from([8, 16]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property(self, s, d, seed):
+        rng = np.random.default_rng(seed)
+        q = _rand(rng, (1, 2, s, d))
+        k = _rand(rng, (1, 1, s, d))
+        v = _rand(rng, (1, 1, s, d))
+        o = flash_attention(q, k, v, block_q=16, block_k=16)
+        o_ref = ref.attention_ref(q, jnp.repeat(k, 2, 1),
+                                  jnp.repeat(v, 2, 1))
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=5e-4, rtol=5e-4)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(0)
+        q = _rand(rng, (1, 2, 64, 32), jnp.bfloat16)
+        k = _rand(rng, (1, 2, 64, 32), jnp.bfloat16)
+        v = _rand(rng, (1, 2, 64, 32), jnp.bfloat16)
+        o = flash_attention(q, k, v, block_q=32, block_k=32)
+        o_ref = ref.attention_ref(q.astype(jnp.float32),
+                                  k.astype(jnp.float32),
+                                  v.astype(jnp.float32))
+        assert o.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(o, dtype=np.float32),
+                                   np.asarray(o_ref), atol=5e-2)
+
+
+def test_pallas_conv_matches_spatial_end_to_end():
+    """fft8 -> hadamard -> ifft8 -> OaA == direct spatial conv."""
+    rng = np.random.default_rng(11)
+    x = _rand(rng, (2, 3, 13, 13))
+    w = _rand(rng, (5, 3, 3, 3))
+    geo = spec.make_geometry(13, 13, 3, 8)
+    y = ops.spectral_conv2d_pallas(x, spec.spectral_kernel(w, 8), geo)
+    y_ref = spec.spatial_conv2d(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-4,
+                               rtol=5e-4)

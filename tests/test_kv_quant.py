@@ -1,0 +1,63 @@
+"""Int8 KV-cache quantization: numerics + memory accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api, attention as attn
+
+
+def _decode_chain(cfg, params, toks, steps=10):
+    cache = api.init_cache(cfg, toks.shape[0], 16)
+    outs = []
+    for t in range(steps):
+        lg, cache = api.decode(params, cfg, toks[:, t:t + 1], cache,
+                               jnp.int32(t))
+        outs.append(lg)
+    return jnp.concatenate(outs, 1), cache
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "h2o-danube-1.8b"])
+def test_quant_decode_close_to_fp(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab)
+    fp, _ = _decode_chain(cfg, params, toks)
+    q, cache = _decode_chain(cfg.replace(kv_quant=True), params, toks)
+    p_fp = jax.nn.softmax(fp.astype(jnp.float32), -1)
+    p_q = jax.nn.softmax(q.astype(jnp.float32), -1)
+    assert float(jnp.abs(p_fp - p_q).max()) < 0.02
+    assert float((fp.argmax(-1) == q.argmax(-1)).mean()) > 0.9
+
+
+def test_quant_cache_halves_bytes():
+    cfg = configs.get_smoke_config("qwen3-8b")
+    fp = api.init_cache(cfg, 2, 64)
+    qt = api.init_cache(cfg.replace(kv_quant=True), 2, 64)
+    b_fp = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(fp))
+    b_q = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(qt))
+    assert b_q < 0.7 * b_fp
+
+
+def test_quantize_rows_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 2, 8, 32)) * 5, jnp.float32)
+    q, s = attn._quantize_rows(x)
+    back = q.astype(jnp.float32) * s
+    err = jnp.abs(back - x)
+    assert float((err <= s / 2 + 1e-6).all())
+
+
+def test_quant_ring_buffer_swa():
+    """Quantized SWA ring cache stays consistent past the window."""
+    cfg = configs.get_smoke_config("h2o-danube-1.8b").replace(
+        window=4, kv_quant=True)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0, cfg.vocab)
+    full = api.forward(params, cfg, {"tokens": toks})
+    q, _ = _decode_chain(cfg, params, toks, steps=12)
+    p_full = jax.nn.softmax(full[0, -1].astype(jnp.float32))
+    p_q = jax.nn.softmax(q[0, -1].astype(jnp.float32))
+    assert float(jnp.abs(p_full - p_q).max()) < 0.02

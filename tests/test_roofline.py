@@ -1,0 +1,135 @@
+"""Roofline machinery: trip-count-aware HLO parsing vs analytic counts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import analysis, hlo_parse
+
+
+def test_scan_flops_counted_with_trip_count():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((9, 64, 64), jnp.float32)
+    comp = jax.jit(f).lower(x, ws).compile()
+    a = hlo_parse.parse(comp.as_text(), 1)
+    expected = 2 * 9 * 64 ** 3
+    np.testing.assert_allclose(a.dot_flops, expected, rtol=1e-6)
+    # raw cost_analysis undercounts by the trip count — the bug this
+    # module exists to fix
+    raw = comp.cost_analysis()["flops"]
+    assert raw < expected / 4
+
+
+def test_nested_scan_flops():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 32, 32), jnp.float32)
+    comp = jax.jit(f).lower(x, ws).compile()
+    a = hlo_parse.parse(comp.as_text(), 1)
+    np.testing.assert_allclose(a.dot_flops, 2 * 15 * 32 ** 3, rtol=1e-6)
+
+
+def test_unrolled_matches_scanned():
+    """Property: dot FLOPs parsed from the scanned program == FLOPs
+    parsed from the equivalent unrolled program."""
+    ws_v = jnp.stack([jnp.eye(16)] * 4)
+
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, None
+        return jax.lax.scan(body, x, ws)[0]
+
+    def unrolled(x, ws):
+        for i in range(4):
+            x = x @ ws[i]
+        return x
+
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 16, 16), jnp.float32)
+    a1 = hlo_parse.parse(jax.jit(scanned).lower(x, ws).compile().as_text(),
+                         1)
+    a2 = hlo_parse.parse(jax.jit(unrolled).lower(x, ws).compile().as_text(),
+                         1)
+    np.testing.assert_allclose(a1.dot_flops, a2.dot_flops, rtol=1e-6)
+
+
+def test_collective_parse_synthetic():
+    hlo = """
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256]{1,0} parameter(0)
+  %all-reduce.1 = f32[128,256]{1,0} all-reduce(%a), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %all-gather.2 = f32[128,256]{1,0} all-gather(%all-reduce.1), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+}
+"""
+    a = hlo_parse.parse(hlo, 256)
+    assert a.collectives.counts == {"all-reduce": 1, "all-gather": 1}
+    bytes_ = 128 * 256 * 4
+    np.testing.assert_allclose(
+        a.collectives.operand_bytes["all-reduce"], bytes_)
+    np.testing.assert_allclose(
+        a.collectives.operand_bytes["all-gather"], bytes_ / 16)
+    wire = 2 * bytes_ * 15 / 16 + bytes_ * 15 / 16
+    np.testing.assert_allclose(a.collectives.wire_bytes_per_chip, wire)
+
+
+def test_collective_inside_loop_multiplied():
+    hlo = """
+%body (t: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %t = (s32[], f32[64]{0}) parameter(0)
+  %g = f32[64]{0} get-tuple-element(%t), index=1
+  %all-reduce.9 = f32[64]{0} all-reduce(%g), replica_groups={{0,1}}, to_apply=%add
+  ROOT %tup = (s32[], f32[64]{0}) tuple(%g, %all-reduce.9)
+}
+%cond (t: (s32[], f32[64])) -> pred[] {
+  %t = (s32[], f32[64]{0}) parameter(0)
+  ROOT %lt = pred[] compare(%t, %t), direction=LT
+}
+ENTRY %main (x: f32[64]) -> f32[64] {
+  %x = f32[64]{0} parameter(0)
+  %tup = (s32[], f32[64]{0}) tuple(%x, %x)
+  %w = (s32[], f32[64]{0}) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %r = f32[64]{0} get-tuple-element(%w), index=1
+}
+"""
+    a = hlo_parse.parse(hlo, 2)
+    assert a.collectives.counts["all-reduce"] == 12
+    np.testing.assert_allclose(
+        a.collectives.operand_bytes["all-reduce"], 12 * 64 * 4)
+
+
+def test_roofline_terms_and_bottleneck():
+    coll = analysis.CollectiveStats({}, {}, wire_bytes_per_chip=1e9)
+    cost = {"flops": 1e12, "bytes accessed": 1e9}
+    r = analysis.roofline_terms(cost, coll, 256, model_flops_total=2.56e14)
+    np.testing.assert_allclose(r.compute_s, 1e12 / analysis.PEAK_FLOPS)
+    np.testing.assert_allclose(r.memory_s, 1e9 / analysis.HBM_BW)
+    np.testing.assert_allclose(
+        r.collective_s, 1e9 / (analysis.ICI_LINKS * analysis.ICI_BW))
+    assert r.bottleneck == "collective"
+    np.testing.assert_allclose(r.useful_flops_frac, 1.0)
+
+
+def test_model_flops_definitions():
+    from repro import configs
+    cfg = configs.get_config("kimi-k2-1t-a32b")
+    train = analysis.model_flops(cfg, configs.SHAPES["train_4k"])
+    # 6 * N_active * D
+    expected = 6.0 * cfg.active_param_count() * 4096 * 256
+    np.testing.assert_allclose(train, expected)
+    dec = analysis.model_flops(cfg, configs.SHAPES["decode_32k"])
+    np.testing.assert_allclose(dec, 2.0 * cfg.active_param_count() * 128)

@@ -1,0 +1,126 @@
+"""Spectral convolution == spatial oracle; sparse machinery invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparse as sp
+from repro.core import spectral as spec
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.mark.parametrize(
+    "h,w,k,K,cin,cout",
+    [
+        (12, 12, 3, 8, 3, 5),
+        (14, 14, 3, 8, 4, 4),     # VGG conv5 spatial size
+        (11, 13, 3, 8, 2, 3),     # non-divisible, rectangular
+        (16, 16, 5, 8, 2, 2),     # k=5
+        (24, 24, 3, 16, 2, 2),    # K=16
+        (6, 6, 3, 8, 1, 1),       # single tile
+    ],
+)
+def test_spectral_equals_spatial(h, w, k, K, cin, cout):
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.standard_normal((2, cin, h, w)), jnp.float32)
+    wk = jnp.asarray(rng.standard_normal((cout, cin, k, k)), jnp.float32)
+    y_ref = spec.spatial_conv2d(x, wk)
+    y = spec.spectral_conv2d(x, wk, fft_size=K)
+    assert y.shape == y_ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(7, 30),
+    w=st.integers(7, 30),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spectral_equals_spatial_property(h, w, cin, cout, seed):
+    """Property: for any geometry, FFT-tiled OaA conv == direct conv."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, cin, h, w)), jnp.float32)
+    wk = jnp.asarray(rng.standard_normal((cout, cin, 3, 3)), jnp.float32)
+    y_ref = spec.spatial_conv2d(x, wk)
+    y = spec.spectral_conv2d(x, wk, fft_size=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_geometry_invariants():
+    geo = spec.make_geometry(224, 224, 3, 8, 1)
+    assert geo.tile == 6
+    assert geo.n_tiles_h == 38 and geo.n_tiles_w == 38
+    assert geo.h_pad >= geo.h_in + geo.pad
+
+
+def test_spectral_kernel_is_fft_of_flipped():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((2, 3, 3, 3)), jnp.float32)
+    wf = spec.spectral_kernel(w, 8)
+    assert wf.shape == (2, 3, 8, 8)
+    # DC bin equals the kernel sum (flip does not change the sum).
+    np.testing.assert_allclose(np.asarray(wf[..., 0, 0].real),
+                               np.asarray(w.sum((-1, -2))), rtol=1e-5)
+
+
+class TestSparse:
+    def _wf(self, n=8, m=4, K=8, seed=0):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.standard_normal((n, m, 3, 3)), jnp.float32)
+        return spec.spectral_kernel(w, K)
+
+    @pytest.mark.parametrize("alpha", [2.0, 4.0, 8.0])
+    def test_uniform_nnz(self, alpha):
+        sk = sp.prune_magnitude(self._wf(), alpha)
+        nnz = int(round(64 / alpha))
+        assert sk.nnz == nnz
+        counts = np.asarray(sk.mask).reshape(8, 4, -1).sum(-1)
+        assert (counts == nnz).all(), "compression must be uniform per kernel"
+
+    def test_magnitude_keeps_largest(self):
+        wf = self._wf()
+        sk = sp.prune_magnitude(wf, 4.0)
+        mag = np.abs(np.asarray(wf))
+        kept_min = np.where(np.asarray(sk.mask), mag, np.inf).min((-1, -2))
+        dropped_max = np.where(~np.asarray(sk.mask), mag, 0).max((-1, -2))
+        assert (kept_min >= dropped_max - 1e-6).all()
+
+    def test_indices_match_mask(self):
+        sk = sp.prune_random(self._wf(), 4.0, seed=3)
+        mask = np.asarray(sk.mask).reshape(8, 4, 64)
+        for n in range(8):
+            for m in range(4):
+                np.testing.assert_array_equal(
+                    np.sort(np.asarray(sk.indices[n, m])),
+                    np.nonzero(mask[n, m])[0])
+
+    def test_sparse_hadamard_reference(self):
+        rng = np.random.default_rng(1)
+        wf = self._wf()
+        sk = sp.prune_magnitude(wf, 4.0)
+        x = jnp.asarray(rng.standard_normal((2, 4, 3, 8, 8))
+                        + 1j * rng.standard_normal((2, 4, 3, 8, 8)))
+        y = sp.sparse_hadamard_reference(x, sk)
+        ref = jnp.einsum("bmtuv,nmuv->bntuv", x, wf * sk.mask)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5)
+
+
+def test_sparse_spectral_conv_end_to_end():
+    """Pruned spectral conv == spectral conv with the masked kernel."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((1, 4, 12, 12)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((6, 4, 3, 3)), jnp.float32)
+    geo = spec.make_geometry(12, 12, 3, 8)
+    wf = spec.spectral_kernel(w, 8)
+    sk = sp.prune_magnitude(wf, 4.0)
+    y = spec.spectral_conv2d_pretransformed(x, sk.values, geo)
+    y_ref = spec.spectral_conv2d_pretransformed(x, wf * sk.mask, geo)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+    assert y.shape == (1, 6, 12, 12)

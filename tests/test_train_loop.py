@@ -1,0 +1,52 @@
+"""Training driver: convergence, checkpoint/restart exactness, failure."""
+
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.launch.train import train
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def test_loss_decreases(tmp_path):
+    out = train("smollm-135m", steps=18, batch=4, seq_len=32,
+                ckpt_dir=str(tmp_path), ckpt_every=50, lr=1e-3)
+    first = np.mean(out["losses"][:4])
+    last = np.mean(out["losses"][-4:])
+    assert last < first, (first, last)
+
+
+def test_restart_is_bit_exact(tmp_path):
+    """Run 12 steps straight vs 6 + restart + 6: identical final loss."""
+    a = train("smollm-135m", steps=12, batch=2, seq_len=16,
+              ckpt_dir=str(tmp_path / "a"), ckpt_every=100)
+    b1 = train("smollm-135m", steps=6, batch=2, seq_len=16,
+               ckpt_dir=str(tmp_path / "b"), ckpt_every=6)
+    assert b1["final_step"] == 6
+    b2 = train("smollm-135m", steps=12, batch=2, seq_len=16,
+               ckpt_dir=str(tmp_path / "b"), ckpt_every=6)
+    np.testing.assert_allclose(a["losses"][-1], b2["losses"][-1],
+                               rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_simulated_failure_and_recovery(tmp_path):
+    """Kill the trainer mid-run (exit 42), restart, reach the target —
+    the fleet-scale crash/restart path end to end."""
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "smollm-135m", "--steps", "10", "--batch", "2",
+           "--seq-len", "16", "--ckpt-dir", str(tmp_path),
+           "--ckpt-every", "4", "--simulate-failure", "5"]
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"}
+    r1 = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    assert r1.returncode == 42, r1.stderr[-500:]
+    cmd_resume = cmd[:cmd.index("--simulate-failure")]
+    r2 = subprocess.run(cmd_resume, env=env, capture_output=True,
+                        text=True)
+    assert r2.returncode == 0, r2.stderr[-500:]
+    assert "resumed from step 4" in r2.stdout
+    assert "done: step 10" in r2.stdout
