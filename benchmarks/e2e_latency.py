@@ -1,0 +1,221 @@
+"""End-to-end spectral-VGG16 inference latency + HBM-traffic benchmark.
+
+Compares the three conv-stack backends of ``models.cnn.forward_spectral``
+— pure-jnp einsum oracle, staged Pallas (3 pallas_calls/layer with
+spectral intermediates round-tripping through HBM), and the fused single
+pallas_call — and emits ``BENCH_e2e.json`` with:
+
+  * wall-clock latency at batch 1 and batch 8 (smoke VGG16 by default;
+    the Pallas kernels run interpret-mode off-TPU, so off-TPU wall time
+    is a correctness-path trend signal, not a perf claim — the analytic
+    HBM/roofline numbers below are the hardware-portable signal),
+  * per-layer kernel-launch counts (fused: 1, staged: 3) and analytic
+    HBM bytes of the tuned fused kernel vs the ``output_stationary``
+    prediction of ``dataflow.tpu_flow_cost`` for the staged Hadamard —
+    fused must be <= (no spectral intermediates in HBM),
+  * numerical parity of the fused kernel against the *spatial* oracle on
+    every full-resolution VGG16 layer at batch 1 (alpha = 1, unpruned,
+    so spectral == spatial up to fp error).
+
+  PYTHONPATH=src python -m benchmarks.e2e_latency [--full] [--json OUT]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+STAGED_LAUNCHES_PER_LAYER = 3     # fft8 + spectral_hadamard + ifft8
+FUSED_LAUNCHES_PER_LAYER = 1
+
+
+def _time(fn, iters: int = 3) -> float:
+    out = fn()
+    jax.block_until_ready(out)            # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def latency_table(cfg, batches=(1, 8), backends=("einsum", "pallas_staged",
+                                                 "pallas_fused"),
+                  iters: int = 3) -> dict:
+    from repro.core import autotune
+    from repro.models import cnn
+
+    key = jax.random.PRNGKey(0)
+    params = cnn.init(key, cfg)
+    sks = cnn.transform_kernels(params, cfg)
+    out: dict = {}
+    for batch in batches:
+        tuning = autotune.autotune_network(cfg.layers, cfg.fft_size,
+                                           cfg.alpha, batch=batch)
+        x = jax.random.normal(key, (batch, 3, cfg.image_size,
+                                    cfg.image_size), jnp.float32)
+        row = {}
+        for backend in backends:
+            row[f"{backend}_ms"] = 1e3 * _time(
+                lambda b=backend: cnn.forward_spectral(
+                    params, sks, cfg, x, backend=b, tuning=tuning),
+                iters=iters)
+        out[f"batch{batch}"] = row
+    return out
+
+
+def per_layer_traffic(layers, fft_size: int, alpha: float,
+                      batch: int = 1) -> list[dict]:
+    """Analytic per-layer HBM bytes: tuned fused kernel vs the staged
+    pipeline's output-stationary Hadamard prediction (plus the staged
+    FFT/IFFT stages' own HBM round-trips)."""
+    from repro.core import autotune
+    from repro.core import dataflow as df
+
+    def best_staged_os(layer):
+        """Give the staged baseline its own best block sizes under the
+        SAME selection policy as the fused tuner (not a straw man)."""
+        tn = autotune.autotune_layer(
+            layer, fft_size, alpha, batch=batch, hw_safe=False,
+            flows=("output_stationary",), cost_fn=df.tpu_flow_cost)
+        return df.tpu_flow_cost(layer, fft_size, alpha, tn.block_n,
+                                tn.block_p, tn.block_m, tn.flow,
+                                batch=batch)
+
+    tuning = autotune.autotune_network(layers, fft_size, alpha, batch=batch)
+    rows = []
+    for layer in layers:
+        tn = tuning[layer.name]
+        fused = df.tpu_fused_flow_cost(
+            layer, fft_size, alpha, tn.block_n, tn.block_p, tn.block_m,
+            tn.flow, batch=batch)
+        staged_os = best_staged_os(layer)
+        # staged pipeline additionally round-trips tiles through the
+        # separate FFT/IFFT kernels (real in, 2 f32 planes out and back)
+        k2 = fft_size * fft_size
+        t = layer.tiles(fft_size) * batch
+        tile2 = layer.tile_size(fft_size) ** 2
+        fft_io = (layer.c_in * t * (tile2 + 2 * k2)
+                  + layer.c_out * t * (2 * k2 + k2)) * 4
+        rows.append({
+            "layer": layer.name,
+            "launches_fused": FUSED_LAUNCHES_PER_LAYER,
+            "launches_staged": STAGED_LAUNCHES_PER_LAYER,
+            "flow": tn.flow,
+            "block_n": tn.block_n, "block_m": tn.block_m,
+            "block_p": tn.block_p,
+            "fused_hbm_bytes": fused["hbm_bytes"],
+            "staged_os_hadamard_hbm_bytes": staged_os["hbm_bytes"],
+            "staged_fft_io_hbm_bytes": float(fft_io),
+            "fused_le_staged_os": bool(
+                fused["hbm_bytes"] <= staged_os["hbm_bytes"]),
+            "fused_predicted_us": 1e6 * max(fused["hbm_s"],
+                                            fused["compute_s"]),
+            "staged_hadamard_predicted_us": 1e6 * max(staged_os["hbm_s"],
+                                                      staged_os["compute_s"]),
+        })
+    return rows
+
+
+def fused_parity_vs_spatial(layers, fft_size: int, batch: int = 1,
+                            seed: int = 0) -> dict:
+    """Per-layer fused-vs-spatial max abs error at full resolution,
+    unpruned (alpha = 1) so the spectral path is numerically equivalent."""
+    from repro.core import autotune
+    from repro.core import spectral as spec
+    from repro.kernels.fused_spectral_conv import fused_spectral_conv2d
+
+    rng = np.random.default_rng(seed)
+    tuning = autotune.autotune_network(layers, fft_size, 1.0, batch=batch)
+    per_layer = {}
+    worst = 0.0
+    for layer in layers:
+        x = jnp.asarray(rng.standard_normal(
+            (batch, layer.c_in, layer.h_in, layer.w_in)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal(
+            (layer.c_out, layer.c_in, layer.ksize, layer.ksize))
+            * (2.0 / (layer.c_in * layer.ksize ** 2)) ** 0.5, jnp.float32)
+        geo = spec.make_geometry(layer.h_in, layer.w_in, layer.ksize,
+                                 fft_size, layer.pad)
+        tn = tuning[layer.name]
+        y = fused_spectral_conv2d(x, spec.spectral_kernel(w, fft_size),
+                                  geo, **tn.kwargs())
+        y_ref = spec.spatial_conv2d(x, w)
+        err = float(jnp.abs(y - y_ref).max())
+        per_layer[layer.name] = err
+        worst = max(worst, err)
+    return {"batch": batch, "alpha": 1.0, "max_abs_err": worst,
+            "per_layer": per_layer,
+            "passes_1e-3": bool(worst <= 1e-3)}
+
+
+def main() -> None:
+    from repro.configs import vgg16_spectral
+    from repro.core import dataflow as df
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_e2e.json",
+                    help="output path for the JSON report")
+    ap.add_argument("--full", action="store_true",
+                    help="also time the full 224x224 model (slow on CPU)")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+
+    report: dict = {
+        "bench": "e2e_latency",
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "model": "vgg16-spectral",
+        "fft_size": 8,
+        "alpha": 4.0,
+    }
+
+    print("[1/3] latency: oracle vs staged Pallas vs fused Pallas")
+    report["latency"] = {"smoke": latency_table(
+        vgg16_spectral.SMOKE, iters=args.iters)}
+    if args.full:
+        report["latency"]["full"] = latency_table(
+            vgg16_spectral.CONFIG, batches=(1,), iters=1)
+    for scale, tbl in report["latency"].items():
+        for b, row in tbl.items():
+            pretty = ", ".join(f"{k}={v:.1f}" for k, v in row.items())
+            print(f"      {scale}/{b}: {pretty}")
+
+    print("[2/3] per-layer launches + analytic HBM traffic (full VGG16)")
+    layer_rows = per_layer_traffic(df.VGG16_LAYERS, 8, 4.0, batch=1)
+    report["layers"] = layer_rows
+    tot_fused = sum(r["fused_hbm_bytes"] for r in layer_rows)
+    tot_staged = sum(r["staged_os_hadamard_hbm_bytes"]
+                     + r["staged_fft_io_hbm_bytes"] for r in layer_rows)
+    report["totals"] = {
+        "fused_hbm_mb": tot_fused / 1e6,
+        "staged_hbm_mb": tot_staged / 1e6,
+        "hbm_reduction_pct": 100 * (1 - tot_fused / tot_staged),
+        "launches_fused": FUSED_LAUNCHES_PER_LAYER * len(layer_rows),
+        "launches_staged": STAGED_LAUNCHES_PER_LAYER * len(layer_rows),
+        "all_layers_fused_le_staged_os": all(
+            r["fused_le_staged_os"] for r in layer_rows),
+    }
+    t = report["totals"]
+    print(f"      fused {t['fused_hbm_mb']:.1f} MB vs staged "
+          f"{t['staged_hbm_mb']:.1f} MB HBM "
+          f"({t['hbm_reduction_pct']:.0f}% less), launches "
+          f"{t['launches_fused']} vs {t['launches_staged']}")
+
+    print("[3/3] fused vs spatial oracle parity (full VGG16, batch 1)")
+    report["parity"] = fused_parity_vs_spatial(df.VGG16_LAYERS, 8, batch=1)
+    print(f"      max abs err {report['parity']['max_abs_err']:.2e} "
+          f"(<= 1e-3: {report['parity']['passes_1e-3']})")
+
+    with open(args.json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,26 +1,45 @@
 """Benchmark entry point: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  ``python -m benchmarks.run``.
+Prints ``name,us_per_call,derived`` CSV; ``--json OUT`` additionally
+writes the same rows as machine-readable JSON (BENCH_*.json convention,
+consumed by the perf-trajectory tooling alongside benchmarks.e2e_latency).
+
+  python -m benchmarks.run [FILTER] [--json OUT]
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 
 
 def main() -> None:
     from benchmarks import kernels_bench, paper
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("filter", nargs="?", default=None,
+                    help="only run benches whose function name contains "
+                    "this substring")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows as JSON to OUT")
+    args = ap.parse_args()
+
     fns = list(paper.ALL) + [kernels_bench.kernel_benches]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    rows: list[dict] = []
     print("name,us_per_call,derived")
     for fn in fns:
         name = getattr(fn, "__name__", "lambda")
-        if only and only not in name:
+        if args.filter and args.filter not in name:
             continue
         for row in fn():
             n, us, derived = row
             print(f"{n},{us:.1f},{derived}")
+            rows.append({"name": n, "us_per_call": us, "derived": derived})
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "benchmarks.run", "filter": args.filter,
+                       "rows": rows}, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,12 @@
 """End-to-end sparse spectral CNN inference (the paper's pipeline).
 
 Runs the (reduced) VGG16-family spectral CNN: offline kernel transform +
-pruning, Alg-1 dataflow plan, Alg-2 schedules, then batched inference,
-validating the spectral path against the dense spatial oracle.
+pruning, Alg-1 dataflow plan (FPGA model), Alg-1-on-TPU fused-kernel
+autotune, Alg-2 schedules, then batched inference through the selected
+backend, validating the spectral path against the dense spatial oracle.
 
   PYTHONPATH=src python examples/spectral_cnn_inference.py [--full]
+      [--backend einsum|pallas_staged|pallas_fused]
 """
 
 import argparse
@@ -15,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import vgg16_spectral
-from repro.core import optimizer, scheduler
+from repro.core import autotune, optimizer, scheduler
 from repro.models import cnn
 
 
@@ -24,34 +26,46 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full 224x224 VGG16 (slow on CPU)")
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--backend", default="einsum", choices=cnn.BACKENDS,
+                    help="conv-stack implementation (pallas_* run "
+                    "interpret-mode off-TPU)")
     args = ap.parse_args()
     cfg = vgg16_spectral.CONFIG if args.full else vgg16_spectral.SMOKE
 
     key = jax.random.PRNGKey(0)
     params = cnn.init(key, cfg)
-    print(f"[1/4] transform + prune kernels (K={cfg.fft_size}, "
+    print(f"[1/5] transform + prune kernels (K={cfg.fft_size}, "
           f"alpha={cfg.alpha})")
     sks = cnn.transform_kernels(params, cfg)
 
-    print("[2/4] Alg 1 dataflow plan")
+    print("[2/5] Alg 1 dataflow plan (FPGA cost model)")
     plan = optimizer.optimize(layers=list(cfg.layers)[1:],
                               fft_size=cfg.fft_size, alpha=cfg.alpha,
                               arch_candidates=[(9, 64)])
     print(f"      max layer bandwidth {plan.bw_max_gbps:.2f} GB/s, "
           f"total transfers {plan.total_transfers_words / 1e6:.1f} Mwords")
 
-    print("[3/4] Alg 2 schedules (PE utilization per layer)")
+    print("[3/5] Alg 1 on TPU: fused-kernel flow + block autotune")
+    tuning = autotune.autotune_network(cfg.layers, cfg.fft_size, cfg.alpha,
+                                       batch=args.batch)
+    for name in list(tuning)[:4]:
+        tn = tuning[name]
+        print(f"      {name}: {tn.flow} bn={tn.block_n} bm={tn.block_m} "
+              f"bp={tn.block_p} ({tn.hbm_bytes / 1e6:.1f} MB HBM/call)")
+
+    print("[4/5] Alg 2 schedules (PE utilization per layer)")
     for layer, sk in list(zip(cfg.layers, sks))[1:4]:
         mu = scheduler.simulate_layer_utilization(
             np.asarray(sk.indices), cfg.fft_size ** 2, r=10,
             n_par=min(64, sk.n_out), channel_sample=2)
         print(f"      {layer.name}: mu = {mu:.1%}")
 
-    print("[4/4] inference")
+    print(f"[5/5] inference (backend={args.backend})")
     x = jax.random.normal(key, (args.batch, 3, cfg.image_size,
                                 cfg.image_size))
     t0 = time.time()
-    logits = cnn.forward_spectral(params, sks, cfg, x)
+    logits = cnn.forward_spectral(params, sks, cfg, x,
+                                  backend=args.backend, tuning=tuning)
     logits.block_until_ready()
     dt = time.time() - t0
     dense = cnn.forward_spatial(params, cfg, x)

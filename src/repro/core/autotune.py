@@ -1,0 +1,191 @@
+"""Alg 1 on TPU: per-layer flow + block-size selection for the fused
+spectral-conv kernel.
+
+The paper's Alg 1 searches architecture parameters (P', N') and per-layer
+streaming parameters (Ps, Ns) minimizing the worst-case DDR bandwidth
+under a BRAM cap.  On TPU the analogous knobs of one fused pallas_call
+(``kernels.fused_spectral_conv``) are
+
+  flow      in {output_stationary, weight_stationary, input_stationary}
+            — which operand block stays resident in VMEM between grid
+            steps (the paper's reuse-kernels / reuse-activations /
+            reuse-psums choice),
+  block_n / block_m / block_p
+            — the VMEM block sizes (the paper's N', M', P'),
+
+and the BRAM cap becomes the VMEM budget.  The analytic model is
+``dataflow.tpu_fused_flow_cost``; exactly as Alg 1, we enumerate the
+candidate grid, drop configurations over budget, and keep the predicted-
+latency argmin.  When a measurement callable is supplied (i.e. the fused
+kernel can actually run — always true in interpret mode, but wall time is
+only a *ranking* signal on real TPU), the top candidates by prediction
+are re-ranked by measured time, mirroring the paper's practice of
+validating Alg 1's pick against the implemented design.
+
+The per-layer result feeds ``models.cnn.forward_spectral(backend=
+"pallas_fused", tuning=...)`` and ``benchmarks/e2e_latency.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Iterable, Sequence
+
+from repro.core import dataflow as df
+from repro.core.dataflow import FLOWS
+
+# Power-of-two VMEM block candidates; clamped to each layer's dims.
+BLOCK_CANDIDATES = (32, 64, 128, 256)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedTuning:
+    """Chosen fused-kernel configuration for one conv layer."""
+
+    layer: str
+    flow: str
+    block_n: int
+    block_m: int
+    block_p: int
+    hbm_bytes: float
+    vmem_bytes: float
+    predicted_s: float           # max(hbm_s, compute_s) roofline estimate
+    measured_s: float | None = None
+
+    def kwargs(self) -> dict:
+        """Keyword arguments for ``fused_spectral_conv2d``."""
+        return {"flow": self.flow, "block_n": self.block_n,
+                "block_m": self.block_m, "block_p": self.block_p}
+
+
+def _layer_candidates(layer: df.ConvLayer, fft_size: int, batch: int,
+                      blocks: Sequence[int], hw_safe: bool,
+                      flows: Sequence[str] = FLOWS
+                      ) -> Iterable[tuple[str, int, int, int]]:
+    t = layer.tiles(fft_size) * batch
+    bns = sorted({min(b, layer.c_out) for b in blocks})
+    bms = sorted({min(b, layer.c_in) for b in blocks})
+    bps = sorted({min(b, t) for b in blocks})
+    for flow, bn, bm, bp in itertools.product(flows, bns, bms, bps):
+        if hw_safe:
+            # RMW flows accumulate into an output window revisited across
+            # the m grid axis; on TPU hardware the revisit must be
+            # consecutive, i.e. a single p (ws) / n (is) block (see
+            # kernels.fused_spectral_conv docstring).
+            if flow == "weight_stationary" and bp < t:
+                continue
+            if flow == "input_stationary" and bn < layer.c_out:
+                continue
+        yield flow, bn, bm, bp
+
+
+def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
+                   batch: int = 1,
+                   vmem_budget: int = df.TPU_VMEM_BYTES,
+                   blocks: Sequence[int] = BLOCK_CANDIDATES,
+                   hw_safe: bool = True,
+                   flows: Sequence[str] = FLOWS,
+                   cost_fn: Callable | None = None,
+                   measure_fn: Callable[[FusedTuning], float] | None = None,
+                   measure_top_k: int = 3) -> FusedTuning:
+    """Pick (flow, block_n, block_m, block_p) for one layer.
+
+    Analytic pass: minimize the roofline latency max(hbm_s, compute_s)
+    over all in-budget candidates (ties break toward fewer HBM bytes).
+    Measured pass (optional): re-rank the ``measure_top_k`` best analytic
+    candidates by ``measure_fn`` wall time.  ``hw_safe`` (default) keeps
+    only configurations the fused kernel accepts on real TPU.
+    ``cost_fn`` defaults to the fused kernel's model; pass
+    ``dataflow.tpu_flow_cost`` (with hw_safe=False) to tune the staged
+    Hadamard under the same selection policy.
+    """
+    if cost_fn is None:
+        cost_fn = df.tpu_fused_flow_cost
+    scored: list[FusedTuning] = []
+    for flow, bn, bm, bp in _layer_candidates(layer, fft_size, batch,
+                                              blocks, hw_safe, flows):
+        c = cost_fn(layer, fft_size, alpha, bn, bp, bm, flow, batch=batch)
+        if c["vmem_bytes"] > vmem_budget:
+            continue
+        scored.append(FusedTuning(
+            layer.name, flow, bn, bm, bp, c["hbm_bytes"], c["vmem_bytes"],
+            max(c["hbm_s"], c["compute_s"])))
+    if not scored:
+        # Nothing fits the budget: return the smallest-footprint config
+        # anyway.  Interpret mode runs it regardless; on real TPU an
+        # over-budget working set fails at Mosaic compile time, so the
+        # caller sees vmem_bytes > budget on the returned tuning and can
+        # shrink blocks/batch before hitting that opaque error.
+        flow = flows[0]
+        bn = bm = bp = min(blocks)
+        c = cost_fn(layer, fft_size, alpha, bn, bp, bm, flow, batch=batch)
+        return FusedTuning(layer.name, flow, bn, bm, bp, c["hbm_bytes"],
+                           c["vmem_bytes"],
+                           max(c["hbm_s"], c["compute_s"]))
+    scored.sort(key=lambda tn: (tn.predicted_s, tn.hbm_bytes))
+    if measure_fn is None:
+        return scored[0]
+    best, best_t = None, float("inf")
+    for cand in scored[:measure_top_k]:
+        t = measure_fn(cand)
+        if t < best_t:
+            best, best_t = cand, t
+    return dataclasses.replace(best, measured_s=best_t)
+
+
+def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
+                     fft_size: int = 8, alpha: float = 4.0, *,
+                     batch: int = 1,
+                     vmem_budget: int = df.TPU_VMEM_BYTES,
+                     blocks: Sequence[int] = BLOCK_CANDIDATES,
+                     hw_safe: bool = True,
+                     measure: bool = False,
+                     interpret: bool | None = None
+                     ) -> dict[str, FusedTuning]:
+    """Alg-1-on-TPU over a conv stack -> {layer name: FusedTuning}."""
+    plan: dict[str, FusedTuning] = {}
+    for layer in layers:
+        measure_fn = None
+        if measure:
+            measure_fn = _make_measure_fn(layer, fft_size, alpha, batch,
+                                          interpret)
+        plan[layer.name] = autotune_layer(
+            layer, fft_size, alpha, batch=batch, vmem_budget=vmem_budget,
+            blocks=blocks, hw_safe=hw_safe, measure_fn=measure_fn)
+    return plan
+
+
+def _make_measure_fn(layer: df.ConvLayer, fft_size: int, alpha: float,
+                     batch: int, interpret: bool | None
+                     ) -> Callable[[FusedTuning], float]:
+    """Wall-clock one fused pallas_call on synthetic layer data."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import spectral as spec
+    from repro.kernels.fused_spectral_conv import fused_spectral_conv2d
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (batch, layer.c_in, layer.h_in, layer.w_in),
+                          jnp.float32)
+    w = jax.random.normal(key, (layer.c_out, layer.c_in, layer.ksize,
+                                layer.ksize), jnp.float32)
+    geo = spec.make_geometry(layer.h_in, layer.w_in, layer.ksize, fft_size,
+                             layer.pad)
+    w_f = spec.spectral_kernel(w, fft_size)
+
+    def measure(tn: FusedTuning, iters: int = 3) -> float:
+        fn = lambda: fused_spectral_conv2d(x, w_f, geo,
+                                           interpret=interpret,
+                                           **tn.kwargs())
+        fn().block_until_ready()          # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / iters
+
+    return measure

@@ -257,6 +257,11 @@ TPU_PEAK_FLOPS = 197e12
 TPU_VMEM_BYTES = 16 * 2 ** 20   # ~16 MiB usable kernel working set
 TPU_ICI_GBPS = 50e9
 
+# The paper's three reuse choices as Pallas grid iteration orders —
+# canonical name list shared by the kernels, the cost models below and
+# the autotuner (core.autotune).
+FLOWS = ("output_stationary", "weight_stationary", "input_stationary")
+
 
 def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                   block_n: int, block_p: int, block_m: int,
@@ -276,13 +281,19 @@ def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
       'output_stationary' (Flow opt analogue): psums accumulate in VMEM
           across the m loop; X and W each read once per (n, p) block pair.
 
-    Complex data: 2 real planes.
+    Complex data: 2 real planes.  NOTE: the Pallas kernels stream and
+    multiply DENSE spectral planes (pruned positions stored as zeros), so
+    W traffic and FLOPs here are dense — ``alpha`` does not reduce them
+    on this path today.  The parameter is kept for signature stability;
+    the scheduled sparse kernel (and a future sparse fused kernel,
+    ROADMAP) are what turn compression into traffic/compute savings.
     """
+    del alpha  # dense-plane streaming: compression not realized here
     k2 = fft_size * fft_size
     t = layer.tiles(fft_size) * batch
     cplx = 2
     x_bytes = layer.c_in * k2 * t * cplx * bytes_per_el
-    w_bytes = layer.c_out * layer.c_in * k2 / alpha * cplx * bytes_per_el
+    w_bytes = layer.c_out * layer.c_in * k2 * cplx * bytes_per_el
     y_bytes = layer.c_out * k2 * t * cplx * bytes_per_el
 
     if flow == "weight_stationary":
@@ -301,7 +312,83 @@ def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     vmem = (block_m * block_p * cplx * bytes_per_el             # X block
             + block_n * block_m * cplx * bytes_per_el           # W block
             + block_n * block_p * cplx * 4)                     # f32 acc
-    flops = 8 * t * k2 / alpha * layer.c_in * layer.c_out / 1.0
+    flops = 8 * t * k2 * layer.c_in * layer.c_out
+    return {
+        "hbm_bytes": float(hbm),
+        "vmem_bytes": float(vmem),
+        "flops": float(flops),
+        "hbm_s": float(hbm) / TPU_HBM_GBPS,
+        "compute_s": float(flops) / TPU_PEAK_FLOPS,
+        "fits_vmem": vmem <= TPU_VMEM_BYTES,
+    }
+
+
+def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
+                        block_n: int, block_p: int, block_m: int,
+                        flow: str, batch: int = 1,
+                        bytes_per_el: int = 4) -> dict[str, float]:
+    """HBM traffic + VMEM working set of ONE fused pallas_call
+    (``kernels.fused_spectral_conv``): FFT + Hadamard + IFFT in a single
+    kernel, so HBM only ever sees
+
+      X  spatial tiles   [S, M, P]   real,  S = tile^2, P = T * batch
+      W  spectral kernel [F, N, M]   complex, DENSE planes (pruned
+                                     positions stored as zeros — see
+                                     the ``tpu_flow_cost`` note)
+      Y  spatial tiles   [F, N, P]   real   (K x K full-conv tiles)
+
+    — the complex spectral intermediates X~/Y~ of the staged path
+    (``tpu_flow_cost``'s x/y terms) never leave VMEM.  Re-read factors
+    follow the grid iteration order of each flow:
+
+      'output_stationary': psums in VMEM scratch; X re-read per n block,
+          W re-read per p block, Y written exactly once.
+      'weight_stationary' (Flow #1): W read once; X re-read per n block;
+          real psum tiles RMW'd once per m block (2*gm - 1 passes).
+      'input_stationary'  (Flow #2): X read once; W re-read per p block;
+          same psum RMW traffic.
+    """
+    del alpha  # dense-plane streaming: compression not realized here
+    k2 = fft_size * fft_size
+    tile = layer.tile_size(fft_size)
+    t = layer.tiles(fft_size) * batch
+    cplx = 2
+    gn = max(1, _ceil(layer.c_out, block_n))
+    gm = max(1, _ceil(layer.c_in, block_m))
+    gp = max(1, _ceil(t, block_p))
+    x_bytes = layer.c_in * tile * tile * t * bytes_per_el
+    w_bytes = layer.c_out * layer.c_in * k2 * cplx * bytes_per_el
+    y_bytes = layer.c_out * k2 * t * bytes_per_el
+
+    if flow == "output_stationary":
+        hbm = x_bytes * gn + w_bytes * gp + y_bytes
+    elif flow == "weight_stationary":
+        hbm = x_bytes * gn + w_bytes + y_bytes * (2 * gm - 1)
+    elif flow == "input_stationary":
+        hbm = x_bytes + w_bytes * gp + y_bytes * (2 * gm - 1)
+    else:
+        raise ValueError(flow)
+
+    bn = min(block_n, layer.c_out)
+    bm = min(block_m, layer.c_in)
+    bp = min(block_p, t)
+    s = tile * tile
+    # Streamed blocks are double-buffered by the Pallas pipeline (x2);
+    # the DFT operators, the in-flight spectral blocks and the psum
+    # scratch are single-copy VMEM residents.
+    vmem = (2 * (s * bm * bp                       # X tile block
+                 + cplx * k2 * bn * bm             # W block (re+im)
+                 + k2 * bn * bp)                   # Y output block
+            + cplx * k2 * bm * bp                  # X~ in flight
+            + 2 * cplx * k2 * bn * bp              # Y~ psum / Karatsuba
+            + k2 * s + 2 * k2 * k2                 # DFT / IDFT operators
+            ) * bytes_per_el
+
+    had_flops = 8 * t * k2 * layer.c_in * layer.c_out
+    fft_flops = 2 * 2 * k2 * s * layer.c_in * t * (gn if flow != "input_stationary" else 1)
+    ifft_passes = 1 if flow == "output_stationary" else gm
+    ifft_flops = 2 * 2 * k2 * k2 * layer.c_out * t * ifft_passes
+    flops = had_flops + fft_flops + ifft_flops
     return {
         "hbm_bytes": float(hbm),
         "vmem_bytes": float(vmem),

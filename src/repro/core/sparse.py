@@ -37,12 +37,16 @@ class SparseSpectralKernels(NamedTuple):
     indices: int32     [N, M, nnz]  — flattened freq indices (row-major u*K+v),
                                       sorted ascending per kernel.
     alpha:   compression ratio (K^2 / nnz).
+    active_bins: host numpy int array of freq bins non-zero in ANY kernel
+                 (precomputed at prune time so forward passes never pull
+                 the mask back from device), or None.
     """
 
     values: Array
     mask: Array
     indices: Array
     alpha: float
+    active_bins: np.ndarray | None = None
 
     @property
     def n_out(self) -> int:
@@ -72,7 +76,8 @@ def _finalize(w_f: Array, mask: np.ndarray, alpha: float
         values=jnp.asarray(w_f) * jnp.asarray(mask),
         mask=jnp.asarray(mask),
         indices=jnp.asarray(idx, jnp.int32),
-        alpha=alpha)
+        alpha=alpha,
+        active_bins=np.flatnonzero(mask.any(axis=(0, 1)).reshape(-1)))
 
 
 def prune_magnitude(w_f: Array, alpha: float) -> SparseSpectralKernels:

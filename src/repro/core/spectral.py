@@ -187,14 +187,49 @@ def spectral_conv2d(x: Array, w: Array, *, fft_size: int = 8,
     return spectral_conv2d_pretransformed(x, w_f, geo)
 
 
-def spectral_conv2d_pretransformed(x: Array, w_f: Array,
+def spectral_conv2d_pretransformed(x: Array, w_f,
                                    geo: SpectralGeometry) -> Array:
-    """Spectral conv with an already-transformed (possibly pruned) kernel."""
+    """Spectral conv with an already-transformed (possibly pruned) kernel.
+
+    ``w_f`` is either a dense complex [N, M, K, K] array or a
+    ``repro.core.sparse.SparseSpectralKernels`` (duck-typed on
+    ``.values``/``.mask`` to avoid an import cycle).  For pruned kernels
+    the Hadamard einsum is restricted to the frequency bins that are
+    non-zero in *some* kernel — the whole-bin zero work (which the
+    magnitude patterns of high-alpha layers concentrate at high
+    frequencies) is skipped, so oracle benchmarks reflect sparsity.
+    """
     tiles = extract_tiles(x, geo)                    # [B,M,T,h',w']
     x_f = fft_tiles(tiles, geo)                      # [B,M,T,K,K]
-    y_f = hadamard_accumulate(x_f, w_f)              # [B,N,T,K,K]
+    y_f = _hadamard_maybe_sparse(x_f, w_f, geo)      # [B,N,T,K,K]
     y_tiles = jnp.fft.ifft2(y_f).real
     return overlap_add(y_tiles.astype(x.dtype), geo)
+
+
+def _hadamard_maybe_sparse(x_f: Array, w_f, geo: SpectralGeometry) -> Array:
+    if not hasattr(w_f, "values"):                   # dense kernel
+        return hadamard_accumulate(x_f, w_f)
+    values = w_f.values
+    kk = geo.fft_size
+    f = kk * kk
+    # precomputed at prune time; deriving it here would pull the mask
+    # back from device on every forward call
+    active = getattr(w_f, "active_bins", None)
+    if active is None:
+        mask = w_f.mask
+        if isinstance(mask, jax.core.Tracer):        # traced: stay dense
+            return hadamard_accumulate(x_f, values)
+        active = np.flatnonzero(np.asarray(mask).any(axis=(0, 1))
+                                .reshape(f))
+    if len(active) >= f:                             # nothing prunable
+        return hadamard_accumulate(x_f, values)
+    b, m, t = x_f.shape[:3]
+    n = values.shape[0]
+    xa = x_f.reshape(b, m, t, f)[..., active]
+    wa = values.reshape(n, m, f)[..., active]
+    ya = jnp.einsum("bmtf,nmf->bntf", xa, wa)
+    y = jnp.zeros((b, n, t, f), ya.dtype)
+    return y.at[..., active].set(ya).reshape(b, n, t, kk, kk)
 
 
 @functools.partial(jax.jit, static_argnames=("pad",))

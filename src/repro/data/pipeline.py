@@ -13,6 +13,10 @@ Properties required at fleet scale and tested here:
 The "corpus" is a counter-based PRNG stream (threefry via jax on host
 numpy here) shaped like an LM token stream with next-token labels; the
 audio variant emits stub frame embeddings for the whisper backbone.
+Tokens carry learnable bigram structure (each position repeats the
+previous token with probability 1/2) so that cross-entropy genuinely
+decreases under training — an i.i.d. uniform stream starts AT the
+optimum and convergence tests can only pass by noise.
 """
 
 from __future__ import annotations
@@ -50,8 +54,14 @@ def batch_at(cfg: DataConfig, step: int) -> dict[str, np.ndarray]:
         global_row = cfg.host_id * cfg.host_batch + r
         rng = np.random.default_rng(
             (cfg.seed, step, global_row))
-        stream = rng.integers(1, cfg.vocab, size=cfg.seq_len + 1,
-                              dtype=np.int32)
+        n = cfg.seq_len + 1
+        stream = rng.integers(1, cfg.vocab, size=n, dtype=np.int32)
+        # learnable structure: repeat the previous token with prob 1/2
+        # (segment-copy via running max of the last freshly-drawn index)
+        fresh = rng.random(n) >= 0.5
+        fresh[0] = True
+        src = np.maximum.accumulate(np.where(fresh, np.arange(n), 0))
+        stream = stream[src]
         rows.append(stream[:-1])
         labels.append(stream[1:])
     out["tokens"] = np.stack(rows)

@@ -1,9 +1,13 @@
 """Pallas TPU kernels for the compute hot spots.
 
+- fused_spectral_conv: ONE pallas_call per conv layer — tile-FFT ->
+  Karatsuba Hadamard -> IFFT with psums in VMEM scratch; spectral
+  intermediates never touch HBM (the production spectral-conv path,
+  configured per layer by core.autotune)
 - spectral_hadamard: frequency-binned batched complex GEMM (Eq 3) with
-  the paper's three dataflows as grid-order variants
+  the paper's three dataflows as grid-order variants (staged path)
 - sparse_hadamard:   INDEX/VALUE-table (Fig 6) scheduled sparse execution
-- fft8:              2-D (I)FFT as MXU DFT matmuls
+- fft8:              2-D (I)FFT as MXU DFT matmuls (staged path)
 - flash_attention:   blocked online-softmax attention (LM pillar)
 
 ops.py holds the jit'd public wrappers, ref.py the pure-jnp oracles.

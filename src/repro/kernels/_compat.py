@@ -1,0 +1,13 @@
+"""Version compatibility for jax.experimental.pallas.tpu.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``TPUCompilerParams`` -> ``CompilerParams``).  Resolve whichever this
+JAX ships so the kernels import cleanly on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

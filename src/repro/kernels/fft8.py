@@ -24,6 +24,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 Array = jax.Array
 
 
@@ -98,7 +100,7 @@ def fft2_tiles(x: Array, *, fft_size: int, block_b: int = 256,
         in_specs=[spec_x, spec_d, spec_d],
         out_specs=[spec_x, spec_x],
         out_shape=[jax.ShapeDtypeStruct(x.shape, jnp.float32)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x.astype(jnp.float32), cr, ci)
@@ -124,7 +126,7 @@ def ifft2_tiles(yr: Array, yi: Array, *, block_b: int = 256,
         in_specs=[spec_x, spec_x, spec_d, spec_d],
         out_specs=spec_x,
         out_shape=jax.ShapeDtypeStruct(yr.shape, jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(yr.astype(jnp.float32), yi.astype(jnp.float32), vr, vi)

@@ -1,0 +1,387 @@
+"""Pallas TPU kernel: ONE pallas_call for a whole spectral conv layer.
+
+The staged Pallas path (``ops.spectral_conv2d_pallas``) launches three
+kernels per layer — fft8 -> spectral_hadamard -> ifft8 — and round-trips
+the complex spectral tensors ``X~``/``Y~`` ([B, M, T, K, K], 2 f32 planes)
+through HBM between stages.  That inter-stage traffic is the TPU analogue
+of exactly the off-chip communication the paper's dataflow eliminates
+(§4): the FPGA design pipelines FFT -> Hadamard -> IFFT through on-chip
+buffers, touching DDR only for spatial inputs, spectral kernels and
+spatial outputs.
+
+This kernel restores that property.  Per grid step it performs, entirely
+in VMEM:
+
+  1. tile-FFT   — the DFT-matmul form of ``fft8``, collapsed to a single
+     MXU GEMM: with D = kron(W, W)[:, :t^2] ([K^2, t^2], W the K-point DFT
+     matrix restricted to the tile's t x t support),
+        X~[f, m, p] = sum_s D[f, s] x[s, m, p]
+     so the zero-padding of tiles to K x K is folded into D and the
+     spatial tiles are stored s-leading ([S, M, P]) — the contraction is
+     over the *leading* dim and needs no in-kernel transposes;
+  2. Hadamard   — the frequency-batched complex GEMM of
+     ``spectral_hadamard`` in 3-multiplication Karatsuba form,
+        Y~[f, n, p] = sum_m W~[f, n, m] X~[f, m, p];
+  3. IFFT      — Re(Dinv @ Y~) with Dinv = kron(Winv, Winv) [K^2, K^2],
+     writing real K x K output tiles ([S2, N, P]) for host-side OaA.
+
+The contraction over input channels M runs across a grid dimension; the
+paper's three reuse choices map onto grid iteration orders exactly as in
+``spectral_hadamard`` (which operand block Pallas keeps resident between
+consecutive grid steps):
+
+  * ``output_stationary``  grid (n, p, m): f32 psums accumulate in VMEM
+    scratch across the innermost m loop; HBM sees each output once and
+    never sees X~/Y~ at all.
+  * ``weight_stationary``  grid (n, m, p) (Flow #1, reuse kernels): the
+    W~ block is constant across the inner p loop so it loads exactly
+    once, but partial outputs are read-modify-written per m block.
+    IFFT is linear, so partial Y~ blocks are IFFT'd eagerly and the RMW
+    traffic is *spatial* psums (K^2 real words/tile) — spectral
+    intermediates still never reach HBM.
+  * ``input_stationary``   grid (p, m, n) (Flow #2, reuse activations):
+    the raw tile block is constant across the inner n loop and its FFT
+    is computed once into VMEM scratch (at n-block 0) and reused;
+    kernels re-stream per p block, same spatial-psum RMW.
+
+Hardware caveat (Pallas TPU pipelining): reading an *output* window that
+was last written in a NON-consecutive grid step is undefined on real TPU
+(windows are only kept while the block index is unchanged between
+consecutive steps).  The RMW flows therefore require the accumulation
+revisit to be consecutive on hardware: ``weight_stationary`` needs a
+single p block (block_p >= P) and ``input_stationary`` a single n block
+(block_n >= N) — then the psum window simply stays resident in VMEM
+across the m loop and is flushed once.  The wrapper enforces this when
+``interpret=False``; interpret mode (CPU validation) emulates per-step
+window copies and runs any block shape.  ``core.autotune`` only emits
+hardware-safe configurations.  (Streaming psums through HBM with
+arbitrary blocks, as the FPGA does through DDR, needs a manual-DMA
+kernel — ROADMAP open item.)
+
+HBM traffic per flow is modeled by ``repro.core.dataflow.tpu_fused_flow_cost``
+and block sizes / flow are chosen per layer by ``repro.core.autotune``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+from repro.core.dataflow import FLOWS
+from repro.core.spectral import (SpectralGeometry, extract_tiles,
+                                 overlap_add)
+from repro.kernels.fft8 import dft_matrices
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# DFT operators in flattened (kron) form
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _dft_kron(fft_size: int, tile: int) -> tuple[np.ndarray, np.ndarray]:
+    """Forward 2-D DFT as one matrix on flattened t x t tiles.
+
+    D[f, s] with f = u*K + v, s = a*t + b equals W[u, a] * W[v, b]; the
+    restriction to a < t, b < t folds the zero-padding of tiles to K x K
+    into the operator.  Returns (real, imag) [K^2, t^2] f32.
+    """
+    cr, ci = dft_matrices(fft_size)
+    w = cr + 1j * ci
+    d = np.kron(w[:, :tile], w[:, :tile])
+    return (np.ascontiguousarray(d.real, np.float32),
+            np.ascontiguousarray(d.imag, np.float32))
+
+
+@functools.lru_cache(maxsize=None)
+def _idft_kron(fft_size: int) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse 2-D DFT on flattened K x K spectra: [K^2, K^2] (re, im)."""
+    cr, ci = dft_matrices(fft_size)
+    winv = (cr - 1j * ci) / fft_size          # conj(W) / K
+    d = np.kron(winv, winv)
+    return (np.ascontiguousarray(d.real, np.float32),
+            np.ascontiguousarray(d.imag, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+def _tile_fft(x_ref, dfr_ref, dfi_ref):
+    """Stage 1: one GEMM against the kron'd DFT operator.
+    [S, bm, bp] real tiles -> (re, im) [F, bm, bp] spectral planes."""
+    s, bm, bp = x_ref.shape
+    f = dfr_ref.shape[0]
+    x2 = x_ref[...].reshape(s, bm * bp)
+    xfr = jnp.dot(dfr_ref[...], x2,
+                  preferred_element_type=jnp.float32).reshape(f, bm, bp)
+    xfi = jnp.dot(dfi_ref[...], x2,
+                  preferred_element_type=jnp.float32).reshape(f, bm, bp)
+    return xfr, xfi
+
+
+def _hadamard(wr_ref, wi_ref, xfr, xfi):
+    """Stage 2: frequency-batched Karatsuba complex GEMM.
+    W [F, bn, bm] x X~ [F, bm, bp] -> (re, im) [F, bn, bp]."""
+    def bmm(a, b):
+        return jax.lax.dot_general(
+            a, b, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+
+    wr, wi = wr_ref[...], wi_ref[...]
+    m1 = bmm(wr, xfr)
+    m2 = bmm(wi, xfi)
+    m3 = bmm(wr + wi, xfr + xfi)
+    return m1 - m2, m3 - m1 - m2
+
+
+def _ifft_real(re, im, dvr_ref, dvi_ref, bn, bp):
+    """Stage 3: Re(Dinv @ Y~) -> [S2, bn, bp] real output tiles."""
+    f = re.shape[0]
+    s2 = dvr_ref.shape[0]
+    y = (jnp.dot(dvr_ref[...], re.reshape(f, bn * bp),
+                 preferred_element_type=jnp.float32)
+         - jnp.dot(dvi_ref[...], im.reshape(f, bn * bp),
+                   preferred_element_type=jnp.float32))
+    return y.reshape(s2, bn, bp)
+
+
+def _kernel_os(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
+               y_ref, acc_r, acc_i, *, n_m_blocks: int):
+    """Output-stationary: psums live in VMEM scratch across the innermost
+    m grid dim; IFFT + output write happen once, at the last m block."""
+    gm = pl.program_id(2)
+
+    @pl.when(gm == 0)
+    def _init():
+        acc_r[...] = jnp.zeros_like(acc_r)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    re, im = _hadamard(wr_ref, wi_ref,
+                       *_tile_fft(x_ref, dfr_ref, dfi_ref))
+    acc_r[...] += re
+    acc_i[...] += im
+
+    @pl.when(gm == n_m_blocks - 1)
+    def _flush():
+        bn, bp = acc_r.shape[1], acc_r.shape[2]
+        y_ref[...] = _ifft_real(acc_r[...], acc_i[...], dvr_ref, dvi_ref,
+                                bn, bp)
+
+
+def _kernel_ws(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
+               y_ref):
+    """Weight-stationary, grid (n, m, p): each m block's partial Y~ is
+    IFFT'd eagerly (IFFT is linear) and the real spatial psum is read-
+    modify-written — spectral intermediates never reach HBM."""
+    gm = pl.program_id(1)
+    re, im = _hadamard(wr_ref, wi_ref,
+                       *_tile_fft(x_ref, dfr_ref, dfi_ref))
+    bn, bp = re.shape[1], re.shape[2]
+    y = _ifft_real(re, im, dvr_ref, dvi_ref, bn, bp)
+
+    @pl.when(gm == 0)
+    def _first():
+        y_ref[...] = y
+
+    @pl.when(gm > 0)
+    def _rest():
+        y_ref[...] += y
+
+
+def _kernel_is(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
+               y_ref, xfr_s, xfi_s):
+    """Input-stationary, grid (p, m, n): the tile block is constant
+    across the inner n loop, so its FFT is computed once (n-block 0)
+    into VMEM scratch and reused — the reuse the flow is named for."""
+    gm = pl.program_id(1)
+    gn = pl.program_id(2)
+
+    @pl.when(gn == 0)
+    def _fft_once():
+        xfr, xfi = _tile_fft(x_ref, dfr_ref, dfi_ref)
+        xfr_s[...] = xfr
+        xfi_s[...] = xfi
+
+    re, im = _hadamard(wr_ref, wi_ref, xfr_s[...], xfi_s[...])
+    bn, bp = re.shape[1], re.shape[2]
+    y = _ifft_real(re, im, dvr_ref, dvi_ref, bn, bp)
+
+    @pl.when(gm == 0)
+    def _first():
+        y_ref[...] = y
+
+    @pl.when(gm > 0)
+    def _rest():
+        y_ref[...] += y
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrapper
+# ---------------------------------------------------------------------------
+
+def _pad_axis(x: Array, axis: int, mult: int) -> Array:
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("flow", "block_n", "block_m", "block_p", "interpret"))
+def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array, *,
+                            flow: str = "output_stationary",
+                            block_n: int = 64, block_m: int = 64,
+                            block_p: int = 128,
+                            interpret: bool = True) -> Array:
+    """FFT -> Hadamard -> IFFT in one pallas_call.
+
+    xt: [S, M, P] f32   spatial tiles, s-leading (S = tile^2, P = B*T)
+    wr/wi: [F, N, M] f32 spectral kernel planes (F = K^2)
+    returns [S2, N, P] f32 real output tiles (S2 = K^2).
+    """
+    if flow not in FLOWS:
+        raise ValueError(f"flow must be one of {FLOWS}")
+    s, m, p = xt.shape
+    f, n, _ = wr.shape
+    k = int(round(f ** 0.5))
+    t = int(round(s ** 0.5))
+    assert k * k == f and t * t == s, (f, s)
+
+    bn, bm, bp = min(block_n, n), min(block_m, m), min(block_p, p)
+    xt_ = _pad_axis(_pad_axis(xt, 1, bm), 2, bp)
+    wr_ = _pad_axis(_pad_axis(wr, 1, bn), 2, bm)
+    wi_ = _pad_axis(_pad_axis(wi, 1, bn), 2, bm)
+    np_, mp_, pp_ = wr_.shape[1], wr_.shape[2], xt_.shape[2]
+    gn, gm, gp = np_ // bn, mp_ // bm, pp_ // bp
+
+    dfr, dfi = (jnp.asarray(a) for a in _dft_kron(k, t))
+    dvr, dvi = (jnp.asarray(a) for a in _idft_kron(k))
+
+    if not interpret:
+        # Pallas TPU keeps an output window only across CONSECUTIVE grid
+        # steps; the RMW flows accumulate into y across the m axis, so on
+        # hardware the revisit must be consecutive (see module docstring).
+        if flow == "weight_stationary" and gp > 1:
+            raise NotImplementedError(
+                "weight_stationary on TPU hardware needs block_p >= P "
+                f"(got {bp} < {pp_}); use output_stationary or a "
+                "hardware-safe autotune plan")
+        if flow == "input_stationary" and gn > 1:
+            raise NotImplementedError(
+                "input_stationary on TPU hardware needs block_n >= N "
+                f"(got {bn} < {np_}); use output_stationary or a "
+                "hardware-safe autotune plan")
+
+    if flow == "output_stationary":
+        grid = (gn, gp, gm)
+        x_map = lambda a, b, c: (0, c, b)
+        w_map = lambda a, b, c: (0, a, c)
+        y_map = lambda a, b, c: (0, a, b)
+        kernel = functools.partial(_kernel_os, n_m_blocks=gm)
+        scratch = [pltpu.VMEM((f, bn, bp), jnp.float32)] * 2
+        semantics = ("parallel", "parallel", "arbitrary")
+    elif flow == "weight_stationary":
+        grid = (gn, gm, gp)
+        x_map = lambda a, c, b: (0, c, b)
+        w_map = lambda a, c, b: (0, a, c)
+        y_map = lambda a, c, b: (0, a, b)
+        kernel = _kernel_ws
+        scratch = []
+        semantics = ("parallel", "arbitrary", "arbitrary")
+    else:  # input_stationary
+        grid = (gp, gm, gn)
+        x_map = lambda b, c, a: (0, c, b)
+        w_map = lambda b, c, a: (0, a, c)
+        y_map = lambda b, c, a: (0, a, b)
+        kernel = _kernel_is
+        scratch = [pltpu.VMEM((f, bm, bp), jnp.float32)] * 2
+        semantics = ("parallel", "arbitrary", "arbitrary")
+
+    x_spec = pl.BlockSpec((s, bm, bp), x_map)
+    w_spec = pl.BlockSpec((f, bn, bm), w_map)
+    y_spec = pl.BlockSpec((f, bn, bp), y_map)
+    d_spec = lambda rows, cols: pl.BlockSpec(
+        (rows, cols), lambda *_: (0, 0))
+
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, w_spec, w_spec,
+                  d_spec(f, s), d_spec(f, s), d_spec(f, f), d_spec(f, f)],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((f, np_, pp_), jnp.float32),
+        scratch_shapes=scratch,
+        compiler_params=CompilerParams(
+            dimension_semantics=semantics),
+        interpret=interpret,
+    )(xt_.astype(jnp.float32), wr_, wi_, dfr, dfi, dvr, dvi)
+    return y[:, :n, :p]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geo", "flow", "block_n", "block_m", "block_p",
+                     "interpret"))
+def _fused_conv(x: Array, w_f: Array, *, geo: SpectralGeometry, flow: str,
+                block_n: int, block_m: int, block_p: int,
+                interpret: bool) -> Array:
+    """Jitted body: tile extraction, layout, pipeline, OaA — one compiled
+    program per (geo, flow, blocks), so the host-side relayout is not
+    re-dispatched eagerly on every forward call."""
+    b, m = x.shape[:2]
+    n, _, k, _ = w_f.shape
+
+    tiles = extract_tiles(x, geo)                       # [B, M, T, t, t]
+    t_cnt = tiles.shape[2]
+    s = geo.tile * geo.tile
+    # s-leading layout: [S, M, B*T] — the in-kernel FFT contracts the
+    # leading dim with one GEMM, no transposes on the TPU side.
+    xt = (tiles.reshape(b, m, t_cnt, s)
+          .transpose(3, 1, 0, 2).reshape(s, m, b * t_cnt))
+
+    fdim = k * k
+    wr = jnp.transpose(w_f.real.reshape(n, m, fdim), (2, 0, 1))
+    wi = jnp.transpose(w_f.imag.reshape(n, m, fdim), (2, 0, 1))
+
+    y = fused_spectral_pipeline(
+        xt, wr.astype(jnp.float32), wi.astype(jnp.float32), flow=flow,
+        block_n=block_n, block_m=block_m, block_p=block_p,
+        interpret=interpret)                            # [S2, N, B*T]
+
+    y_tiles = (y.reshape(fdim, n, b, t_cnt).transpose(2, 1, 3, 0)
+               .reshape(b, n, t_cnt, k, k))
+    return overlap_add(y_tiles.astype(x.dtype), geo)
+
+
+def fused_spectral_conv2d(x: Array, w_f: Array, geo: SpectralGeometry, *,
+                          flow: str = "output_stationary",
+                          block_n: int = 64, block_m: int = 64,
+                          block_p: int = 128,
+                          interpret: bool | None = None) -> Array:
+    """Full spectral conv layer through the single fused pallas_call.
+
+    x: [B, M, H, W] real NCHW; w_f: complex [N, M, K, K] (possibly pruned,
+    e.g. a ``SparseSpectralKernels``, whose dense ``.values`` are used).
+    Host side does only the layout work the paper's DMA engine does:
+    tile extraction going in, Overlap-and-Add coming out.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if hasattr(w_f, "values"):            # SparseSpectralKernels duck-type
+        w_f = w_f.values
+    assert w_f.shape[-1] == geo.fft_size
+    return _fused_conv(x, w_f, geo=geo, flow=flow, block_n=block_n,
+                       block_m=block_m, block_p=block_p,
+                       interpret=interpret)

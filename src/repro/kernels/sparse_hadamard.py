@@ -35,6 +35,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core.scheduler import ScheduleTables
 
 Array = jax.Array
@@ -122,7 +124,7 @@ def scheduled_sparse_hadamard(index_table: Array, sel: Array, valid: Array,
         out_shape=[jax.ShapeDtypeStruct((n_pe, f, xr.shape[2]),
                                         jnp.float32)] * 2,
         scratch_shapes=[pltpu.VMEM((n_pe, f, bp), jnp.float32)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(index_table, sel, valid.astype(jnp.float32), val_r, val_i,

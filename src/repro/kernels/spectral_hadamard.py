@@ -43,9 +43,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-Array = jax.Array
+from repro.kernels._compat import CompilerParams
 
-FLOWS = ("output_stationary", "weight_stationary", "input_stationary")
+from repro.core.dataflow import FLOWS
+
+Array = jax.Array
 
 
 def _karatsuba(wr, wi, xr, xi):
@@ -163,7 +165,7 @@ def spectral_hadamard(wr: Array, wi: Array, xr: Array, xi: Array, *,
         out_specs=[y_spec, y_spec],
         out_shape=out_shape,
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=semantics),
         interpret=interpret,
     )(wr_, wi_, xr_, xi_)

@@ -100,7 +100,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                     if hasattr(mem, k)}
                 print(f"[{arch}/{shape_name}/{mesh_name}] memory_analysis:",
                       record["memory_analysis"])
-            cost = compiled.cost_analysis() or {}
+            cost = analysis.cost_analysis_dict(compiled)
             record["cost_analysis"] = {
                 k: float(v) for k, v in cost.items()
                 if isinstance(v, (int, float)) and k in

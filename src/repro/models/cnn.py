@@ -72,14 +72,40 @@ def _pool(x: Array) -> Array:
     return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
 
 
+BACKENDS = ("einsum", "pallas_staged", "pallas_fused")
+
+
 def forward_spectral(params: dict, spectral_kernels, cfg: SpectralCNNConfig,
-                     x: Array) -> Array:
-    """Inference with pre-transformed (pruned) spectral kernels."""
+                     x: Array, *, backend: str = "einsum",
+                     tuning: dict | None = None,
+                     interpret: bool | None = None) -> Array:
+    """Inference with pre-transformed (pruned) spectral kernels.
+
+    backend selects the conv-stack implementation:
+      'einsum'        pure-jnp oracle (sparse-aware masked einsum)
+      'pallas_staged' 3 pallas_calls/layer: fft8 -> hadamard -> ifft8,
+                      spectral intermediates round-tripping through HBM
+      'pallas_fused'  ONE pallas_call/layer (kernels.fused_spectral_conv);
+                      ``tuning`` maps layer name -> core.autotune
+                      FusedTuning for per-layer flow/block choice.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}")
     for layer, conv, sk in zip(cfg.layers, params["convs"],
                                spectral_kernels):
         geo = spec.make_geometry(x.shape[2], x.shape[3], layer.ksize,
                                  cfg.fft_size, layer.pad)
-        x = spec.spectral_conv2d_pretransformed(x, sk.values, geo)
+        if backend == "einsum":
+            x = spec.spectral_conv2d_pretransformed(x, sk, geo)
+        elif backend == "pallas_staged":
+            from repro.kernels import ops
+            x = ops.spectral_conv2d_pallas(x, sk.values, geo,
+                                           interpret=interpret)
+        else:
+            from repro.kernels.fused_spectral_conv import fused_spectral_conv2d
+            tn = (tuning or {}).get(layer.name)
+            kw = tn.kwargs() if tn is not None else {}
+            x = fused_spectral_conv2d(x, sk, geo, interpret=interpret, **kw)
         x = jax.nn.relu(x + conv["b"][None, :, None, None])
         if layer.name in _POOL_AFTER:
             x = _pool(x)

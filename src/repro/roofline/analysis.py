@@ -124,6 +124,15 @@ class Roofline:
         return dataclasses.asdict(self)
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions:
+    older releases return ``[dict]``, newer return ``dict``."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def roofline_terms(cost: dict, coll: CollectiveStats, n_devices: int,
                    model_flops_total: float) -> Roofline:
     flops = float(cost.get("flops", 0.0))

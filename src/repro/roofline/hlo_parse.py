@@ -34,7 +34,9 @@ _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALLS = re.compile(r"(?:calls|to_apply|condition|body|true_computation|"
                     r"false_computation)=%?([\w\.\-]+)")
 _DEF = re.compile(r"^\s*(?:ROOT )?%([\w\.\-]+)\s*=\s*(.*)$")
-_DOT = re.compile(r"\bdot\(%?([\w\.\-]+),")
+# operand may carry an inline type: "dot(f32[64,64]{1,0} %lhs, ..." —
+# newer HLO text — or be bare: "dot(%lhs, ..." (older text).
+_DOT = re.compile(r"\bdot\((?:\S+\s+)?%?([\w\.\-]+),")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _COLL = re.compile(
     r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"

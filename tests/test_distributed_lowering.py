@@ -23,6 +23,7 @@ SCRIPT = textwrap.dedent("""
     from repro.distributed import ctx, planner, sharding
     from repro.launch import steps
     from repro.roofline import hlo_parse
+    from repro.roofline.analysis import cost_analysis_dict
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     msd = {"data": 2, "model": 4}
@@ -33,7 +34,7 @@ SCRIPT = textwrap.dedent("""
     with mesh, ctx.use(ctx.ShardCtx(("data",))):
         fn, args = steps.cell_lowerable(cfg, shape, mesh, plan)
         compiled = fn.lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     assert cost["flops"] > 0
     a = hlo_parse.parse(compiled.as_text(), 8)
     assert a.dot_flops > cost["flops"], (a.dot_flops, cost["flops"])
@@ -44,14 +45,15 @@ SCRIPT = textwrap.dedent("""
     with mesh:
         fn, args = steps.cell_lowerable(cfg, dshape, mesh, plan)
         compiled = fn.lower(*args).compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    assert cost_analysis_dict(compiled)["flops"] > 0
     print("LOWERING_OK")
 """)
 
 
 def test_sharded_lowering_8_devices():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
-                       env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+                       env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"},
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "LOWERING_OK" in r.stdout

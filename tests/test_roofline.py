@@ -23,7 +23,7 @@ def test_scan_flops_counted_with_trip_count():
     np.testing.assert_allclose(a.dot_flops, expected, rtol=1e-6)
     # raw cost_analysis undercounts by the trip count — the bug this
     # module exists to fix
-    raw = comp.cost_analysis()["flops"]
+    raw = analysis.cost_analysis_dict(comp)["flops"]
     assert raw < expected / 4
 
 

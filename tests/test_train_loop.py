@@ -13,11 +13,14 @@ SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 
 
 def test_loss_decreases(tmp_path):
-    out = train("smollm-135m", steps=18, batch=4, seq_len=32,
-                ckpt_dir=str(tmp_path), ckpt_every=50, lr=1e-3)
+    """The synthetic stream has learnable bigram structure (see
+    data/pipeline.py), so cross-entropy must drop below its t=0 plateau
+    of ~log(vocab) within a few dozen steps."""
+    out = train("smollm-135m", steps=40, batch=4, seq_len=32,
+                ckpt_dir=str(tmp_path), ckpt_every=100, lr=3e-3)
     first = np.mean(out["losses"][:4])
     last = np.mean(out["losses"][-4:])
-    assert last < first, (first, last)
+    assert last < first - 0.05, (first, last)
 
 
 def test_restart_is_bit_exact(tmp_path):
