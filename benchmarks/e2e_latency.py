@@ -3,19 +3,25 @@
 Compares the three conv-stack backends of ``models.cnn.forward_spectral``
 — pure-jnp einsum oracle, staged Pallas (3 pallas_calls/layer with
 spectral intermediates round-tripping through HBM), and the fused single
-pallas_call — and emits ``BENCH_e2e.json`` with:
+pallas_call executing a compile-once ``core.plan.NetworkPlan`` — and
+emits ``BENCH_e2e.json`` with:
 
   * wall-clock latency at batch 1 and batch 8 (smoke VGG16 by default;
     the Pallas kernels run interpret-mode off-TPU, so off-TPU wall time
     is a correctness-path trend signal, not a perf claim — the analytic
-    HBM/roofline numbers below are the hardware-portable signal),
-  * per-layer kernel-launch counts (fused: 1, staged: 3) and analytic
-    HBM bytes of the tuned fused kernel vs the ``output_stationary``
-    prediction of ``dataflow.tpu_flow_cost`` for the staged Hadamard —
-    fused must be <= (no spectral intermediates in HBM),
-  * numerical parity of the fused kernel against the *spatial* oracle on
-    every full-resolution VGG16 layer at batch 1 (alpha = 1, unpruned,
-    so spectral == spatial up to fp error).
+    HBM/roofline numbers below are the hardware-portable signal), plus
+    the one-off plan-construction time (everything per-layer is derived
+    there, never inside the jitted forward),
+  * per-layer kernel-launch counts (fused: 1, staged: 3), analytic HBM
+    bytes of the tuned fused kernel (sparse-aware, alpha = 4) vs the
+    dense fused path at the same configuration — kernel bytes drop by
+    ~alpha — and vs the ``output_stationary`` staged-Hadamard prediction
+    of ``dataflow.tpu_flow_cost``, plus the Eq-14 mean PE utilization of
+    each layer's Alg-2 schedule (from the plan),
+  * numerical parity of the fused kernel against the *spatial* oracle
+    (alpha = 1, unpruned) and against the sparse-aware einsum oracle
+    with the bias+ReLU epilogue fused in-kernel (alpha = 4) on every
+    full-resolution VGG16 layer at batch 1.
 
   PYTHONPATH=src python -m benchmarks.e2e_latency [--full] [--json OUT]
 """
@@ -47,37 +53,37 @@ def _time(fn, iters: int = 3) -> float:
 def latency_table(cfg, batches=(1, 8), backends=("einsum", "pallas_staged",
                                                  "pallas_fused"),
                   iters: int = 3) -> dict:
-    from repro.core import autotune
+    from repro.core.plan import build_network_plan
     from repro.models import cnn
 
     key = jax.random.PRNGKey(0)
     params = cnn.init(key, cfg)
-    sks = cnn.transform_kernels(params, cfg)
     out: dict = {}
     for batch in batches:
-        tuning = autotune.autotune_network(cfg.layers, cfg.fft_size,
-                                           cfg.alpha, batch=batch)
+        t0 = time.perf_counter()
+        plan = build_network_plan(params, cfg, batch=batch)
+        plan_s = time.perf_counter() - t0
         x = jax.random.normal(key, (batch, 3, cfg.image_size,
                                     cfg.image_size), jnp.float32)
-        row = {}
+        row = {"plan_build_ms": 1e3 * plan_s}
         for backend in backends:
             row[f"{backend}_ms"] = 1e3 * _time(
                 lambda b=backend: cnn.forward_spectral(
-                    params, sks, cfg, x, backend=b, tuning=tuning),
+                    params, plan, x, backend=b),
                 iters=iters)
         out[f"batch{batch}"] = row
     return out
 
 
-def per_layer_traffic(layers, fft_size: int, alpha: float,
-                      batch: int = 1) -> list[dict]:
-    """Analytic per-layer HBM bytes: tuned fused kernel vs the staged
-    pipeline's output-stationary Hadamard prediction (plus the staged
-    FFT/IFFT stages' own HBM round-trips)."""
+def per_layer_traffic(plan, fft_size: int, batch: int = 1) -> list[dict]:
+    """Analytic per-layer HBM bytes from the plan's tuned fused config:
+    sparse-aware vs dense at the SAME config (the alpha saving), vs the
+    staged pipeline's output-stationary Hadamard prediction (the fusion
+    saving), plus Alg-2 PE utilization."""
     from repro.core import autotune
     from repro.core import dataflow as df
 
-    def best_staged_os(layer):
+    def best_staged_os(layer, alpha):
         """Give the staged baseline its own best block sizes under the
         SAME selection policy as the fused tuner (not a straw man)."""
         tn = autotune.autotune_layer(
@@ -87,20 +93,21 @@ def per_layer_traffic(layers, fft_size: int, alpha: float,
                                 tn.block_p, tn.block_m, tn.flow,
                                 batch=batch)
 
-    tuning = autotune.autotune_network(layers, fft_size, alpha, batch=batch)
     rows = []
-    for layer in layers:
-        tn = tuning[layer.name]
-        fused = df.tpu_fused_flow_cost(
-            layer, fft_size, alpha, tn.block_n, tn.block_p, tn.block_m,
-            tn.flow, batch=batch)
-        staged_os = best_staged_os(layer)
+    for lp in plan.layers:
+        layer, tn = lp.layer, lp.tuning
+        fa = lp.n_active_bins
+        cost = lambda a, bins: df.tpu_fused_flow_cost(
+            layer, fft_size, a, tn.block_n, tn.block_p, tn.block_m,
+            tn.flow, batch=batch, active_bins=bins)
+        fused_sparse = cost(lp.alpha, fa)
+        fused_dense = cost(1.0, None)
+        staged_os = best_staged_os(layer, lp.alpha)
         # staged pipeline additionally round-trips tiles through the
         # separate FFT/IFFT kernels (real in, 2 f32 planes out and back)
         k2 = fft_size * fft_size
         t = layer.tiles(fft_size) * batch
-        tile2 = layer.tile_size(fft_size) ** 2
-        fft_io = (layer.c_in * t * (tile2 + 2 * k2)
+        fft_io = (layer.c_in * t * (k2 + 2 * k2)
                   + layer.c_out * t * (2 * k2 + k2)) * 4
         rows.append({
             "layer": layer.name,
@@ -109,13 +116,24 @@ def per_layer_traffic(layers, fft_size: int, alpha: float,
             "flow": tn.flow,
             "block_n": tn.block_n, "block_m": tn.block_m,
             "block_p": tn.block_p,
-            "fused_hbm_bytes": fused["hbm_bytes"],
+            "alpha": lp.alpha,
+            "nnz": lp.kernels.nnz,
+            "active_bins": fa,
+            "pe_utilization": lp.pe_utilization,
+            "schedule_cycles": lp.schedule_cycles,
+            "fused_hbm_bytes": fused_sparse["hbm_bytes"],
+            "fused_hbm_bytes_dense": fused_dense["hbm_bytes"],
+            "kernel_hbm_bytes": fused_sparse["kernel_hbm_bytes"],
+            "kernel_hbm_bytes_dense": fused_dense["kernel_hbm_bytes"],
+            "kernel_bytes_reduction": (
+                fused_dense["kernel_hbm_bytes"]
+                / fused_sparse["kernel_hbm_bytes"]),
             "staged_os_hadamard_hbm_bytes": staged_os["hbm_bytes"],
             "staged_fft_io_hbm_bytes": float(fft_io),
             "fused_le_staged_os": bool(
-                fused["hbm_bytes"] <= staged_os["hbm_bytes"]),
-            "fused_predicted_us": 1e6 * max(fused["hbm_s"],
-                                            fused["compute_s"]),
+                fused_sparse["hbm_bytes"] <= staged_os["hbm_bytes"]),
+            "fused_predicted_us": 1e6 * max(fused_sparse["hbm_s"],
+                                            fused_sparse["compute_s"]),
             "staged_hadamard_predicted_us": 1e6 * max(staged_os["hbm_s"],
                                                       staged_os["compute_s"]),
         })
@@ -154,9 +172,47 @@ def fused_parity_vs_spatial(layers, fft_size: int, batch: int = 1,
             "passes_1e-3": bool(worst <= 1e-3)}
 
 
+def fused_sparse_parity_vs_oracle(layers, fft_size: int, alpha: float = 4.0,
+                                  batch: int = 1, seed: int = 0) -> dict:
+    """Acceptance check: the fused-sparse backend (active-bin compaction
+    + in-kernel bias+ReLU epilogue) matches the sparse-aware einsum
+    oracle to <= 1e-4 on every full-resolution VGG16 layer."""
+    from repro.core import autotune, sparse as sp
+    from repro.core import spectral as spec
+    from repro.kernels.fused_spectral_conv import fused_spectral_conv2d
+
+    rng = np.random.default_rng(seed)
+    per_layer = {}
+    worst = 0.0
+    for layer in layers:
+        x = jnp.asarray(rng.standard_normal(
+            (batch, layer.c_in, layer.h_in, layer.w_in)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal(
+            (layer.c_out, layer.c_in, layer.ksize, layer.ksize))
+            * (2.0 / (layer.c_in * layer.ksize ** 2)) ** 0.5, jnp.float32)
+        b = jnp.asarray(0.1 * rng.standard_normal(layer.c_out), jnp.float32)
+        geo = spec.make_geometry(layer.h_in, layer.w_in, layer.ksize,
+                                 fft_size, layer.pad)
+        sk = sp.prune_magnitude(spec.spectral_kernel(w, fft_size), alpha)
+        tn = autotune.autotune_layer(layer, fft_size, alpha, batch=batch)
+        y = fused_spectral_conv2d(x, sk, geo, bias=b, relu=True,
+                                  **tn.kwargs())
+        y_ref = jax.nn.relu(
+            spec.spectral_conv2d_pretransformed(x, sk, geo)
+            + b[None, :, None, None])
+        err = float(jnp.abs(y - y_ref).max())
+        per_layer[layer.name] = err
+        worst = max(worst, err)
+    return {"batch": batch, "alpha": alpha, "epilogue": "bias+relu",
+            "max_abs_err": worst, "per_layer": per_layer,
+            "passes_1e-4": bool(worst <= 1e-4)}
+
+
 def main() -> None:
     from repro.configs import vgg16_spectral
     from repro.core import dataflow as df
+    from repro.core.plan import build_network_plan
+    from repro.models import cnn
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="BENCH_e2e.json",
@@ -175,7 +231,8 @@ def main() -> None:
         "alpha": 4.0,
     }
 
-    print("[1/3] latency: oracle vs staged Pallas vs fused Pallas")
+    print("[1/4] latency: oracle vs staged Pallas vs fused Pallas "
+          "(plan built once per batch)")
     report["latency"] = {"smoke": latency_table(
         vgg16_spectral.SMOKE, iters=args.iters)}
     if args.full:
@@ -186,31 +243,63 @@ def main() -> None:
             pretty = ", ".join(f"{k}={v:.1f}" for k, v in row.items())
             print(f"      {scale}/{b}: {pretty}")
 
-    print("[2/3] per-layer launches + analytic HBM traffic (full VGG16)")
-    layer_rows = per_layer_traffic(df.VGG16_LAYERS, 8, 4.0, batch=1)
+    print("[2/4] full-VGG16 NetworkPlan (compile once: prune + Alg 2 + "
+          "compaction + autotune)")
+    t0 = time.perf_counter()
+    params_full = cnn.init(jax.random.PRNGKey(0), vgg16_spectral.CONFIG)
+    plan_full = build_network_plan(params_full, vgg16_spectral.CONFIG,
+                                   batch=1)
+    report["plan_build_s"] = time.perf_counter() - t0
+    print(f"      built in {report['plan_build_s']:.1f}s")
+
+    print("[3/4] per-layer launches + analytic HBM traffic "
+          "(sparse vs dense vs staged) + Alg-2 PE utilization")
+    layer_rows = per_layer_traffic(plan_full, 8, batch=1)
     report["layers"] = layer_rows
     tot_fused = sum(r["fused_hbm_bytes"] for r in layer_rows)
+    tot_fused_dense = sum(r["fused_hbm_bytes_dense"] for r in layer_rows)
     tot_staged = sum(r["staged_os_hadamard_hbm_bytes"]
                      + r["staged_fft_io_hbm_bytes"] for r in layer_rows)
+    tot_k_sparse = sum(r["kernel_hbm_bytes"] for r in layer_rows)
+    tot_k_dense = sum(r["kernel_hbm_bytes_dense"] for r in layer_rows)
+    mus = [r["pe_utilization"] for r in layer_rows
+           if r["pe_utilization"] is not None]
     report["totals"] = {
         "fused_hbm_mb": tot_fused / 1e6,
+        "fused_dense_hbm_mb": tot_fused_dense / 1e6,
         "staged_hbm_mb": tot_staged / 1e6,
-        "hbm_reduction_pct": 100 * (1 - tot_fused / tot_staged),
+        "hbm_reduction_vs_staged_pct": 100 * (1 - tot_fused / tot_staged),
+        "kernel_hbm_mb": tot_k_sparse / 1e6,
+        "kernel_dense_hbm_mb": tot_k_dense / 1e6,
+        "kernel_bytes_reduction": tot_k_dense / tot_k_sparse,
+        "mean_pe_utilization": float(np.mean(mus)) if mus else None,
         "launches_fused": FUSED_LAUNCHES_PER_LAYER * len(layer_rows),
         "launches_staged": STAGED_LAUNCHES_PER_LAYER * len(layer_rows),
         "all_layers_fused_le_staged_os": all(
             r["fused_le_staged_os"] for r in layer_rows),
     }
     t = report["totals"]
-    print(f"      fused {t['fused_hbm_mb']:.1f} MB vs staged "
+    print(f"      fused {t['fused_hbm_mb']:.1f} MB (dense "
+          f"{t['fused_dense_hbm_mb']:.1f} MB) vs staged "
           f"{t['staged_hbm_mb']:.1f} MB HBM "
-          f"({t['hbm_reduction_pct']:.0f}% less), launches "
+          f"({t['hbm_reduction_vs_staged_pct']:.0f}% less than staged); "
+          f"kernel bytes {t['kernel_hbm_mb']:.1f} MB vs dense "
+          f"{t['kernel_dense_hbm_mb']:.1f} MB "
+          f"({t['kernel_bytes_reduction']:.1f}x ~= alpha); mean PE util "
+          f"{t['mean_pe_utilization']:.1%}; launches "
           f"{t['launches_fused']} vs {t['launches_staged']}")
 
-    print("[3/3] fused vs spatial oracle parity (full VGG16, batch 1)")
+    print("[4/4] parity on full VGG16 (batch 1): fused vs spatial "
+          "(alpha=1) and fused-sparse+epilogue vs einsum oracle (alpha=4)")
     report["parity"] = fused_parity_vs_spatial(df.VGG16_LAYERS, 8, batch=1)
-    print(f"      max abs err {report['parity']['max_abs_err']:.2e} "
+    print(f"      dense vs spatial: max abs err "
+          f"{report['parity']['max_abs_err']:.2e} "
           f"(<= 1e-3: {report['parity']['passes_1e-3']})")
+    report["parity_sparse"] = fused_sparse_parity_vs_oracle(
+        df.VGG16_LAYERS, 8, alpha=4.0, batch=1)
+    print(f"      sparse+epilogue vs oracle: max abs err "
+          f"{report['parity_sparse']['max_abs_err']:.2e} "
+          f"(<= 1e-4: {report['parity_sparse']['passes_1e-4']})")
 
     with open(args.json, "w") as f:
         json.dump(report, f, indent=2)

@@ -1,9 +1,12 @@
 """End-to-end sparse spectral CNN inference (the paper's pipeline).
 
-Runs the (reduced) VGG16-family spectral CNN: offline kernel transform +
-pruning, Alg-1 dataflow plan (FPGA model), Alg-1-on-TPU fused-kernel
-autotune, Alg-2 schedules, then batched inference through the selected
-backend, validating the spectral path against the dense spatial oracle.
+Runs the (reduced) VGG16-family spectral CNN the compile-once way:
+``build_network_plan`` performs ALL offline work in one pass — kernel
+transform + per-layer pruning, Alg-2 schedules + active-bin compaction,
+Alg-1-on-TPU fused-kernel autotune, fused-epilogue wiring — and the
+resulting NetworkPlan is then reused across every inference call, which
+is exactly what makes repeated calls hit the jit cache (call 2 is
+orders of magnitude faster than call 1).
 
   PYTHONPATH=src python examples/spectral_cnn_inference.py [--full]
       [--backend einsum|pallas_staged|pallas_fused]
@@ -14,10 +17,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import vgg16_spectral
-from repro.core import autotune, optimizer, scheduler
+from repro.core import optimizer
+from repro.core.plan import build_network_plan
 from repro.models import cnn
 
 
@@ -29,52 +32,63 @@ def main() -> None:
     ap.add_argument("--backend", default="einsum", choices=cnn.BACKENDS,
                     help="conv-stack implementation (pallas_* run "
                     "interpret-mode off-TPU)")
+    ap.add_argument("--calls", type=int, default=3,
+                    help="inference calls against the same plan")
     args = ap.parse_args()
     cfg = vgg16_spectral.CONFIG if args.full else vgg16_spectral.SMOKE
 
     key = jax.random.PRNGKey(0)
     params = cnn.init(key, cfg)
-    print(f"[1/5] transform + prune kernels (K={cfg.fft_size}, "
-          f"alpha={cfg.alpha})")
-    sks = cnn.transform_kernels(params, cfg)
 
-    print("[2/5] Alg 1 dataflow plan (FPGA cost model)")
-    plan = optimizer.optimize(layers=list(cfg.layers)[1:],
-                              fft_size=cfg.fft_size, alpha=cfg.alpha,
-                              arch_candidates=[(9, 64)])
-    print(f"      max layer bandwidth {plan.bw_max_gbps:.2f} GB/s, "
-          f"total transfers {plan.total_transfers_words / 1e6:.1f} Mwords")
+    print("[1/4] Alg 1 dataflow plan (FPGA cost model, paper baseline)")
+    plan_fpga = optimizer.optimize(layers=list(cfg.layers)[1:],
+                                   fft_size=cfg.fft_size,
+                                   alpha=float(jnp.asarray(cfg.alpha).mean())
+                                   if not isinstance(cfg.alpha, (int, float))
+                                   else cfg.alpha,
+                                   arch_candidates=[(9, 64)])
+    print(f"      max layer bandwidth {plan_fpga.bw_max_gbps:.2f} GB/s, "
+          f"total transfers {plan_fpga.total_transfers_words / 1e6:.1f} "
+          "Mwords")
 
-    print("[3/5] Alg 1 on TPU: fused-kernel flow + block autotune")
-    tuning = autotune.autotune_network(cfg.layers, cfg.fft_size, cfg.alpha,
-                                       batch=args.batch)
-    for name in list(tuning)[:4]:
-        tn = tuning[name]
-        print(f"      {name}: {tn.flow} bn={tn.block_n} bm={tn.block_m} "
-              f"bp={tn.block_p} ({tn.hbm_bytes / 1e6:.1f} MB HBM/call)")
+    print("[2/4] build NetworkPlan ONCE (prune + Alg 2 + compaction + "
+          "Alg-1-on-TPU autotune + epilogue wiring)")
+    t0 = time.time()
+    plan = build_network_plan(params, cfg, batch=args.batch)
+    print(f"      built in {time.time() - t0:.2f}s "
+          f"(K={cfg.fft_size}, alpha={cfg.alpha})")
 
-    print("[4/5] Alg 2 schedules (PE utilization per layer)")
-    for layer, sk in list(zip(cfg.layers, sks))[1:4]:
-        mu = scheduler.simulate_layer_utilization(
-            np.asarray(sk.indices), cfg.fft_size ** 2, r=10,
-            n_par=min(64, sk.n_out), channel_sample=2)
-        print(f"      {layer.name}: mu = {mu:.1%}")
+    print("[3/4] per-layer plan: flow / nnz / active bins / Alg-2 cycles")
+    print(f"      {'layer':>9} {'flow':>18} {'blocks':>12} {'nnz':>4} "
+          f"{'Fa':>3} {'cycles':>6} {'mu':>6}")
+    for row in plan.summary():
+        blocks = f"{row['block_n']}/{row['block_m']}/{row['block_p']}"
+        mu = ("  --" if row["pe_utilization"] is None
+              else f"{row['pe_utilization']:.1%}")
+        cyc = row["schedule_cycles"] if row["schedule_cycles"] else "--"
+        print(f"      {row['layer']:>9} {row['flow']:>18} {blocks:>12} "
+              f"{row['nnz']:>4} {row['active_bins']:>3} {cyc!s:>6} {mu:>6}")
 
-    print(f"[5/5] inference (backend={args.backend})")
+    print(f"[4/4] inference x{args.calls} reusing the SAME plan "
+          f"(backend={args.backend})")
     x = jax.random.normal(key, (args.batch, 3, cfg.image_size,
                                 cfg.image_size))
-    t0 = time.time()
-    logits = cnn.forward_spectral(params, sks, cfg, x,
-                                  backend=args.backend, tuning=tuning)
-    logits.block_until_ready()
-    dt = time.time() - t0
+    logits = None
+    for i in range(args.calls):
+        t0 = time.time()
+        logits = cnn.forward_spectral(params, plan, x,
+                                      backend=args.backend)
+        logits.block_until_ready()
+        note = " (includes jit compile)" if i == 0 else " (jit cache hit)"
+        print(f"      call {i + 1}: {(time.time() - t0) * 1e3:7.0f} ms"
+              f"{note}")
     dense = cnn.forward_spatial(params, cfg, x)
     agree = float(jnp.mean(
         (jnp.argsort(logits, -1)[:, -5:] ==
          jnp.argsort(dense, -1)[:, -5:]).astype(jnp.float32)))
-    print(f"      logits {logits.shape} in {dt*1e3:.0f} ms; "
-          f"top-5 agreement with dense spatial model: {agree:.0%} "
-          f"(alpha={cfg.alpha} pruning changes logits, as in the paper)")
+    print(f"      logits {logits.shape}; top-5 agreement with dense "
+          f"spatial model: {agree:.0%} (alpha={cfg.alpha} pruning changes "
+          "logits, as in the paper)")
 
 
 if __name__ == "__main__":

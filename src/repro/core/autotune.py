@@ -22,8 +22,11 @@ only a *ranking* signal on real TPU), the top candidates by prediction
 are re-ranked by measured time, mirroring the paper's practice of
 validating Alg 1's pick against the implemented design.
 
-The per-layer result feeds ``models.cnn.forward_spectral(backend=
-"pallas_fused", tuning=...)`` and ``benchmarks/e2e_latency.py``.
+The per-layer result is baked into ``core.plan.LayerPlan`` (the
+compile-once IR ``models.cnn.forward_spectral`` executes) and feeds
+``benchmarks/e2e_latency.py``.  The cost model is sparsity-aware — see
+``autotune_layer(active_bins=...)`` — so Alg 1's choice reflects the
+kernel Alg 2 compressed.
 """
 
 from __future__ import annotations
@@ -86,6 +89,7 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
                    blocks: Sequence[int] = BLOCK_CANDIDATES,
                    hw_safe: bool = True,
                    flows: Sequence[str] = FLOWS,
+                   active_bins: int | None = None,
                    cost_fn: Callable | None = None,
                    measure_fn: Callable[[FusedTuning], float] | None = None,
                    measure_top_k: int = 3) -> FusedTuning:
@@ -93,19 +97,24 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
 
     Analytic pass: minimize the roofline latency max(hbm_s, compute_s)
     over all in-budget candidates (ties break toward fewer HBM bytes).
-    Measured pass (optional): re-rank the ``measure_top_k`` best analytic
-    candidates by ``measure_fn`` wall time.  ``hw_safe`` (default) keeps
-    only configurations the fused kernel accepts on real TPU.
-    ``cost_fn`` defaults to the fused kernel's model; pass
-    ``dataflow.tpu_flow_cost`` (with hw_safe=False) to tune the staged
-    Hadamard under the same selection policy.
+    The cost model is sparsity-aware: kernel traffic and Hadamard MACs
+    scale with nnz = K^2/alpha and the spectral-transform dims with
+    ``active_bins`` (pass the plan's compacted bin count so Alg 1 sees
+    exactly the kernel Alg 2 compressed — this is where the two
+    algorithms compose).  Measured pass (optional): re-rank the
+    ``measure_top_k`` best analytic candidates by ``measure_fn`` wall
+    time.  ``hw_safe`` (default) keeps only configurations the fused
+    kernel accepts on real TPU.  ``cost_fn`` defaults to the fused
+    kernel's model; pass ``dataflow.tpu_flow_cost`` (with hw_safe=False)
+    to tune the staged Hadamard under the same selection policy.
     """
     if cost_fn is None:
         cost_fn = df.tpu_fused_flow_cost
     scored: list[FusedTuning] = []
     for flow, bn, bm, bp in _layer_candidates(layer, fft_size, batch,
                                               blocks, hw_safe, flows):
-        c = cost_fn(layer, fft_size, alpha, bn, bp, bm, flow, batch=batch)
+        c = cost_fn(layer, fft_size, alpha, bn, bp, bm, flow, batch=batch,
+                    active_bins=active_bins)
         if c["vmem_bytes"] > vmem_budget:
             continue
         scored.append(FusedTuning(
@@ -119,7 +128,15 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
         # shrink blocks/batch before hitting that opaque error.
         flow = flows[0]
         bn = bm = bp = min(blocks)
-        c = cost_fn(layer, fft_size, alpha, bn, bp, bm, flow, batch=batch)
+        if hw_safe:
+            # keep the fallback accepted by the kernel on hardware: the
+            # RMW flows need a single p (ws) / n (is) block (see above)
+            if flow == "weight_stationary":
+                bp = layer.tiles(fft_size) * batch
+            elif flow == "input_stationary":
+                bn = layer.c_out
+        c = cost_fn(layer, fft_size, alpha, bn, bp, bm, flow, batch=batch,
+                    active_bins=active_bins)
         return FusedTuning(layer.name, flow, bn, bm, bp, c["hbm_bytes"],
                            c["vmem_bytes"],
                            max(c["hbm_s"], c["compute_s"]))
@@ -135,36 +152,52 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
 
 
 def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
-                     fft_size: int = 8, alpha: float = 4.0, *,
+                     fft_size: int = 8,
+                     alpha: "float | Sequence[float]" = 4.0, *,
                      batch: int = 1,
                      vmem_budget: int = df.TPU_VMEM_BYTES,
                      blocks: Sequence[int] = BLOCK_CANDIDATES,
                      hw_safe: bool = True,
+                     active_bins: dict[str, int] | None = None,
                      measure: bool = False,
                      interpret: bool | None = None
                      ) -> dict[str, FusedTuning]:
-    """Alg-1-on-TPU over a conv stack -> {layer name: FusedTuning}."""
+    """Alg-1-on-TPU over a conv stack -> {layer name: FusedTuning}.
+
+    ``alpha`` may be a scalar or a per-layer sequence (the paper prunes
+    layers non-uniformly); ``active_bins`` optionally maps layer name to
+    the compacted bin count Fa realized by that layer's pruned kernels.
+    """
+    from repro.core.sparse import per_layer_alphas
+
+    layers = list(layers)
+    alphas = per_layer_alphas(alpha, len(layers))
     plan: dict[str, FusedTuning] = {}
-    for layer in layers:
+    for layer, a in zip(layers, alphas):
         measure_fn = None
         if measure:
-            measure_fn = _make_measure_fn(layer, fft_size, alpha, batch,
+            measure_fn = _make_measure_fn(layer, fft_size, a, batch,
                                           interpret)
         plan[layer.name] = autotune_layer(
-            layer, fft_size, alpha, batch=batch, vmem_budget=vmem_budget,
-            blocks=blocks, hw_safe=hw_safe, measure_fn=measure_fn)
+            layer, fft_size, a, batch=batch, vmem_budget=vmem_budget,
+            blocks=blocks, hw_safe=hw_safe,
+            active_bins=(active_bins or {}).get(layer.name),
+            measure_fn=measure_fn)
     return plan
 
 
 def _make_measure_fn(layer: df.ConvLayer, fft_size: int, alpha: float,
                      batch: int, interpret: bool | None
                      ) -> Callable[[FusedTuning], float]:
-    """Wall-clock one fused pallas_call on synthetic layer data."""
+    """Wall-clock one fused pallas_call on synthetic layer data, pruned
+    to ``alpha`` so the measured workload (active-bin compaction
+    included) is the one the plan will execute."""
     import time
 
     import jax
     import jax.numpy as jnp
 
+    from repro.core import sparse as sp
     from repro.core import spectral as spec
     from repro.kernels.fused_spectral_conv import fused_spectral_conv2d
 
@@ -176,6 +209,8 @@ def _make_measure_fn(layer: df.ConvLayer, fft_size: int, alpha: float,
     geo = spec.make_geometry(layer.h_in, layer.w_in, layer.ksize, fft_size,
                              layer.pad)
     w_f = spec.spectral_kernel(w, fft_size)
+    if alpha > 1.0:
+        w_f = sp.prune_magnitude(w_f, alpha)
 
     def measure(tn: FusedTuning, iters: int = 3) -> float:
         fn = lambda: fused_spectral_conv2d(x, w_f, geo,

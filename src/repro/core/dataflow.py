@@ -266,7 +266,8 @@ FLOWS = ("output_stationary", "weight_stationary", "input_stationary")
 def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                   block_n: int, block_p: int, block_m: int,
                   flow: str, batch: int = 1,
-                  bytes_per_el: int = 4) -> dict[str, float]:
+                  bytes_per_el: int = 4,
+                  active_bins: int | None = None) -> dict[str, float]:
     """HBM traffic + VMEM residency of one spectral-Hadamard pallas_call.
 
     The Pallas kernel contracts input channels per frequency bin:
@@ -281,14 +282,15 @@ def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
       'output_stationary' (Flow opt analogue): psums accumulate in VMEM
           across the m loop; X and W each read once per (n, p) block pair.
 
-    Complex data: 2 real planes.  NOTE: the Pallas kernels stream and
-    multiply DENSE spectral planes (pruned positions stored as zeros), so
-    W traffic and FLOPs here are dense — ``alpha`` does not reduce them
-    on this path today.  The parameter is kept for signature stability;
-    the scheduled sparse kernel (and a future sparse fused kernel,
-    ROADMAP) are what turn compression into traffic/compute savings.
+    Complex data: 2 real planes.  NOTE: the *staged* Pallas kernels
+    stream and multiply DENSE spectral planes (pruned positions stored
+    as zeros), so W traffic and FLOPs here are dense — ``alpha`` /
+    ``active_bins`` are accepted for signature parity with
+    ``tpu_fused_flow_cost`` (which IS sparsity-aware) and ignored.  The
+    scheduled sparse kernel and the fused kernel's active-bin compaction
+    are what turn compression into traffic/compute savings.
     """
-    del alpha  # dense-plane streaming: compression not realized here
+    del alpha, active_bins  # dense-plane streaming: no compression here
     k2 = fft_size * fft_size
     t = layer.tiles(fft_size) * batch
     cplx = 2
@@ -326,71 +328,91 @@ def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
 def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                         block_n: int, block_p: int, block_m: int,
                         flow: str, batch: int = 1,
-                        bytes_per_el: int = 4) -> dict[str, float]:
+                        bytes_per_el: int = 4,
+                        active_bins: int | None = None) -> dict[str, float]:
     """HBM traffic + VMEM working set of ONE fused pallas_call
-    (``kernels.fused_spectral_conv``): FFT + Hadamard + IFFT in a single
-    kernel, so HBM only ever sees
+    (``kernels.fused_spectral_conv``): FFT + Hadamard + IFFT (+ fused
+    bias/ReLU epilogue) in a single kernel, so HBM only ever sees
 
-      X  spatial tiles   [S, M, P]   real,  S = tile^2, P = T * batch
-      W  spectral kernel [F, N, M]   complex, DENSE planes (pruned
-                                     positions stored as zeros — see
-                                     the ``tpu_flow_cost`` note)
-      Y  spatial tiles   [F, N, P]   real   (K x K full-conv tiles)
+      X  overlap-save windows [S, M, P]  real,  S = K^2, P = T * batch
+      W  spectral kernel  [Fa, N, M]     complex, compacted/compressed
+      Y  valid output tiles [S2, N, P]   real,  S2 = tile^2
 
     — the complex spectral intermediates X~/Y~ of the staged path
-    (``tpu_flow_cost``'s x/y terms) never leave VMEM.  Re-read factors
-    follow the grid iteration order of each flow:
+    (``tpu_flow_cost``'s x/y terms) never leave VMEM, and the post-conv
+    elementwise epilogue adds no traffic at all.
+
+    Sparsity (Alg 1 meets Alg 2): kernel bytes and Hadamard MACs scale
+    with nnz = K^2/alpha — the paper streams kernels in compressed
+    (value, index) form and the schedule executes only non-zeros.  The
+    spectral-transform dims scale with ``active_bins`` (Fa <= K^2, the
+    bin-granular compaction the TPU kernel actually realizes; pass the
+    plan's padded count, default dense).  The nnz-granular Hadamard
+    saving is fully realized by the scheduled sparse kernel and, on the
+    fused path, down to active-bin granularity — the residual gap is the
+    price of MXU-dense GEMMs and is visible here as
+    ``kernel_hbm_bytes`` (nnz-scaled) vs FFT flops (Fa-scaled).
+
+    Re-read factors follow the grid iteration order of each flow:
 
       'output_stationary': psums in VMEM scratch; X re-read per n block,
           W re-read per p block, Y written exactly once.
-      'weight_stationary' (Flow #1): W read once; X re-read per n block;
-          real psum tiles RMW'd once per m block (2*gm - 1 passes).
-      'input_stationary'  (Flow #2): X read once; W re-read per p block;
-          same psum RMW traffic.
+      'weight_stationary' (Flow #1, reuse kernels): W read once; X
+          re-read per n block; real psum tiles RMW'd once per m block
+          (2*gm - 1 passes).
+      'input_stationary'  (Flow #2, reuse activations): X read once; W
+          re-read per p block; same psum RMW traffic.
     """
-    del alpha  # dense-plane streaming: compression not realized here
     k2 = fft_size * fft_size
     tile = layer.tile_size(fft_size)
     t = layer.tiles(fft_size) * batch
     cplx = 2
+    nnz = max(1, int(round(k2 / alpha)))
+    fa = k2 if active_bins is None else max(1, min(int(active_bins), k2))
     gn = max(1, _ceil(layer.c_out, block_n))
     gm = max(1, _ceil(layer.c_in, block_m))
     gp = max(1, _ceil(t, block_p))
-    x_bytes = layer.c_in * tile * tile * t * bytes_per_el
-    w_bytes = layer.c_out * layer.c_in * k2 * cplx * bytes_per_el
-    y_bytes = layer.c_out * k2 * t * bytes_per_el
+    s = k2                   # overlap-save: K x K input windows
+    s2 = tile * tile         # only the valid rows are written back
+    x_bytes = layer.c_in * s * t * bytes_per_el
+    w_bytes = layer.c_out * layer.c_in * nnz * cplx * bytes_per_el
+    y_bytes = layer.c_out * s2 * t * bytes_per_el
 
     if flow == "output_stationary":
         hbm = x_bytes * gn + w_bytes * gp + y_bytes
+        w_hbm = w_bytes * gp
     elif flow == "weight_stationary":
         hbm = x_bytes * gn + w_bytes + y_bytes * (2 * gm - 1)
+        w_hbm = w_bytes
     elif flow == "input_stationary":
         hbm = x_bytes + w_bytes * gp + y_bytes * (2 * gm - 1)
+        w_hbm = w_bytes * gp
     else:
         raise ValueError(flow)
 
     bn = min(block_n, layer.c_out)
     bm = min(block_m, layer.c_in)
     bp = min(block_p, t)
-    s = tile * tile
     # Streamed blocks are double-buffered by the Pallas pipeline (x2);
     # the DFT operators, the in-flight spectral blocks and the psum
-    # scratch are single-copy VMEM residents.
-    vmem = (2 * (s * bm * bp                       # X tile block
-                 + cplx * k2 * bn * bm             # W block (re+im)
-                 + k2 * bn * bp)                   # Y output block
-            + cplx * k2 * bm * bp                  # X~ in flight
-            + 2 * cplx * k2 * bn * bp              # Y~ psum / Karatsuba
-            + k2 * s + 2 * k2 * k2                 # DFT / IDFT operators
+    # scratch are single-copy VMEM residents.  Spectral dims are Fa.
+    vmem = (2 * (s * bm * bp                       # X window block
+                 + cplx * fa * bn * bm             # W block (re+im)
+                 + s2 * bn * bp)                   # Y output block
+            + cplx * fa * bm * bp                  # X~ in flight
+            + 2 * cplx * fa * bn * bp              # Y~ psum / Karatsuba
+            + 2 * fa * s + 2 * s2 * fa             # DFT / IDFT operators
             ) * bytes_per_el
 
-    had_flops = 8 * t * k2 * layer.c_in * layer.c_out
-    fft_flops = 2 * 2 * k2 * s * layer.c_in * t * (gn if flow != "input_stationary" else 1)
+    had_flops = 8 * t * nnz * layer.c_in * layer.c_out
+    fft_flops = (2 * 2 * fa * s * layer.c_in * t
+                 * (gn if flow != "input_stationary" else 1))
     ifft_passes = 1 if flow == "output_stationary" else gm
-    ifft_flops = 2 * 2 * k2 * k2 * layer.c_out * t * ifft_passes
+    ifft_flops = 2 * 2 * s2 * fa * layer.c_out * t * ifft_passes
     flops = had_flops + fft_flops + ifft_flops
     return {
         "hbm_bytes": float(hbm),
+        "kernel_hbm_bytes": float(w_hbm),
         "vmem_bytes": float(vmem),
         "flops": float(flops),
         "hbm_s": float(hbm) / TPU_HBM_GBPS,

@@ -1,0 +1,229 @@
+"""Compile-once network-plan IR: everything the forward pass needs,
+precomputed.
+
+The paper's headline result comes from *composing* its three
+contributions — per-layer flexible dataflow (Alg 1), kernel compression
+(SPEC2-style pruning), and conflict-free scheduling of the sparse
+kernels (Alg 2 / Fig 6).  On the FPGA that composition happens at
+synthesis time: the host compiles per-layer configurations once and the
+accelerator just executes them.  This module is the TPU analogue — a
+small IR built once, offline, and executed by every backend of
+``models.cnn.forward_spectral`` without re-deriving anything per call:
+
+  LayerPlan   one conv layer's precompiled state:
+    * tile geometry (``SpectralGeometry``, overlap-save),
+    * pruned ``SparseSpectralKernels`` (per-layer alpha),
+    * the active-frequency-bin set the exact-cover schedule touches
+      (== the union of non-zero kernel bins, see
+      ``scheduler.active_bins_from_tables``) with the compacted kernel
+      planes and restricted DFT operators derived from it,
+    * the autotuned (flow, block_n, block_m, block_p) from Alg-1-on-TPU
+      (``core.autotune``), costed sparsity-aware so Alg 1 sees the
+      kernel Alg 2 compressed,
+    * a fused epilogue spec (bias + ReLU inside the kernel flush,
+      2x2-max-pool flag for the spatial stage that follows),
+    * sampled Alg-2 schedule statistics (cycles, Eq-14 PE utilization).
+
+  NetworkPlan  the per-layer plans plus the FC-head bookkeeping.
+
+Plan construction is host-side numpy/python and happens exactly once;
+the jitted forward path (``kernels.fused_spectral_conv.execute_layer_plan``)
+only consumes device arrays and static metadata, so repeated calls hit
+the jit cache directly — no schedule, pruning, compaction, autotune or
+geometry work ever runs inside (or between) jitted steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune as at
+from repro.core import dataflow as df
+from repro.core import scheduler as sch
+from repro.core import sparse as sp
+from repro.core import spectral as spec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """Post-conv elementwise work fused into (bias, relu) or scheduled
+    right after (pool) the conv kernel."""
+
+    bias: bool = True
+    relu: bool = True
+    pool: bool = False       # 2x2 max-pool follows this layer (spatial)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LayerPlan:
+    """Precompiled state for one spectral conv layer (see module doc)."""
+
+    layer: df.ConvLayer
+    geo: spec.SpectralGeometry
+    kernels: sp.SparseSpectralKernels
+    alpha: float
+    tuning: at.FusedTuning
+    epilogue: EpilogueSpec
+    bias: Array                       # [1, N] f32 (zeros when no bias)
+    active: np.ndarray | None         # compacted bin set; None = dense
+    wr: Array                         # [Fa, N, M] f32 kernel planes
+    wi: Array
+    dfr: Array                        # [Fa, S]  forward DFT rows
+    dfi: Array
+    dvr: Array                        # [S2, Fa] inverse DFT (valid rows)
+    dvi: Array
+    schedule_cycles: int | None       # sampled Alg-2 stats (None: skipped)
+    pe_utilization: float | None      # Eq 14, sampled
+
+    @property
+    def n_active_bins(self) -> int:
+        k2 = self.geo.fft_size ** 2
+        return k2 if self.active is None else len(self.active)
+
+    def stats(self) -> dict:
+        """Per-layer summary row (example / benchmark reporting)."""
+        return {
+            "layer": self.layer.name,
+            "alpha": self.alpha,
+            "nnz": self.kernels.nnz,
+            "active_bins": self.n_active_bins,
+            "flow": self.tuning.flow,
+            "block_n": self.tuning.block_n,
+            "block_m": self.tuning.block_m,
+            "block_p": self.tuning.block_p,
+            "hbm_bytes": self.tuning.hbm_bytes,
+            "schedule_cycles": self.schedule_cycles,
+            "pe_utilization": self.pe_utilization,
+            "pool": self.epilogue.pool,
+        }
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class NetworkPlan:
+    """The compile-once artifact ``models.cnn.forward_spectral`` executes."""
+
+    name: str
+    fft_size: int
+    batch: int                        # batch the autotune assumed
+    layers: tuple[LayerPlan, ...]
+
+    @property
+    def tuning(self) -> dict[str, at.FusedTuning]:
+        return {lp.layer.name: lp.tuning for lp in self.layers}
+
+    def summary(self) -> list[dict]:
+        return [lp.stats() for lp in self.layers]
+
+
+def _sampled_schedule_stats(sk: sp.SparseSpectralKernels, k2: int, *,
+                            r: int, n_par: int, channel_sample: int,
+                            ) -> tuple[int, float, np.ndarray]:
+    """Run Alg 2 on a bounded sample of (group, channel) pairs; return
+    (total cycles, Eq-14 utilization, bins the sampled schedules touch).
+    The full-layer active set is the union over ALL kernels — equal to
+    the union of schedule-served bins by the exact-cover property (every
+    non-zero served exactly once; ``scheduler.active_bins_from_tables``
+    is the table-level statement of the same fact, unit-tested) — so the
+    sample's bins are always a subset of ``sk.active_bins``."""
+    idx = np.asarray(sk.indices)
+    n_out, c_in, _ = idx.shape
+    chans = np.linspace(0, c_in - 1, min(channel_sample, c_in)).astype(int)
+    group = slice(0, min(n_par, n_out))
+    total_ops = 0
+    total_cycles = 0
+    n_pe = group.stop
+    bins: set[int] = set()
+    for m in np.unique(chans):
+        s = sch.schedule_exact_cover(idx[group, m, :], k2, r)
+        total_ops += s.total_ops
+        total_cycles += s.n_cycles
+        for _, fs in s.cycles:
+            bins.update(fs.tolist())
+    mu = total_ops / max(1, total_cycles * n_pe)
+    return total_cycles, mu, np.asarray(sorted(bins), np.int64)
+
+
+def build_network_plan(params: dict, cfg, *,
+                       batch: int = 1,
+                       prune: str = "magnitude",
+                       vmem_budget: int = df.TPU_VMEM_BYTES,
+                       blocks: Sequence[int] = at.BLOCK_CANDIDATES,
+                       hw_safe: bool = True,
+                       schedule: bool = True,
+                       schedule_r: int = 10,
+                       schedule_n_par: int = 64,
+                       schedule_channel_sample: int = 2,
+                       measure: bool = False,
+                       interpret: bool | None = None) -> NetworkPlan:
+    """Compile the whole conv stack once (see module docstring).
+
+    ``cfg`` is duck-typed on ``layers`` / ``fft_size`` / ``alpha`` /
+    ``pool_after`` / ``name`` (``models.cnn.SpectralCNNConfig``);
+    ``cfg.alpha`` may be a scalar or a per-layer sequence.  ``params``
+    supplies spatial conv weights + biases (``models.cnn.init``);
+    kernels are spectrally transformed and pruned here — the paper's
+    offline path — and the per-layer bias is baked into the plan for the
+    fused epilogue.
+    """
+    prune_fn = {"magnitude": sp.prune_magnitude,
+                "random": sp.prune_random}[prune]
+    layers = list(cfg.layers)
+    alphas = sp.per_layer_alphas(cfg.alpha, len(layers))
+    pool_after = getattr(cfg, "pool_after", frozenset())
+    k2 = cfg.fft_size * cfg.fft_size
+
+    plans: list[LayerPlan] = []
+    for layer, conv, alpha in zip(layers, params["convs"], alphas):
+        geo = spec.make_geometry(layer.h_in, layer.w_in, layer.ksize,
+                                 cfg.fft_size, layer.pad)
+        w_f = spec.spectral_kernel(conv["w"], cfg.fft_size)
+        sk = prune_fn(w_f, alpha)
+
+        cycles = mu = None
+        if schedule and alpha > 1.0:
+            cycles, mu, sampled_bins = _sampled_schedule_stats(
+                sk, k2, r=schedule_r, n_par=schedule_n_par,
+                channel_sample=schedule_channel_sample)
+            full = np.asarray(sk.active_bins)
+            assert np.isin(sampled_bins, full).all(), \
+                "schedule touched a bin outside the pruned kernel support"
+
+        active = sp.compacted_active_bins(sk)
+        wr, wi = sp.compact_planes(sk, active)
+        ops = jnp.asarray  # device placement of the numpy operators
+        dfr, dfi, dvr, dvi = (ops(a) for a in _operators(geo, active))
+
+        measure_fn = None
+        if measure:
+            measure_fn = at._make_measure_fn(layer, cfg.fft_size, alpha,
+                                             batch, interpret)
+        tuning = at.autotune_layer(
+            layer, cfg.fft_size, alpha, batch=batch,
+            vmem_budget=vmem_budget, blocks=blocks, hw_safe=hw_safe,
+            active_bins=len(active) if active is not None else None,
+            measure_fn=measure_fn)
+
+        epi = EpilogueSpec(bias=True, relu=True,
+                           pool=layer.name in pool_after)
+        bias = jnp.asarray(conv["b"], jnp.float32).reshape(1, -1)
+        plans.append(LayerPlan(
+            layer=layer, geo=geo, kernels=sk, alpha=alpha, tuning=tuning,
+            epilogue=epi, bias=bias, active=active, wr=wr, wi=wi,
+            dfr=dfr, dfi=dfi, dvr=dvr, dvi=dvi,
+            schedule_cycles=cycles, pe_utilization=mu))
+    return NetworkPlan(name=getattr(cfg, "name", "spectral-cnn"),
+                       fft_size=cfg.fft_size, batch=batch,
+                       layers=tuple(plans))
+
+
+def _operators(geo: spec.SpectralGeometry, active: np.ndarray | None):
+    from repro.kernels.fused_spectral_conv import overlap_save_operators
+    key = tuple(int(a) for a in active) if active is not None else None
+    return overlap_save_operators(geo.fft_size, geo.ksize, key)

@@ -304,6 +304,25 @@ def build_tables(sched: Schedule, kernel_values: np.ndarray,
     return ScheduleTables(index_table, sel, valid, values, out_index)
 
 
+def active_bins_from_tables(tables: "ScheduleTables | list[ScheduleTables]"
+                            ) -> np.ndarray:
+    """Frequency bins the schedule ever accumulates into.
+
+    Because the schedule is an exact cover (every non-zero served exactly
+    once, ``verify_schedule``), this union over valid ``out_index``
+    entries equals the union of non-zero bins of the scheduled kernels —
+    it is the bin set the fused kernel's active-bin compaction
+    (``core.plan`` / ``kernels.fused_spectral_conv``) may restrict the
+    spectral GEMM to.
+    """
+    if isinstance(tables, ScheduleTables):
+        tables = [tables]
+    bins: set[int] = set()
+    for tb in tables:
+        bins.update(np.unique(tb.out_index[tb.valid]).tolist())
+    return np.asarray(sorted(bins), np.int64)
+
+
 def execute_tables(tables: ScheduleTables, x_tile: np.ndarray) -> np.ndarray:
     """Replay the INDEX/VALUE tables against one spectral input tile.
 

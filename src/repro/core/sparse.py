@@ -20,13 +20,34 @@ consumes.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 Array = jax.Array
+
+
+def per_layer_alphas(alpha: float | Sequence[float], n_layers: int
+                     ) -> tuple[float, ...]:
+    """Resolve a compression spec to one alpha per layer.
+
+    The paper prunes layers non-uniformly (early layers tolerate less
+    compression than conv5_x); a scalar broadcasts, a sequence must match
+    the layer count exactly.
+    """
+    if isinstance(alpha, (int, float)):
+        alphas = (float(alpha),) * n_layers
+    else:
+        alphas = tuple(float(a) for a in alpha)
+        if len(alphas) != n_layers:
+            raise ValueError(
+                f"per-layer alpha needs {n_layers} entries, "
+                f"got {len(alphas)}")
+    if any(a < 1.0 for a in alphas):
+        raise ValueError(f"alpha must be >= 1, got {alphas}")
+    return alphas
 
 
 class SparseSpectralKernels(NamedTuple):
@@ -102,6 +123,49 @@ def prune_random(w_f: Array, alpha: float, seed: int = 0
     mask = np.zeros((n, m, K * K), bool)
     np.put_along_axis(mask, order[..., :nnz], True, axis=-1)
     return _finalize(w_f, mask.reshape(n, m, K, K), K * K / nnz)
+
+
+def compacted_active_bins(sk: SparseSpectralKernels, *,
+                          pad_to: int = 8,
+                          dense_threshold: float = 1.0
+                          ) -> np.ndarray | None:
+    """Frequency bins the fused Hadamard GEMM must touch, or None.
+
+    Returns the union of bins non-zero in ANY kernel, padded to a
+    multiple of ``pad_to`` rows (hardware sublane granularity; pad bins
+    carry all-zero operator rows / kernel planes so they contribute
+    nothing).  Returns None — dense fallback — when the padded count is
+    >= ``dense_threshold`` * K^2, i.e. when nnz ~= K^2 and compaction
+    buys nothing.
+    """
+    f = sk.fft_size * sk.fft_size
+    active = sk.active_bins
+    if active is None:
+        active = np.flatnonzero(
+            np.asarray(sk.mask).any(axis=(0, 1)).reshape(f))
+    active = np.asarray(active, np.int64)
+    n_pad = -len(active) % pad_to
+    if len(active) + n_pad >= dense_threshold * f:
+        return None
+    if n_pad:
+        spare = np.setdiff1d(np.arange(f), active)[:n_pad]
+        active = np.sort(np.concatenate([active, spare]))
+    return active.astype(np.int64)
+
+
+def compact_planes(sk: SparseSpectralKernels,
+                   active: np.ndarray | None) -> tuple[Array, Array]:
+    """Kernel planes for the fused kernel: complex [N, M, K, K] ->
+    (re, im) f32 [Fa, N, M], rows restricted to ``active`` bins (all K^2
+    bins when active is None)."""
+    n, m, K, _ = sk.values.shape
+    f = K * K
+    flat = sk.values.reshape(n, m, f)
+    if active is not None:
+        flat = flat[..., np.asarray(active)]
+    wr = jnp.transpose(flat.real, (2, 0, 1)).astype(jnp.float32)
+    wi = jnp.transpose(flat.imag, (2, 0, 1)).astype(jnp.float32)
+    return wr, wi
 
 
 def sparse_hadamard_reference(x_f: Array, sk: SparseSpectralKernels) -> Array:

@@ -14,6 +14,16 @@ convolution is replaced by
 Everything here is pure JAX and serves both as the production forward path
 on CPU/TPU and as the oracle for the Pallas kernels in ``repro.kernels``.
 
+Two tilings are provided.  The paper's OaA decomposition
+(``extract_tiles`` / ``overlap_add``) sums overlapping K x K output
+tiles, so per-tile outputs are *partial* until OaA completes.  The
+production forward path instead uses the dual overlap-save decomposition
+(``extract_tiles_overlapping`` / ``assemble_valid_tiles``): overlapping
+K x K *input* windows whose t x t valid outputs are complete — which is
+what lets the fused Pallas kernel apply bias + ReLU inside its flush
+step (DESIGN.md adaptation note 5).  For un-pruned kernels the two are
+numerically identical (both equal ``spatial_conv2d``).
+
 Conventions
 -----------
 * CNN "convolution" is cross-correlation; we FLIP the spatial kernel before
@@ -101,6 +111,56 @@ def extract_tiles(x: Array, geo: SpectralGeometry) -> Array:
     x = x.reshape(b, m, geo.n_tiles_h, geo.tile, geo.n_tiles_w, geo.tile)
     x = x.transpose(0, 1, 2, 4, 3, 5)
     return x.reshape(b, m, geo.n_tiles, geo.tile, geo.tile)
+
+
+def extract_tiles_overlapping(x: Array, geo: SpectralGeometry) -> Array:
+    """[B, M, H, W] -> [B, M, T, K, K] overlap-save input tiles.
+
+    Overlap-save (a.k.a. overlap-discard) is the dual of OaA: instead of
+    disjoint h' x h' tiles whose K x K full-conv outputs are summed, take
+    *overlapping* K x K input windows with stride h' starting at offset
+    -(k-1).  The K-point circular convolution of such a window with the
+    (flipped, K-padded) kernel is wraparound-free at output rows k-1..K-1,
+    and those t x t = h' x h' valid outputs are exactly the full-conv
+    canvas block at (i*h', j*h') — **complete**, with no cross-tile
+    additions pending.  That is what lets the fused kernel apply a
+    non-linear epilogue (bias + ReLU) inside its flush step: every value
+    it writes is a finished pre-activation.  The price is re-reading the
+    k-1-pixel halo between neighbouring windows ((K/h')^2 input traffic
+    instead of 1x) — the same duplicated-halo DMA the paper's FPGA input
+    loader performs.
+    """
+    b, m = x.shape[:2]
+    ov = geo.ksize - 1
+    x = jnp.pad(x, ((0, 0), (0, 0),
+                    (ov, geo.h_pad - geo.h_in), (ov, geo.w_pad - geo.w_in)))
+    ih = (np.arange(geo.n_tiles_h)[:, None] * geo.tile
+          + np.arange(geo.fft_size)[None, :])           # [n_th, K]
+    iw = (np.arange(geo.n_tiles_w)[:, None] * geo.tile
+          + np.arange(geo.fft_size)[None, :])           # [n_tw, K]
+    xt = x[:, :, ih][:, :, :, :, iw]                    # [B,M,n_th,K,n_tw,K]
+    xt = xt.transpose(0, 1, 2, 4, 3, 5)
+    return xt.reshape(b, m, geo.n_tiles, geo.fft_size, geo.fft_size)
+
+
+def assemble_valid_tiles(y_tiles: Array, geo: SpectralGeometry) -> Array:
+    """Overlap-save output assembly: [B, N, T, h', h'] valid tiles ->
+    [B, N, H_out, W_out].
+
+    Each tile's t x t block is the finished full-conv canvas block at
+    (i*h', j*h') (see ``extract_tiles_overlapping``), so assembly is a
+    pure relayout — no overlap additions — followed by the same 'same'
+    crop as ``overlap_add``.
+    """
+    b, n, t, tl, _ = y_tiles.shape
+    assert t == geo.n_tiles and tl == geo.tile
+    yt = y_tiles.reshape(b, n, geo.n_tiles_h, geo.n_tiles_w, tl, tl)
+    canvas = (yt.transpose(0, 1, 2, 4, 3, 5)
+              .reshape(b, n, geo.h_pad, geo.w_pad))
+    start = geo.ksize - 1 - geo.pad
+    h_out = geo.h_in + 2 * geo.pad - geo.ksize + 1
+    w_out = geo.w_in + 2 * geo.pad - geo.ksize + 1
+    return canvas[:, :, start:start + h_out, start:start + w_out]
 
 
 def fft_tiles(tiles: Array, geo: SpectralGeometry) -> Array:
@@ -198,12 +258,24 @@ def spectral_conv2d_pretransformed(x: Array, w_f,
     non-zero in *some* kernel — the whole-bin zero work (which the
     magnitude patterns of high-alpha layers concentrate at high
     frequencies) is skipped, so oracle benchmarks reflect sparsity.
+
+    Uses overlap-save tiling (``extract_tiles_overlapping``), the
+    repo-wide formulation since the fused-epilogue refactor: every output
+    tile is complete after the IFFT, so a bias/ReLU epilogue can follow
+    immediately.  For un-pruned kernels this equals the paper's OaA
+    formulation (and ``spatial_conv2d``) exactly; for pruned kernels the
+    two differ in where the circular wraparound of the full-support
+    spectral kernel lands (DESIGN.md adaptation note 5) — this oracle
+    defines the repo's pruned-conv semantics and the Pallas backends
+    match it bit-for-bit in structure.
     """
-    tiles = extract_tiles(x, geo)                    # [B,M,T,h',w']
-    x_f = fft_tiles(tiles, geo)                      # [B,M,T,K,K]
+    windows = extract_tiles_overlapping(x, geo)      # [B,M,T,K,K]
+    x_f = jnp.fft.fft2(windows.astype(jnp.float32))  # [B,M,T,K,K]
     y_f = _hadamard_maybe_sparse(x_f, w_f, geo)      # [B,N,T,K,K]
-    y_tiles = jnp.fft.ifft2(y_f).real
-    return overlap_add(y_tiles.astype(x.dtype), geo)
+    y_sp = jnp.fft.ifft2(y_f).real
+    ov = geo.ksize - 1
+    y_valid = y_sp[..., ov:, ov:]                    # [B,N,T,h',h']
+    return assemble_valid_tiles(y_valid.astype(x.dtype), geo)
 
 
 def _hadamard_maybe_sparse(x_f: Array, w_f, geo: SpectralGeometry) -> Array:

@@ -9,21 +9,41 @@ of exactly the off-chip communication the paper's dataflow eliminates
 buffers, touching DDR only for spatial inputs, spectral kernels and
 spatial outputs.
 
-This kernel restores that property.  Per grid step it performs, entirely
-in VMEM:
+This kernel restores that property, and (PR 3) adds the paper's other
+two contributions to the same pallas_call:
 
-  1. tile-FFT   — the DFT-matmul form of ``fft8``, collapsed to a single
-     MXU GEMM: with D = kron(W, W)[:, :t^2] ([K^2, t^2], W the K-point DFT
-     matrix restricted to the tile's t x t support),
-        X~[f, m, p] = sum_s D[f, s] x[s, m, p]
-     so the zero-padding of tiles to K x K is folded into D and the
-     spatial tiles are stored s-leading ([S, M, P]) — the contraction is
-     over the *leading* dim and needs no in-kernel transposes;
-  2. Hadamard   — the frequency-batched complex GEMM of
-     ``spectral_hadamard`` in 3-multiplication Karatsuba form,
+  * **Overlap-save tiling + fused epilogue.**  Input windows are K x K
+    with stride t = K-k+1 (``core.spectral.extract_tiles_overlapping``),
+    so every tile's t x t valid output rows are *complete* full-conv
+    results — no cross-tile Overlap-and-Add sums remain.  That makes a
+    non-linear epilogue inside the kernel mathematically exact: the
+    flush step applies bias + ReLU before the single output write, and
+    post-conv elementwise work never round-trips HBM.  The inverse
+    operator keeps only the t^2 valid rows, so output traffic *drops*
+    from K^2 to t^2 words per tile relative to the OaA formulation.
+  * **Active-frequency-bin compaction (Alg 2 meets the MXU).**  For
+    pruned kernels the spectral GEMM batch is restricted to the Fa <= K^2
+    frequency bins that are non-zero in ANY kernel — the bin set the
+    exact-cover schedule touches (``scheduler.active_bins_from_tables``;
+    by the exact-cover property it equals the union of non-zero kernel
+    bins, which ``core.plan`` precomputes).  Forward DFT rows, kernel
+    planes, Karatsuba Hadamard batch, IFFT columns and the psum scratch
+    all shrink by Fa/K^2.  When nnz ~= K^2 (padded Fa >= K^2) the caller
+    falls back to dense — compaction would buy nothing.
+
+Per grid step the kernel performs, entirely in VMEM:
+
+  1. tile-FFT   — one MXU GEMM against D = kron(W, W)[active, :]
+     ([Fa, K^2], W the K-point DFT matrix): the K x K windows are stored
+     s-leading ([S=K^2, M, P]) so the contraction is over the *leading*
+     dim and needs no in-kernel transposes;
+  2. Hadamard   — the frequency-batched complex GEMM in
+     3-multiplication Karatsuba form over the Fa active bins,
         Y~[f, n, p] = sum_m W~[f, n, m] X~[f, m, p];
-  3. IFFT      — Re(Dinv @ Y~) with Dinv = kron(Winv, Winv) [K^2, K^2],
-     writing real K x K output tiles ([S2, N, P]) for host-side OaA.
+  3. IFFT + epilogue (flush) — Re(Dinv @ Y~) with Dinv restricted to the
+     t^2 valid output rows and Fa active columns ([t^2, Fa]), then
+     y = relu(y + bias) (both optional), writing finished spatial
+     outputs for host-side relayout (``assemble_valid_tiles``).
 
 The contraction over input channels M runs across a grid dimension; the
 paper's three reuse choices map onto grid iteration orders exactly as in
@@ -37,12 +57,14 @@ consecutive grid steps):
     W~ block is constant across the inner p loop so it loads exactly
     once, but partial outputs are read-modify-written per m block.
     IFFT is linear, so partial Y~ blocks are IFFT'd eagerly and the RMW
-    traffic is *spatial* psums (K^2 real words/tile) — spectral
-    intermediates still never reach HBM.
+    traffic is *spatial* psums (t^2 real words/tile) — spectral
+    intermediates still never reach HBM.  The epilogue fires on the
+    final m visit, after the last accumulation.
   * ``input_stationary``   grid (p, m, n) (Flow #2, reuse activations):
-    the raw tile block is constant across the inner n loop and its FFT
+    the raw window block is constant across the inner n loop and its FFT
     is computed once into VMEM scratch (at n-block 0) and reused;
-    kernels re-stream per p block, same spatial-psum RMW.
+    kernels re-stream per p block, same spatial-psum RMW + final-visit
+    epilogue.
 
 Hardware caveat (Pallas TPU pipelining): reading an *output* window that
 was last written in a NON-consecutive grid step is undefined on real TPU
@@ -59,7 +81,10 @@ arbitrary blocks, as the FPGA does through DDR, needs a manual-DMA
 kernel — ROADMAP open item.)
 
 HBM traffic per flow is modeled by ``repro.core.dataflow.tpu_fused_flow_cost``
-and block sizes / flow are chosen per layer by ``repro.core.autotune``.
+(sparsity-aware since PR 3); flow/blocks are chosen per layer by
+``repro.core.autotune`` and precompiled into a ``core.plan.LayerPlan``
+whose operands ``execute_layer_plan`` consumes without re-deriving any
+of this per call.
 """
 
 from __future__ import annotations
@@ -74,41 +99,46 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
+from repro.core import sparse as sp
 from repro.core.dataflow import FLOWS
-from repro.core.spectral import (SpectralGeometry, extract_tiles,
-                                 overlap_add)
+from repro.core.spectral import (SpectralGeometry, assemble_valid_tiles,
+                                 extract_tiles_overlapping)
 from repro.kernels.fft8 import dft_matrices
 
 Array = jax.Array
 
 
 # ---------------------------------------------------------------------------
-# DFT operators in flattened (kron) form
+# DFT operators in flattened (kron) form, overlap-save + active-bin layout
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _dft_kron(fft_size: int, tile: int) -> tuple[np.ndarray, np.ndarray]:
-    """Forward 2-D DFT as one matrix on flattened t x t tiles.
+def overlap_save_operators(fft_size: int, ksize: int,
+                           active: tuple[int, ...] | None = None
+                           ) -> tuple[np.ndarray, ...]:
+    """(dfr, dfi, dvr, dvi) for the fused kernel.
 
-    D[f, s] with f = u*K + v, s = a*t + b equals W[u, a] * W[v, b]; the
-    restriction to a < t, b < t folds the zero-padding of tiles to K x K
-    into the operator.  Returns (real, imag) [K^2, t^2] f32.
+    dfr/dfi [Fa, K^2]: forward 2-D DFT on flattened K x K windows,
+        rows restricted to the active frequency bins.
+    dvr/dvi [t^2, Fa]: inverse 2-D DFT restricted to the t^2
+        wraparound-free output rows (u, v in [k-1, K)) and the active
+        columns — the only spectra Y~ can be non-zero at.
     """
     cr, ci = dft_matrices(fft_size)
     w = cr + 1j * ci
-    d = np.kron(w[:, :tile], w[:, :tile])
-    return (np.ascontiguousarray(d.real, np.float32),
-            np.ascontiguousarray(d.imag, np.float32))
-
-
-@functools.lru_cache(maxsize=None)
-def _idft_kron(fft_size: int) -> tuple[np.ndarray, np.ndarray]:
-    """Inverse 2-D DFT on flattened K x K spectra: [K^2, K^2] (re, im)."""
-    cr, ci = dft_matrices(fft_size)
-    winv = (cr - 1j * ci) / fft_size          # conj(W) / K
-    d = np.kron(winv, winv)
-    return (np.ascontiguousarray(d.real, np.float32),
-            np.ascontiguousarray(d.imag, np.float32))
+    d = np.kron(w, w)                                   # [K^2, K^2]
+    winv = (cr - 1j * ci) / fft_size                    # conj(W) / K
+    dv = np.kron(winv, winv)                            # [K^2, K^2]
+    valid = [u * fft_size + v
+             for u in range(ksize - 1, fft_size)
+             for v in range(ksize - 1, fft_size)]
+    dv = dv[valid]                                      # [t^2, K^2]
+    if active is not None:
+        a = np.asarray(active)
+        d = d[a]
+        dv = dv[:, a]
+    return tuple(np.ascontiguousarray(p, np.float32)
+                 for p in (d.real, d.imag, dv.real, dv.imag))
 
 
 # ---------------------------------------------------------------------------
@@ -117,20 +147,20 @@ def _idft_kron(fft_size: int) -> tuple[np.ndarray, np.ndarray]:
 
 def _tile_fft(x_ref, dfr_ref, dfi_ref):
     """Stage 1: one GEMM against the kron'd DFT operator.
-    [S, bm, bp] real tiles -> (re, im) [F, bm, bp] spectral planes."""
+    [S, bm, bp] real windows -> (re, im) [Fa, bm, bp] spectral planes."""
     s, bm, bp = x_ref.shape
-    f = dfr_ref.shape[0]
+    fa = dfr_ref.shape[0]
     x2 = x_ref[...].reshape(s, bm * bp)
     xfr = jnp.dot(dfr_ref[...], x2,
-                  preferred_element_type=jnp.float32).reshape(f, bm, bp)
+                  preferred_element_type=jnp.float32).reshape(fa, bm, bp)
     xfi = jnp.dot(dfi_ref[...], x2,
-                  preferred_element_type=jnp.float32).reshape(f, bm, bp)
+                  preferred_element_type=jnp.float32).reshape(fa, bm, bp)
     return xfr, xfi
 
 
 def _hadamard(wr_ref, wi_ref, xfr, xfi):
-    """Stage 2: frequency-batched Karatsuba complex GEMM.
-    W [F, bn, bm] x X~ [F, bm, bp] -> (re, im) [F, bn, bp]."""
+    """Stage 2: frequency-batched Karatsuba complex GEMM over active bins.
+    W [Fa, bn, bm] x X~ [Fa, bm, bp] -> (re, im) [Fa, bn, bp]."""
     def bmm(a, b):
         return jax.lax.dot_general(
             a, b, (((2,), (1,)), ((0,), (0,))),
@@ -144,20 +174,29 @@ def _hadamard(wr_ref, wi_ref, xfr, xfi):
 
 
 def _ifft_real(re, im, dvr_ref, dvi_ref, bn, bp):
-    """Stage 3: Re(Dinv @ Y~) -> [S2, bn, bp] real output tiles."""
-    f = re.shape[0]
+    """Stage 3: Re(Dinv @ Y~) -> [S2, bn, bp] finished spatial outputs."""
+    fa = re.shape[0]
     s2 = dvr_ref.shape[0]
-    y = (jnp.dot(dvr_ref[...], re.reshape(f, bn * bp),
+    y = (jnp.dot(dvr_ref[...], re.reshape(fa, bn * bp),
                  preferred_element_type=jnp.float32)
-         - jnp.dot(dvi_ref[...], im.reshape(f, bn * bp),
+         - jnp.dot(dvi_ref[...], im.reshape(fa, bn * bp),
                    preferred_element_type=jnp.float32))
     return y.reshape(s2, bn, bp)
 
 
+def _epilogue(y, b_ref, relu: bool):
+    """Fused bias + ReLU on [S2, bn, bp]; bias block is [1, bn]."""
+    y = y + b_ref[0][None, :, None]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
 def _kernel_os(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
-               y_ref, acc_r, acc_i, *, n_m_blocks: int):
+               b_ref, y_ref, acc_r, acc_i, *, n_m_blocks: int, relu: bool):
     """Output-stationary: psums live in VMEM scratch across the innermost
-    m grid dim; IFFT + output write happen once, at the last m block."""
+    m grid dim; IFFT + epilogue + output write happen once, at the last
+    m block."""
     gm = pl.program_id(2)
 
     @pl.when(gm == 0)
@@ -173,33 +212,27 @@ def _kernel_os(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
     @pl.when(gm == n_m_blocks - 1)
     def _flush():
         bn, bp = acc_r.shape[1], acc_r.shape[2]
-        y_ref[...] = _ifft_real(acc_r[...], acc_i[...], dvr_ref, dvi_ref,
-                                bn, bp)
+        y = _ifft_real(acc_r[...], acc_i[...], dvr_ref, dvi_ref, bn, bp)
+        y_ref[...] = _epilogue(y, b_ref, relu)
 
 
 def _kernel_ws(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
-               y_ref):
+               b_ref, y_ref, *, n_m_blocks: int, relu: bool):
     """Weight-stationary, grid (n, m, p): each m block's partial Y~ is
     IFFT'd eagerly (IFFT is linear) and the real spatial psum is read-
-    modify-written — spectral intermediates never reach HBM."""
+    modify-written — spectral intermediates never reach HBM.  The
+    epilogue fires on the final m visit, after the last accumulation."""
     gm = pl.program_id(1)
     re, im = _hadamard(wr_ref, wi_ref,
                        *_tile_fft(x_ref, dfr_ref, dfi_ref))
     bn, bp = re.shape[1], re.shape[2]
     y = _ifft_real(re, im, dvr_ref, dvi_ref, bn, bp)
-
-    @pl.when(gm == 0)
-    def _first():
-        y_ref[...] = y
-
-    @pl.when(gm > 0)
-    def _rest():
-        y_ref[...] += y
+    _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks, relu)
 
 
 def _kernel_is(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
-               y_ref, xfr_s, xfi_s):
-    """Input-stationary, grid (p, m, n): the tile block is constant
+               b_ref, y_ref, xfr_s, xfi_s, *, n_m_blocks: int, relu: bool):
+    """Input-stationary, grid (p, m, n): the window block is constant
     across the inner n loop, so its FFT is computed once (n-block 0)
     into VMEM scratch and reused — the reuse the flow is named for."""
     gm = pl.program_id(1)
@@ -214,14 +247,28 @@ def _kernel_is(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
     re, im = _hadamard(wr_ref, wi_ref, xfr_s[...], xfi_s[...])
     bn, bp = re.shape[1], re.shape[2]
     y = _ifft_real(re, im, dvr_ref, dvi_ref, bn, bp)
+    _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks, relu)
+
+
+def _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks: int,
+                              relu: bool):
+    """Spatial-psum RMW across the m grid axis, epilogue on final visit."""
+    if n_m_blocks == 1:
+        y_ref[...] = _epilogue(y, b_ref, relu)
+        return
+    last = n_m_blocks - 1
 
     @pl.when(gm == 0)
     def _first():
         y_ref[...] = y
 
-    @pl.when(gm > 0)
-    def _rest():
+    @pl.when((gm > 0) & (gm < last))
+    def _mid():
         y_ref[...] += y
+
+    @pl.when(gm == last)
+    def _last():
+        y_ref[...] = _epilogue(y_ref[...] + y, b_ref, relu)
 
 
 # ---------------------------------------------------------------------------
@@ -239,35 +286,42 @@ def _pad_axis(x: Array, axis: int, mult: int) -> Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("flow", "block_n", "block_m", "block_p", "interpret"))
-def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array, *,
+    static_argnames=("flow", "block_n", "block_m", "block_p", "relu",
+                     "interpret"))
+def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
+                            dfr: Array, dfi: Array,
+                            dvr: Array, dvi: Array, bias: Array, *,
                             flow: str = "output_stationary",
                             block_n: int = 64, block_m: int = 64,
-                            block_p: int = 128,
+                            block_p: int = 128, relu: bool = False,
                             interpret: bool = True) -> Array:
-    """FFT -> Hadamard -> IFFT in one pallas_call.
+    """FFT -> Hadamard -> IFFT (+ bias/ReLU epilogue) in one pallas_call.
 
-    xt: [S, M, P] f32   spatial tiles, s-leading (S = tile^2, P = B*T)
-    wr/wi: [F, N, M] f32 spectral kernel planes (F = K^2)
-    returns [S2, N, P] f32 real output tiles (S2 = K^2).
+    xt: [S, M, P] f32     overlap-save windows, s-leading (S = K^2,
+                          P = B*T)
+    wr/wi: [Fa, N, M] f32 spectral kernel planes on active bins
+    dfr/dfi: [Fa, S]      forward DFT rows (active bins)
+    dvr/dvi: [S2, Fa]     inverse DFT, valid rows x active columns
+                          (S2 = t^2)
+    bias: [1, N] f32      per-output-channel bias (zeros disable)
+    returns [S2, N, P] f32 finished spatial outputs (epilogue applied).
     """
     if flow not in FLOWS:
         raise ValueError(f"flow must be one of {FLOWS}")
     s, m, p = xt.shape
-    f, n, _ = wr.shape
-    k = int(round(f ** 0.5))
-    t = int(round(s ** 0.5))
-    assert k * k == f and t * t == s, (f, s)
+    fa, n, _ = wr.shape
+    s2 = dvr.shape[0]
+    assert dfr.shape == (fa, s) and dvr.shape == (s2, fa), \
+        (dfr.shape, dvr.shape, (fa, s, s2))
+    assert bias.shape == (1, n), (bias.shape, n)
 
     bn, bm, bp = min(block_n, n), min(block_m, m), min(block_p, p)
     xt_ = _pad_axis(_pad_axis(xt, 1, bm), 2, bp)
     wr_ = _pad_axis(_pad_axis(wr, 1, bn), 2, bm)
     wi_ = _pad_axis(_pad_axis(wi, 1, bn), 2, bm)
+    bias_ = _pad_axis(bias, 1, bn)
     np_, mp_, pp_ = wr_.shape[1], wr_.shape[2], xt_.shape[2]
     gn, gm, gp = np_ // bn, mp_ // bm, pp_ // bp
-
-    dfr, dfi = (jnp.asarray(a) for a in _dft_kron(k, t))
-    dvr, dvi = (jnp.asarray(a) for a in _idft_kron(k))
 
     if not interpret:
         # Pallas TPU keeps an output window only across CONSECUTIVE grid
@@ -288,30 +342,34 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array, *,
         grid = (gn, gp, gm)
         x_map = lambda a, b, c: (0, c, b)
         w_map = lambda a, b, c: (0, a, c)
+        b_map = lambda a, b, c: (0, a)
         y_map = lambda a, b, c: (0, a, b)
-        kernel = functools.partial(_kernel_os, n_m_blocks=gm)
-        scratch = [pltpu.VMEM((f, bn, bp), jnp.float32)] * 2
+        kernel = functools.partial(_kernel_os, n_m_blocks=gm, relu=relu)
+        scratch = [pltpu.VMEM((fa, bn, bp), jnp.float32)] * 2
         semantics = ("parallel", "parallel", "arbitrary")
     elif flow == "weight_stationary":
         grid = (gn, gm, gp)
         x_map = lambda a, c, b: (0, c, b)
         w_map = lambda a, c, b: (0, a, c)
+        b_map = lambda a, c, b: (0, a)
         y_map = lambda a, c, b: (0, a, b)
-        kernel = _kernel_ws
+        kernel = functools.partial(_kernel_ws, n_m_blocks=gm, relu=relu)
         scratch = []
         semantics = ("parallel", "arbitrary", "arbitrary")
     else:  # input_stationary
         grid = (gp, gm, gn)
         x_map = lambda b, c, a: (0, c, b)
         w_map = lambda b, c, a: (0, a, c)
+        b_map = lambda b, c, a: (0, a)
         y_map = lambda b, c, a: (0, a, b)
-        kernel = _kernel_is
-        scratch = [pltpu.VMEM((f, bm, bp), jnp.float32)] * 2
+        kernel = functools.partial(_kernel_is, n_m_blocks=gm, relu=relu)
+        scratch = [pltpu.VMEM((fa, bm, bp), jnp.float32)] * 2
         semantics = ("parallel", "arbitrary", "arbitrary")
 
     x_spec = pl.BlockSpec((s, bm, bp), x_map)
-    w_spec = pl.BlockSpec((f, bn, bm), w_map)
-    y_spec = pl.BlockSpec((f, bn, bp), y_map)
+    w_spec = pl.BlockSpec((fa, bn, bm), w_map)
+    b_spec = pl.BlockSpec((1, bn), b_map)
+    y_spec = pl.BlockSpec((s2, bn, bp), y_map)
     d_spec = lambda rows, cols: pl.BlockSpec(
         (rows, cols), lambda *_: (0, 0))
 
@@ -319,69 +377,117 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array, *,
         kernel,
         grid=grid,
         in_specs=[x_spec, w_spec, w_spec,
-                  d_spec(f, s), d_spec(f, s), d_spec(f, f), d_spec(f, f)],
+                  d_spec(fa, s), d_spec(fa, s),
+                  d_spec(s2, fa), d_spec(s2, fa), b_spec],
         out_specs=y_spec,
-        out_shape=jax.ShapeDtypeStruct((f, np_, pp_), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((s2, np_, pp_), jnp.float32),
         scratch_shapes=scratch,
         compiler_params=CompilerParams(
             dimension_semantics=semantics),
         interpret=interpret,
-    )(xt_.astype(jnp.float32), wr_, wi_, dfr, dfi, dvr, dvi)
+    )(xt_.astype(jnp.float32), wr_, wi_, dfr, dfi, dvr, dvi, bias_)
     return y[:, :n, :p]
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("geo", "flow", "block_n", "block_m", "block_p",
-                     "interpret"))
-def _fused_conv(x: Array, w_f: Array, *, geo: SpectralGeometry, flow: str,
+                     "relu", "interpret"))
+def _fused_conv(x: Array, wr: Array, wi: Array, dfr: Array, dfi: Array,
+                dvr: Array, dvi: Array, bias: Array, *,
+                geo: SpectralGeometry, flow: str,
                 block_n: int, block_m: int, block_p: int,
-                interpret: bool) -> Array:
-    """Jitted body: tile extraction, layout, pipeline, OaA — one compiled
-    program per (geo, flow, blocks), so the host-side relayout is not
-    re-dispatched eagerly on every forward call."""
+                relu: bool, interpret: bool) -> Array:
+    """Jitted body: overlap-save window extraction, layout, pipeline,
+    valid-tile assembly — one compiled program per (geo, flow, blocks,
+    relu), so the host-side relayout is not re-dispatched eagerly on
+    every forward call.  All spectral operands arrive precomputed (by
+    ``core.plan`` or the ad-hoc wrapper below); nothing geometric or
+    sparsity-related is derived in here."""
     b, m = x.shape[:2]
-    n, _, k, _ = w_f.shape
+    n = wr.shape[1]
 
-    tiles = extract_tiles(x, geo)                       # [B, M, T, t, t]
-    t_cnt = tiles.shape[2]
-    s = geo.tile * geo.tile
+    windows = extract_tiles_overlapping(x, geo)         # [B, M, T, K, K]
+    t_cnt = windows.shape[2]
+    s = geo.fft_size * geo.fft_size
     # s-leading layout: [S, M, B*T] — the in-kernel FFT contracts the
     # leading dim with one GEMM, no transposes on the TPU side.
-    xt = (tiles.reshape(b, m, t_cnt, s)
+    xt = (windows.reshape(b, m, t_cnt, s)
           .transpose(3, 1, 0, 2).reshape(s, m, b * t_cnt))
 
-    fdim = k * k
-    wr = jnp.transpose(w_f.real.reshape(n, m, fdim), (2, 0, 1))
-    wi = jnp.transpose(w_f.imag.reshape(n, m, fdim), (2, 0, 1))
-
     y = fused_spectral_pipeline(
-        xt, wr.astype(jnp.float32), wi.astype(jnp.float32), flow=flow,
-        block_n=block_n, block_m=block_m, block_p=block_p,
-        interpret=interpret)                            # [S2, N, B*T]
+        xt, wr, wi, dfr, dfi, dvr, dvi, bias, flow=flow,
+        block_n=block_n, block_m=block_m, block_p=block_p, relu=relu,
+        interpret=interpret)                            # [t^2, N, B*T]
 
-    y_tiles = (y.reshape(fdim, n, b, t_cnt).transpose(2, 1, 3, 0)
-               .reshape(b, n, t_cnt, k, k))
-    return overlap_add(y_tiles.astype(x.dtype), geo)
+    s2 = geo.tile * geo.tile
+    y_tiles = (y.reshape(s2, n, b, t_cnt).transpose(2, 1, 3, 0)
+               .reshape(b, n, t_cnt, geo.tile, geo.tile))
+    return assemble_valid_tiles(y_tiles.astype(x.dtype), geo)
 
 
-def fused_spectral_conv2d(x: Array, w_f: Array, geo: SpectralGeometry, *,
+def fused_spectral_conv2d(x: Array, w_f, geo: SpectralGeometry, *,
                           flow: str = "output_stationary",
                           block_n: int = 64, block_m: int = 64,
-                          block_p: int = 128,
+                          block_p: int = 128, bias: Array | None = None,
+                          relu: bool = False,
                           interpret: bool | None = None) -> Array:
     """Full spectral conv layer through the single fused pallas_call.
 
-    x: [B, M, H, W] real NCHW; w_f: complex [N, M, K, K] (possibly pruned,
-    e.g. a ``SparseSpectralKernels``, whose dense ``.values`` are used).
-    Host side does only the layout work the paper's DMA engine does:
-    tile extraction going in, Overlap-and-Add coming out.
+    x: [B, M, H, W] real NCHW; w_f: complex [N, M, K, K] dense, or a
+    ``SparseSpectralKernels`` whose active-bin set drives the spectral
+    GEMM compaction (dense fallback when nnz ~= K^2).  ``bias``/``relu``
+    select the fused epilogue.  Host side does only the layout work the
+    paper's DMA engine does: overlap-save window extraction going in,
+    valid-tile assembly coming out.
+
+    NOTE: this ad-hoc entry recomputes compaction + DFT operators per
+    call; the compile-once path is ``core.plan.build_network_plan`` +
+    ``execute_layer_plan``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if hasattr(w_f, "values"):            # SparseSpectralKernels duck-type
-        w_f = w_f.values
-    assert w_f.shape[-1] == geo.fft_size
-    return _fused_conv(x, w_f, geo=geo, flow=flow, block_n=block_n,
-                       block_m=block_m, block_p=block_p,
+        active = sp.compacted_active_bins(w_f)
+        wr, wi = sp.compact_planes(w_f, active)
+        n = w_f.n_out
+        assert w_f.fft_size == geo.fft_size
+    else:
+        assert w_f.shape[-1] == geo.fft_size
+        active = None
+        n, m = w_f.shape[:2]
+        flat = w_f.reshape(n, m, geo.fft_size * geo.fft_size)
+        wr = jnp.transpose(flat.real, (2, 0, 1)).astype(jnp.float32)
+        wi = jnp.transpose(flat.imag, (2, 0, 1)).astype(jnp.float32)
+    ops = overlap_save_operators(
+        geo.fft_size, geo.ksize,
+        tuple(int(a) for a in active) if active is not None else None)
+    dfr, dfi, dvr, dvi = (jnp.asarray(a) for a in ops)
+    if bias is None:
+        bias_arr = jnp.zeros((1, n), jnp.float32)
+    else:
+        bias_arr = jnp.asarray(bias, jnp.float32).reshape(1, n)
+    return _fused_conv(x, wr, wi, dfr, dfi, dvr, dvi, bias_arr, geo=geo,
+                       flow=flow, block_n=block_n, block_m=block_m,
+                       block_p=block_p, relu=relu, interpret=interpret)
+
+
+def execute_layer_plan(x: Array, lp, *, interpret: bool | None = None
+                       ) -> Array:
+    """Run one conv layer from a precompiled ``core.plan.LayerPlan``.
+
+    Consumes the plan's precomputed operands (compacted kernel planes,
+    DFT operators, bias, autotuned flow/blocks) — nothing is re-derived
+    per call, so repeated forwards hit the jit cache of ``_fused_conv``
+    directly.  Pooling (``lp.epilogue.pool``) is spatial and stays with
+    the caller.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tn = lp.tuning
+    bias = lp.bias if lp.epilogue.bias else jnp.zeros_like(lp.bias)
+    return _fused_conv(x, lp.wr, lp.wi, lp.dfr, lp.dfi, lp.dvr, lp.dvi,
+                       bias, geo=lp.geo, flow=tn.flow,
+                       block_n=tn.block_n, block_m=tn.block_m,
+                       block_p=tn.block_p, relu=lp.epilogue.relu,
                        interpret=interpret)

@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.scheduler import SCHEDULERS, build_tables
-from repro.core.spectral import (SpectralGeometry, extract_tiles,
-                                 make_geometry, overlap_add)
+from repro.core.spectral import (SpectralGeometry, assemble_valid_tiles,
+                                 extract_tiles_overlapping, make_geometry)
 from repro.kernels import fft8, flash_attention as fa, ref
 from repro.kernels import sparse_hadamard as sh
 from repro.kernels import spectral_hadamard as shad
@@ -57,25 +57,30 @@ def spectral_conv2d_pallas(x: Array, w_f: Array, geo: SpectralGeometry, *,
                            flow: str = "output_stationary",
                            interpret: bool | None = None) -> Array:
     """Full spectral conv forward on the Pallas path:
-    fft8 -> spectral_hadamard -> fft8(inverse) -> OaA."""
+    fft8 -> spectral_hadamard -> fft8(inverse) -> valid-tile assembly.
+
+    Overlap-save tiling, matching ``spectral_conv2d_pretransformed`` —
+    the three pallas_calls round-trip spectral planes through HBM (the
+    traffic the fused kernel eliminates) but compute the same function.
+    """
     if interpret is None:
         interpret = default_interpret()
     b, m = x.shape[:2]
     n = w_f.shape[0]
-    tiles = extract_tiles(x, geo)                               # [B,M,T,t,t]
-    t = tiles.shape[2]
-    flat = tiles.reshape(b * m * t, geo.tile, geo.tile)
-    xr, xi = fft8.fft2_tiles(flat, fft_size=geo.fft_size,
-                             interpret=interpret)
+    windows = extract_tiles_overlapping(x, geo)                 # [B,M,T,K,K]
+    t = windows.shape[2]
     kk = geo.fft_size
+    flat = windows.reshape(b * m * t, kk, kk)
+    xr, xi = fft8.fft2_tiles(flat, fft_size=kk, interpret=interpret)
     x_f = (xr + 1j * xi).reshape(b, m, t, kk, kk)
     y_f = hadamard(w_f, x_f, flow=flow, interpret=interpret)
     y_flat = y_f.reshape(b * n * t, kk, kk)
     y_sp = fft8.ifft2_tiles(y_flat.real.astype(jnp.float32),
                             y_flat.imag.astype(jnp.float32),
                             interpret=interpret)
-    y_tiles = y_sp.reshape(b, n, t, kk, kk)
-    return overlap_add(y_tiles.astype(x.dtype), geo)
+    ov = geo.ksize - 1
+    y_tiles = y_sp.reshape(b, n, t, kk, kk)[..., ov:, ov:]
+    return assemble_valid_tiles(y_tiles.astype(x.dtype), geo)
 
 
 def scheduled_sparse_conv_group(sk_values, sk_indices, x_f: Array, *,

@@ -1,10 +1,17 @@
 """Spectral VGG16 — the paper's own target model, end to end.
 
-Conv stack runs in the spectral domain (FFT tiling + sparse Hadamard +
-OaA, repro.core.spectral) with per-layer dataflow chosen by Alg 1;
-ReLU / max-pool / FC head run in the spatial domain.  On the paper's
-CPU+FPGA platform those stages were offloaded to the CPU; here everything
-is one jitted JAX program (DESIGN.md, adaptation note 3).
+Conv stack runs in the spectral domain (overlap-save FFT tiling + sparse
+Hadamard, repro.core.spectral) with per-layer dataflow chosen by Alg 1;
+max-pool / FC head run in the spatial domain.  On the paper's CPU+FPGA
+platform those stages were offloaded to the CPU; here everything is one
+jitted JAX program (DESIGN.md, adaptation note 3).
+
+Since the LayerPlan refactor the forward pass *executes a plan*
+(``core.plan.build_network_plan``): geometry, pruned kernels, Alg-2
+active-bin compaction, autotuned flow/blocks and the fused bias+ReLU
+epilogue are all precompiled once, offline — exactly as the paper
+compiles per-layer configurations before inference — and every backend
+of ``forward_spectral`` just walks the plan.
 """
 
 from __future__ import annotations
@@ -23,7 +30,8 @@ from repro.models import layers as L
 Array = jax.Array
 
 # after which conv layers a 2x2 max-pool follows
-_POOL_AFTER = {"conv1_2", "conv2_2", "conv3_3", "conv4_3", "conv5_3"}
+_POOL_AFTER = frozenset(
+    {"conv1_2", "conv2_2", "conv3_3", "conv4_3", "conv5_3"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,10 +39,13 @@ class SpectralCNNConfig:
     name: str = "vgg16-spectral"
     layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS
     fft_size: int = 8
-    alpha: float = 4.0           # spectral kernel compression
+    # Spectral kernel compression: scalar, or one alpha per conv layer
+    # (the paper prunes layers non-uniformly).
+    alpha: float | Sequence[float] = 4.0
     n_classes: int = 1000
     image_size: int = 224
     fc_dim: int = 4096
+    pool_after: frozenset = _POOL_AFTER
 
 
 def init(key, cfg: SpectralCNNConfig) -> dict:
@@ -59,12 +70,19 @@ def init(key, cfg: SpectralCNNConfig) -> dict:
 
 def transform_kernels(params: dict, cfg: SpectralCNNConfig
                       ) -> list[sp.SparseSpectralKernels]:
-    """Offline: spatial -> spectral -> pruned (uniform alpha)."""
+    """Offline: spatial -> spectral -> pruned, per-layer alpha."""
+    alphas = sp.per_layer_alphas(cfg.alpha, len(cfg.layers))
     out = []
-    for conv in params["convs"]:
+    for conv, alpha in zip(params["convs"], alphas):
         wf = spec.spectral_kernel(conv["w"], cfg.fft_size)
-        out.append(sp.prune_magnitude(wf, cfg.alpha))
+        out.append(sp.prune_magnitude(wf, alpha))
     return out
+
+
+def build_plan(params: dict, cfg: SpectralCNNConfig, **kwargs):
+    """Convenience re-export: ``core.plan.build_network_plan``."""
+    from repro.core.plan import build_network_plan
+    return build_network_plan(params, cfg, **kwargs)
 
 
 def _pool(x: Array) -> Array:
@@ -75,39 +93,69 @@ def _pool(x: Array) -> Array:
 BACKENDS = ("einsum", "pallas_staged", "pallas_fused")
 
 
-def forward_spectral(params: dict, spectral_kernels, cfg: SpectralCNNConfig,
-                     x: Array, *, backend: str = "einsum",
-                     tuning: dict | None = None,
+def _epilogue_spatial(x: Array, lp) -> Array:
+    """Bias + ReLU for the backends that don't fuse it into the kernel."""
+    if lp.epilogue.bias:
+        x = x + lp.bias[0][None, :, None, None]
+    if lp.epilogue.relu:
+        x = jax.nn.relu(x)
+    return x
+
+
+def forward_spectral(params: dict, plan, x: Array, *,
+                     backend: str = "einsum",
                      interpret: bool | None = None) -> Array:
-    """Inference with pre-transformed (pruned) spectral kernels.
+    """Inference by executing a precompiled ``core.plan.NetworkPlan``.
 
     backend selects the conv-stack implementation:
       'einsum'        pure-jnp oracle (sparse-aware masked einsum)
       'pallas_staged' 3 pallas_calls/layer: fft8 -> hadamard -> ifft8,
                       spectral intermediates round-tripping through HBM
-      'pallas_fused'  ONE pallas_call/layer (kernels.fused_spectral_conv);
-                      ``tuning`` maps layer name -> core.autotune
-                      FusedTuning for per-layer flow/block choice.
+      'pallas_fused'  ONE pallas_call/layer executing the plan's
+                      precompiled operands — compacted kernel planes,
+                      restricted DFT operators, autotuned flow/blocks —
+                      with bias+ReLU fused into the kernel flush.
+
+    Everything layer-specific was derived at plan-build time; nothing
+    (geometry, schedules, pruning, autotune) is rebuilt here, so
+    repeated calls go straight to the jit cache.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}")
-    for layer, conv, sk in zip(cfg.layers, params["convs"],
-                               spectral_kernels):
-        geo = spec.make_geometry(x.shape[2], x.shape[3], layer.ksize,
-                                 cfg.fft_size, layer.pad)
+    if backend == "pallas_fused" and x.shape[0] != plan.batch:
+        on_hw = interpret is False or (interpret is None
+                                       and jax.default_backend() == "tpu")
+        rmw = [lp.layer.name for lp in plan.layers
+               if lp.tuning.flow != "output_stationary"]
+        if on_hw and rmw:
+            # the RMW flows' hardware-safety (single p/n block) was
+            # established for plan.batch; a different batch changes P
+            # and would fail deep inside the kernel with a less useful
+            # error
+            raise ValueError(
+                f"plan was autotuned for batch {plan.batch} but got "
+                f"batch {x.shape[0]}; RMW-flow layers {rmw} are only "
+                f"hardware-safe at the tuned batch — rebuild with "
+                f"build_network_plan(..., batch={x.shape[0]})")
+    for lp in plan.layers:
+        if (x.shape[1] != lp.layer.c_in or x.shape[2] != lp.layer.h_in
+                or x.shape[3] != lp.layer.w_in):
+            raise ValueError(
+                f"plan/input mismatch at {lp.layer.name}: plan expects "
+                f"[B, {lp.layer.c_in}, {lp.layer.h_in}, {lp.layer.w_in}], "
+                f"got {x.shape}")
         if backend == "einsum":
-            x = spec.spectral_conv2d_pretransformed(x, sk, geo)
+            x = spec.spectral_conv2d_pretransformed(x, lp.kernels, lp.geo)
+            x = _epilogue_spatial(x, lp)
         elif backend == "pallas_staged":
             from repro.kernels import ops
-            x = ops.spectral_conv2d_pallas(x, sk.values, geo,
+            x = ops.spectral_conv2d_pallas(x, lp.kernels.values, lp.geo,
                                            interpret=interpret)
+            x = _epilogue_spatial(x, lp)
         else:
-            from repro.kernels.fused_spectral_conv import fused_spectral_conv2d
-            tn = (tuning or {}).get(layer.name)
-            kw = tn.kwargs() if tn is not None else {}
-            x = fused_spectral_conv2d(x, sk, geo, interpret=interpret, **kw)
-        x = jax.nn.relu(x + conv["b"][None, :, None, None])
-        if layer.name in _POOL_AFTER:
+            from repro.kernels.fused_spectral_conv import execute_layer_plan
+            x = execute_layer_plan(x, lp, interpret=interpret)
+        if lp.epilogue.pool:
             x = _pool(x)
     x = x.reshape(x.shape[0], -1)
     x = jax.nn.relu(x @ params["fc1"])
@@ -120,7 +168,7 @@ def forward_spatial(params: dict, cfg: SpectralCNNConfig, x: Array) -> Array:
     for layer, conv in zip(cfg.layers, params["convs"]):
         x = spec.spatial_conv2d(x, conv["w"], pad=layer.pad)
         x = jax.nn.relu(x + conv["b"][None, :, None, None])
-        if layer.name in _POOL_AFTER:
+        if layer.name in cfg.pool_after:
             x = _pool(x)
     x = x.reshape(x.shape[0], -1)
     x = jax.nn.relu(x @ params["fc1"])

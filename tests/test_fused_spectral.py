@@ -15,8 +15,7 @@ from repro.core import autotune
 from repro.core import dataflow as df
 from repro.core import sparse as sp
 from repro.core import spectral as spec
-from repro.kernels.fused_spectral_conv import (FLOWS, fused_spectral_conv2d,
-                                               fused_spectral_pipeline)
+from repro.kernels.fused_spectral_conv import FLOWS, fused_spectral_conv2d
 
 
 def _conv_case(h, w, k, K, cin, cout, batch=2, seed=0):
@@ -151,16 +150,14 @@ class TestAutotune:
 
     def test_tuned_plan_runs_through_model(self):
         from repro.configs import vgg16_spectral
+        from repro.core.plan import build_network_plan
         from repro.models import cnn
         cfg = vgg16_spectral.SMOKE
         params = cnn.init(jax.random.PRNGKey(0), cfg)
-        sks = cnn.transform_kernels(params, cfg)
-        tuning = autotune.autotune_network(cfg.layers, cfg.fft_size,
-                                           cfg.alpha, batch=1)
+        plan = build_network_plan(params, cfg, batch=1)
         x = jax.random.normal(jax.random.PRNGKey(1),
                               (1, 3, cfg.image_size, cfg.image_size))
-        ref = cnn.forward_spectral(params, sks, cfg, x)
-        out = cnn.forward_spectral(params, sks, cfg, x,
-                                   backend="pallas_fused", tuning=tuning)
+        ref = cnn.forward_spectral(params, plan, x)
+        out = cnn.forward_spectral(params, plan, x, backend="pallas_fused")
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-3, rtol=1e-3)

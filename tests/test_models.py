@@ -163,11 +163,12 @@ def test_moe_active_params():
 
 def test_spectral_cnn_smoke():
     from repro.configs import vgg16_spectral
+    from repro.core.plan import build_network_plan
     cfg = vgg16_spectral.SMOKE
     params = cnn.init(KEY, cfg)
-    sks = cnn.transform_kernels(params, cfg)
+    plan = build_network_plan(params, cfg, batch=2)
     x = jax.random.normal(KEY, (2, 3, cfg.image_size, cfg.image_size))
-    logits = cnn.forward_spectral(params, sks, cfg, x)
+    logits = cnn.forward_spectral(params, plan, x)
     assert logits.shape == (2, cfg.n_classes)
     assert bool(jnp.isfinite(logits).all())
 
@@ -175,13 +176,14 @@ def test_spectral_cnn_smoke():
 def test_spectral_cnn_dense_matches_spatial():
     """With alpha=1 (no pruning) the spectral CNN == spatial CNN."""
     from repro.configs import vgg16_spectral
+    from repro.core.plan import build_network_plan
     import dataclasses
     cfg = dataclasses.replace(vgg16_spectral.SMOKE, alpha=1.0)
     params = cnn.init(KEY, cfg)
-    sks = cnn.transform_kernels(params, cfg)
+    plan = build_network_plan(params, cfg, batch=1)
     x = jax.random.normal(jax.random.PRNGKey(5),
                           (1, 3, cfg.image_size, cfg.image_size))
-    a = cnn.forward_spectral(params, sks, cfg, x)
+    a = cnn.forward_spectral(params, plan, x)
     b = cnn.forward_spatial(params, cfg, x)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                atol=2e-2, rtol=2e-3)

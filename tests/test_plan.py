@@ -1,0 +1,227 @@
+"""Compile-once LayerPlan IR: construction, execution, epilogue fusion.
+
+Covers the PR-3 tentpole (core/plan.py): per-layer alpha threading,
+Alg-2 active-bin compaction feeding the fused kernel, sparsity-aware
+autotuning, the bias+ReLU epilogue inside the kernel flush, and the
+compile-once property (nothing is re-derived inside the forward pass).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg16_spectral
+from repro.core import autotune, dataflow as df
+from repro.core import scheduler as sch
+from repro.core import sparse as sp
+from repro.core import spectral as spec
+from repro.core.plan import EpilogueSpec, build_network_plan
+from repro.kernels.fused_spectral_conv import (execute_layer_plan,
+                                               fused_spectral_conv2d)
+from repro.models import cnn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _plan(cfg, batch=1, **kw):
+    params = cnn.init(KEY, cfg)
+    return params, build_network_plan(params, cfg, batch=batch, **kw)
+
+
+class TestConstruction:
+    def test_layer_plans_complete(self):
+        cfg = vgg16_spectral.SMOKE
+        params, plan = _plan(cfg)
+        assert len(plan.layers) == len(cfg.layers)
+        for lp, layer in zip(plan.layers, cfg.layers):
+            assert lp.layer.name == layer.name
+            k2 = cfg.fft_size ** 2
+            fa = lp.wr.shape[0]
+            assert lp.wr.shape == (fa, layer.c_out, layer.c_in)
+            assert lp.dfr.shape == (fa, k2)
+            assert lp.dvr.shape == (lp.geo.tile ** 2, fa)
+            assert lp.bias.shape == (1, layer.c_out)
+            assert lp.epilogue.pool == (layer.name in cfg.pool_after)
+            if lp.active is not None:
+                assert len(lp.active) % 8 == 0 and len(lp.active) < k2
+            assert lp.schedule_cycles is not None
+            assert 0.0 < lp.pe_utilization <= 1.0
+
+    def test_per_layer_alpha_threads_through(self):
+        alphas = tuple([1.0, 2.0] + [4.0] * 11)
+        cfg = dataclasses.replace(vgg16_spectral.SMOKE, alpha=alphas)
+        _, plan = _plan(cfg)
+        k2 = cfg.fft_size ** 2
+        for lp, a in zip(plan.layers, alphas):
+            assert lp.alpha == a
+            assert lp.kernels.nnz == int(round(k2 / a))
+
+    def test_per_layer_alpha_wrong_length_raises(self):
+        cfg = dataclasses.replace(vgg16_spectral.SMOKE, alpha=(4.0, 2.0))
+        with pytest.raises(ValueError):
+            _plan(cfg)
+
+    def test_plan_is_hardware_safe(self):
+        cfg = vgg16_spectral.SMOKE
+        _, plan = _plan(cfg)
+        for lp in plan.layers:
+            tn = lp.tuning
+            if tn.flow == "weight_stationary":
+                assert tn.block_p >= lp.layer.tiles(cfg.fft_size)
+            if tn.flow == "input_stationary":
+                assert tn.block_n >= lp.layer.c_out
+
+
+class TestCompileOnce:
+    def test_forward_never_rederives_plan_state(self, monkeypatch):
+        """The acceptance claim 'plan construction happens once': after
+        the plan is built, pruning / scheduling / autotune / geometry
+        must never run again — forwards only execute precomputed state."""
+        cfg = vgg16_spectral.SMOKE
+        params, plan = _plan(cfg, batch=2)
+
+        def boom(name):
+            def _raise(*a, **k):
+                raise AssertionError(f"{name} called inside forward")
+            return _raise
+
+        monkeypatch.setattr(sp, "prune_magnitude", boom("prune_magnitude"))
+        monkeypatch.setattr(sp, "compacted_active_bins",
+                            boom("compacted_active_bins"))
+        monkeypatch.setattr(sch, "schedule_exact_cover",
+                            boom("schedule_exact_cover"))
+        monkeypatch.setattr(autotune, "autotune_layer",
+                            boom("autotune_layer"))
+        monkeypatch.setattr(spec, "make_geometry", boom("make_geometry"))
+
+        x = jax.random.normal(KEY, (2, 3, cfg.image_size, cfg.image_size))
+        for backend in cnn.BACKENDS:
+            out = cnn.forward_spectral(params, plan, x, backend=backend)
+            assert bool(jnp.isfinite(out).all())
+
+    def test_plan_input_mismatch_raises(self):
+        cfg = vgg16_spectral.SMOKE
+        params, plan = _plan(cfg)
+        bad = jax.random.normal(KEY, (1, 3, cfg.image_size // 2,
+                                      cfg.image_size // 2))
+        with pytest.raises(ValueError, match="plan/input mismatch"):
+            cnn.forward_spectral(params, plan, bad)
+
+
+class TestFusedEpilogue:
+    """bias+ReLU inside the kernel flush == relu(conv + b) oracle."""
+
+    @pytest.mark.parametrize("alpha", [2.0, 4.0, 16.0])
+    def test_execute_layer_plan_matches_epilogue_oracle(self, alpha):
+        cfg = dataclasses.replace(vgg16_spectral.SMOKE, alpha=alpha)
+        params = cnn.init(KEY, cfg)
+        # non-zero biases so the epilogue actually has work to do
+        for i, conv in enumerate(params["convs"]):
+            conv["b"] = 0.1 * jax.random.normal(
+                jax.random.PRNGKey(i), conv["b"].shape)
+        plan = build_network_plan(params, cfg, batch=1)
+        lp = plan.layers[2]
+        x = jax.random.normal(jax.random.PRNGKey(9),
+                              (1, lp.layer.c_in, lp.layer.h_in,
+                               lp.layer.w_in))
+        y = execute_layer_plan(x, lp)
+        y_ref = jax.nn.relu(
+            spec.spectral_conv2d_pretransformed(x, lp.kernels, lp.geo)
+            + lp.bias[0][None, :, None, None])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-4, rtol=1e-4)
+        # ReLU really fired: no negatives survive
+        assert float(jnp.min(y)) >= 0.0
+
+    def test_vgg16_shaped_layer_parity(self):
+        """Acceptance: fused-sparse backend == sparse-aware einsum oracle
+        to <= 1e-4 on a VGG16-shaped layer, bias+ReLU in-kernel."""
+        self._layer_parity(df.ConvLayer("conv3_1", 128, 256, 56, 56))
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("layer", [
+        df.ConvLayer("conv4_3", 512, 512, 28, 28),
+        df.ConvLayer("conv5_1", 512, 512, 14, 14),
+    ], ids=lambda l: l.name)
+    def test_vgg16_shaped_layer_parity_full(self, layer):
+        self._layer_parity(layer)
+
+    @staticmethod
+    def _layer_parity(layer, alpha=4.0):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal(
+            (1, layer.c_in, layer.h_in, layer.w_in)), jnp.float32)
+        wk = jnp.asarray(0.05 * rng.standard_normal(
+            (layer.c_out, layer.c_in, 3, 3)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(layer.c_out), jnp.float32)
+        geo = spec.make_geometry(layer.h_in, layer.w_in, 3, 8)
+        sk = sp.prune_magnitude(spec.spectral_kernel(wk, 8), alpha)
+        tn = autotune.autotune_layer(layer, 8, alpha)
+        y = fused_spectral_conv2d(x, sk, geo, bias=b, relu=True,
+                                  interpret=True, **tn.kwargs())
+        y_ref = jax.nn.relu(
+            spec.spectral_conv2d_pretransformed(x, sk, geo)
+            + b[None, :, None, None])
+        err = float(jnp.abs(y - y_ref).max())
+        assert err <= 1e-4, (layer.name, err)
+
+
+class TestSparsityAwareCost:
+    def test_kernel_bytes_scale_with_alpha(self):
+        """Acceptance: analytic kernel-HBM bytes of kernel-reuse layers
+        drop by ~alpha vs the dense fused path."""
+        for layer in df.VGG16_LAYERS:
+            dense = df.tpu_fused_flow_cost(layer, 8, 1.0, 64, 128, 64,
+                                           "weight_stationary")
+            sparse4 = df.tpu_fused_flow_cost(layer, 8, 4.0, 64, 128, 64,
+                                             "weight_stationary")
+            ratio = dense["kernel_hbm_bytes"] / sparse4["kernel_hbm_bytes"]
+            assert abs(ratio - 4.0) < 1e-6
+
+    def test_active_bins_shrink_vmem_and_flops(self):
+        layer = df.VGG16_LAYERS[5]
+        full = df.tpu_fused_flow_cost(layer, 8, 4.0, 64, 128, 64,
+                                      "output_stationary", active_bins=64)
+        half = df.tpu_fused_flow_cost(layer, 8, 4.0, 64, 128, 64,
+                                      "output_stationary", active_bins=32)
+        assert half["vmem_bytes"] < full["vmem_bytes"]
+        assert half["flops"] < full["flops"]
+
+    def test_autotune_consumes_active_bins(self):
+        layer = df.VGG16_LAYERS[3]
+        tn = autotune.autotune_layer(layer, 8, 4.0, active_bins=32)
+        c = df.tpu_fused_flow_cost(layer, 8, 4.0, tn.block_n, tn.block_p,
+                                   tn.block_m, tn.flow, active_bins=32)
+        assert tn.vmem_bytes == c["vmem_bytes"]
+
+
+class TestScheduleDrivenCompaction:
+    def test_schedule_bins_equal_mask_union(self):
+        """Exact cover => the bins the schedule touches are exactly the
+        union of non-zero kernel bins — the set the plan compacts to."""
+        rng = np.random.default_rng(0)
+        wf = (rng.standard_normal((16, 4, 8, 8))
+              + 1j * rng.standard_normal((16, 4, 8, 8)))
+        sk = sp.prune_magnitude(jnp.asarray(wf), 16.0)
+        idx = np.asarray(sk.indices)
+        vals = np.asarray(sk.values).reshape(16, 4, 64)
+        tables = []
+        for m in range(4):
+            s = sch.schedule_exact_cover(idx[:, m, :], 64, r=8)
+            tables.append(sch.build_tables(s, vals[:, m, :], idx[:, m, :]))
+        bins = sch.active_bins_from_tables(tables)
+        np.testing.assert_array_equal(bins, np.asarray(sk.active_bins))
+
+    def test_dense_fallback_when_nnz_near_k2(self):
+        rng = np.random.default_rng(1)
+        wf = jnp.asarray(rng.standard_normal((4, 4, 8, 8))
+                         + 1j * rng.standard_normal((4, 4, 8, 8)))
+        sk = sp.prune_magnitude(wf, 1.0)
+        assert sp.compacted_active_bins(sk) is None
+
+    def test_epilogue_spec_defaults(self):
+        e = EpilogueSpec()
+        assert e.bias and e.relu and not e.pool

@@ -119,6 +119,74 @@ class TestTables:
         assert t.valid.sum() == idx.size
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    n_kernels=st.integers(2, 32),
+    r=st.integers(1, 12),
+    alpha=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_execute_tables_matches_masked_dense_property(n_kernels, r, alpha,
+                                                      seed):
+    """Property (satellite, PR 3): for ANY random pruned layer — varying
+    N', r, alpha — replaying the compiled INDEX/VALUE tables equals the
+    masked-dense Hadamard oracle element-for-element."""
+    k2 = 64
+    nnz = max(1, k2 // alpha)
+    rng = np.random.default_rng(seed)
+    idx = _random_indices(n_kernels, k2, nnz, seed)
+    vals = np.zeros((n_kernels, k2), np.complex64)
+    for i in range(n_kernels):
+        vals[i, idx[i]] = (rng.standard_normal(nnz)
+                           + 1j * rng.standard_normal(nnz))
+    s = sch.schedule_exact_cover(idx, k2, r)
+    sch.verify_schedule(s, idx, k2)
+    t = sch.build_tables(s, vals, idx)
+    x = (rng.standard_normal(k2)
+         + 1j * rng.standard_normal(k2)).astype(np.complex64)
+    np.testing.assert_allclose(sch.execute_tables(t, x), vals * x[None, :],
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("n_pe,r,alpha,m,seed", [
+    (8, 4, 4, 3, 0),
+    (16, 10, 8, 2, 1),
+    (5, 3, 2, 4, 2),
+    (12, 1, 16, 2, 3),
+])
+def test_scheduled_sparse_hadamard_matches_masked_einsum(n_pe, r, alpha,
+                                                         m, seed):
+    """The Pallas one-hot-matmul executor of the same tables, across
+    channels and parallel tiles, equals the masked-dense einsum oracle
+    (the second half of the satellite parity requirement)."""
+    from repro.kernels import sparse_hadamard as sh
+    import jax.numpy as jnp
+
+    k2 = 64
+    p = 5
+    nnz = max(1, k2 // alpha)
+    rng = np.random.default_rng(seed)
+    vals = np.zeros((n_pe, m, k2), np.complex64)
+    idx_all = []
+    tables = []
+    for mm in range(m):
+        idx = _random_indices(n_pe, k2, nnz, seed * 10 + mm)
+        idx_all.append(idx)
+        for i in range(n_pe):
+            vals[i, mm, idx[i]] = (rng.standard_normal(nnz)
+                                   + 1j * rng.standard_normal(nnz))
+        s = sch.schedule_exact_cover(idx, k2, r)
+        tables.append(sch.build_tables(s, vals[:, mm, :], idx))
+    x = (rng.standard_normal((m, k2, p))
+         + 1j * rng.standard_normal((m, k2, p)))
+    yr, yi = sh.scheduled_sparse_hadamard(
+        *sh.stack_tables(tables),
+        jnp.asarray(x.real, jnp.float32), jnp.asarray(x.imag, jnp.float32))
+    y = np.asarray(yr) + 1j * np.asarray(yi)
+    y_ref = np.einsum("nmf,mfp->nfp", vals, x)
+    np.testing.assert_allclose(y, y_ref, atol=1e-4)
+
+
 def test_layer_utilization_sampling():
     rng = np.random.default_rng(0)
     c_out, c_in, nnz = 32, 8, 16

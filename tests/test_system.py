@@ -17,10 +17,10 @@ from repro.models import cnn
 
 def test_paper_pipeline_end_to_end():
     """Offline: transform + prune + Alg1 plan + Alg2 tables.
-    Online: tiled FFT -> scheduled sparse Hadamard -> IFFT -> OaA.
-    The scheduled sparse result must equal the masked dense spectral conv
-    for every kernel group — i.e. the paper's entire datapath computes
-    the right convolution."""
+    Online: overlap-save FFT -> scheduled sparse Hadamard -> IFFT ->
+    valid-tile assembly.  The scheduled sparse result must equal the
+    masked dense spectral conv for every kernel group — i.e. the paper's
+    entire datapath computes the right convolution."""
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((1, 4, 12, 12)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((8, 4, 3, 3)), jnp.float32)
@@ -31,12 +31,14 @@ def test_paper_pipeline_end_to_end():
     # reference: masked-dense spectral conv
     y_ref = spectral.spectral_conv2d_pretransformed(x, sk.values, geo)
 
-    # scheduled path: per-group INDEX/VALUE execution then IFFT + OaA
-    xf = spectral.fft_tiles(spectral.extract_tiles(x, geo), geo)
+    # scheduled path: per-group INDEX/VALUE execution, IFFT, assembly
+    windows = spectral.extract_tiles_overlapping(x, geo)
+    xf = jnp.fft.fft2(windows.astype(jnp.float32))
     y_f, stats = ops.scheduled_sparse_conv_group(
         np.asarray(sk.values), np.asarray(sk.indices), xf, r=6)
     y_tiles = jnp.fft.ifft2(y_f[None]).real.astype(jnp.float32)
-    y = spectral.overlap_add(y_tiles, geo)
+    ov = geo.ksize - 1
+    y = spectral.assemble_valid_tiles(y_tiles[..., ov:, ov:], geo)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
     assert stats["utilization"] > 0.5
 
@@ -55,12 +57,17 @@ def test_alg1_plus_alg2_consistency():
 
 
 def test_spectral_cnn_with_scheduler_stats():
+    from repro.core.plan import build_network_plan
     cfg = dataclasses.replace(vgg16_spectral.SMOKE, alpha=2.0)
     params = cnn.init(jax.random.PRNGKey(0), cfg)
-    sks = cnn.transform_kernels(params, cfg)
+    plan = build_network_plan(params, cfg, batch=1)
+    # Alg-2 stats are baked into the plan at build time
+    for lp in plan.layers:
+        assert lp.schedule_cycles is not None
+        assert 0.0 < lp.pe_utilization <= 1.0
     x = jax.random.normal(jax.random.PRNGKey(1),
                           (1, 3, cfg.image_size, cfg.image_size))
-    logits = cnn.forward_spectral(params, sks, cfg, x)
+    logits = cnn.forward_spectral(params, plan, x)
     assert bool(jnp.isfinite(logits).all())
     # alpha=2 keeps more energy: spectral top-1 should often match dense
     dense = cnn.forward_spatial(params, cfg, x)
