@@ -3,27 +3,73 @@
 Compares the three conv-stack backends of ``models.cnn.forward_spectral``
 — pure-jnp einsum oracle, staged Pallas (3 pallas_calls/layer with
 spectral intermediates round-tripping through HBM), and the fused single
-pallas_call executing a compile-once ``core.plan.NetworkPlan`` — and
-emits ``BENCH_e2e.json`` with:
+pallas_call executing a compile-once ``core.plan.NetworkPlan`` whose
+Hadamard stage runs per layer in the mode Alg 1 chose (dense / bin /
+scheduled) — and emits ``BENCH_e2e.json``.
 
-  * wall-clock latency at batch 1 and batch 8 (smoke VGG16 by default;
-    the Pallas kernels run interpret-mode off-TPU, so off-TPU wall time
-    is a correctness-path trend signal, not a perf claim — the analytic
-    HBM/roofline numbers below are the hardware-portable signal), plus
-    the one-off plan-construction time (everything per-layer is derived
-    there, never inside the jitted forward),
-  * per-layer kernel-launch counts (fused: 1, staged: 3), analytic HBM
-    bytes of the tuned fused kernel (sparse-aware, alpha = 4) vs the
-    dense fused path at the same configuration — kernel bytes drop by
-    ~alpha — and vs the ``output_stationary`` staged-Hadamard prediction
-    of ``dataflow.tpu_flow_cost``, plus the Eq-14 mean PE utilization of
-    each layer's Alg-2 schedule (from the plan),
-  * numerical parity of the fused kernel against the *spatial* oracle
-    (alpha = 1, unpruned) and against the sparse-aware einsum oracle
-    with the bias+ReLU epilogue fused in-kernel (alpha = 4) on every
-    full-resolution VGG16 layer at batch 1.
+  PYTHONPATH=src python -m benchmarks.e2e_latency [--full] [--quick]
+      [--json OUT] [--iters N]
 
-  PYTHONPATH=src python -m benchmarks.e2e_latency [--full] [--json OUT]
+``--quick`` is the CI smoke path: smoke-scale model everywhere, no
+full-resolution plan build or parity sweeps (the scripts must not
+crash; the committed BENCH_e2e.json comes from a full run).
+
+BENCH_e2e.json schema
+---------------------
+  bench / backend / interpret_mode / model / fft_size / alpha / quick
+      run metadata (``interpret_mode`` is true off-TPU: wall times are
+      correctness-path trend signals, the analytic numbers are the
+      hardware-portable ones).
+  latency.{smoke,full}.batch{B}
+      plan_build_ms, then {backend}_ms wall-clock per forward call.
+  plan_build_s
+      one-off full-VGG16 plan construction time (prune + Alg 2 +
+      compaction + table compilation + autotune).
+  layers[]  (one row per conv layer, analytic, at the TUNED config)
+      layer / flow / hadamard / block_n / block_m / block_p
+          the plan's Alg-1 choice, incl. the Hadamard mode.
+      alpha / nnz / active_bins / pe_utilization / schedule_cycles
+          sparsity + Alg-2 stats (exact for scheduled layers).
+      launches_fused / launches_staged
+          kernel launches per layer (1 vs 3).
+      fused_hbm_bytes / fused_hbm_bytes_dense
+          total analytic HBM traffic of the fused kernel in the plan's
+          mode vs the dense (alpha = 1) datapath at the same config.
+      kernel_hbm_bytes{,_dense,_bin,_scheduled}
+          the kernel-operand share of HBM traffic (re-read factors
+          included): the plan's mode, then each mode at the same
+          config.  The scheduled column counts the Alg-2 INDEX/VALUE
+          table stream — the paper's O(nnz) kernel traffic — using the
+          ACTUAL compiled table bytes when the plan carries tables
+          (exact padding), else the nnz/mu analytic estimate.
+      table_bytes
+          actual bytes of the compiled tables (0 for plane modes).
+      hadamard_flops{_dense,_bin,_scheduled}
+          Hadamard-stage MACs per mode; the scheduled entry is the
+          honest one-hot-matmul realization, not the paper's element
+          count.
+      scheduled_le_bin
+          acceptance flag: scheduled kernel bytes <= bin-compacted.
+      staged_os_hadamard_hbm_bytes / staged_fft_io_hbm_bytes /
+      fused_le_staged_os / fused_predicted_us /
+      staged_hadamard_predicted_us
+          the staged-pipeline baseline at its own best blocks;
+          ``fused_le_staged_os`` compares the fused kernel against the
+          staged pipeline's TOTAL traffic (Hadamard + FFT/IFFT
+          round-trips — the three launches it actually needs).
+  totals
+      aggregates of the above (MB), kernel_bytes vs dense/bin/
+      scheduled, mean Eq-14 PE utilization, launch counts, and the
+      acceptance booleans ``all_layers_fused_le_staged_os`` and
+      ``all_sparse_scheduled_le_bin``.
+  parity / parity_sparse
+      fused vs spatial (alpha = 1, <= 1e-3) and fused-sparse+epilogue
+      vs einsum oracle (alpha = 4, <= 1e-4) on full-resolution VGG16.
+  parity_scheduled
+      acceptance: the SCHEDULED fused datapath vs the einsum oracle,
+      <= 1e-5 — per-layer on the conv5 trio at full channel counts and
+      end-to-end on the smoke network with every layer forced
+      scheduled.
 """
 
 from __future__ import annotations
@@ -77,9 +123,10 @@ def latency_table(cfg, batches=(1, 8), backends=("einsum", "pallas_staged",
 
 def per_layer_traffic(plan, fft_size: int, batch: int = 1) -> list[dict]:
     """Analytic per-layer HBM bytes from the plan's tuned fused config:
-    sparse-aware vs dense at the SAME config (the alpha saving), vs the
-    staged pipeline's output-stationary Hadamard prediction (the fusion
-    saving), plus Alg-2 PE utilization."""
+    the plan's Hadamard mode vs every mode at the SAME config (the
+    dense/bin/scheduled trade Alg 1 ranked), vs the staged pipeline's
+    output-stationary Hadamard prediction (the fusion saving), plus
+    Alg-2 PE utilization."""
     from repro.core import autotune
     from repro.core import dataflow as df
 
@@ -97,12 +144,24 @@ def per_layer_traffic(plan, fft_size: int, batch: int = 1) -> list[dict]:
     for lp in plan.layers:
         layer, tn = lp.layer, lp.tuning
         fa = lp.n_active_bins
-        cost = lambda a, bins: df.tpu_fused_flow_cost(
+        cost = lambda a, bins, mode: df.tpu_fused_flow_cost(
             layer, fft_size, a, tn.block_n, tn.block_p, tn.block_m,
-            tn.flow, batch=batch, active_bins=bins)
-        fused_sparse = cost(lp.alpha, fa)
-        fused_dense = cost(1.0, None)
+            tn.flow, batch=batch, active_bins=bins, hadamard=mode)
+        fused_plan = cost(lp.alpha, fa, lp.hadamard)
+        fused_dense = cost(1.0, None, "dense")
+        mode_cost = {m: cost(lp.alpha, fa, m)
+                     for m in df.HADAMARD_MODES}
         staged_os = best_staged_os(layer, lp.alpha)
+        # Scheduled kernel bytes: prefer the ACTUAL compiled table
+        # stream (exact t_max/channel padding) over the nnz/mu estimate
+        # whenever the plan carries tables; same per-flow re-read
+        # factor as the cost model.
+        sched_bytes = mode_cost["scheduled"]["kernel_hbm_bytes"]
+        if lp.tables is not None:
+            t = layer.tiles(fft_size) * batch
+            gp = max(1, -(-t // tn.block_p))
+            reread = 1 if tn.flow == "weight_stationary" else gp
+            sched_bytes = float(lp.tables.nbytes * reread)
         # staged pipeline additionally round-trips tiles through the
         # separate FFT/IFFT kernels (real in, 2 f32 planes out and back)
         k2 = fft_size * fft_size
@@ -114,6 +173,7 @@ def per_layer_traffic(plan, fft_size: int, batch: int = 1) -> list[dict]:
             "launches_fused": FUSED_LAUNCHES_PER_LAYER,
             "launches_staged": STAGED_LAUNCHES_PER_LAYER,
             "flow": tn.flow,
+            "hadamard": lp.hadamard,
             "block_n": tn.block_n, "block_m": tn.block_m,
             "block_p": tn.block_p,
             "alpha": lp.alpha,
@@ -121,19 +181,30 @@ def per_layer_traffic(plan, fft_size: int, batch: int = 1) -> list[dict]:
             "active_bins": fa,
             "pe_utilization": lp.pe_utilization,
             "schedule_cycles": lp.schedule_cycles,
-            "fused_hbm_bytes": fused_sparse["hbm_bytes"],
+            "fused_hbm_bytes": fused_plan["hbm_bytes"],
             "fused_hbm_bytes_dense": fused_dense["hbm_bytes"],
-            "kernel_hbm_bytes": fused_sparse["kernel_hbm_bytes"],
+            "kernel_hbm_bytes": fused_plan["kernel_hbm_bytes"],
             "kernel_hbm_bytes_dense": fused_dense["kernel_hbm_bytes"],
+            "kernel_hbm_bytes_bin": mode_cost["bin"]["kernel_hbm_bytes"],
+            "kernel_hbm_bytes_scheduled": sched_bytes,
+            "table_bytes": (lp.tables.nbytes
+                            if lp.tables is not None else 0),
+            "hadamard_flops_dense": mode_cost["dense"]["had_flops"],
+            "hadamard_flops_bin": mode_cost["bin"]["had_flops"],
+            "hadamard_flops_scheduled":
+                mode_cost["scheduled"]["had_flops"],
+            "scheduled_le_bin": bool(
+                sched_bytes <= mode_cost["bin"]["kernel_hbm_bytes"]),
             "kernel_bytes_reduction": (
                 fused_dense["kernel_hbm_bytes"]
-                / fused_sparse["kernel_hbm_bytes"]),
+                / fused_plan["kernel_hbm_bytes"]),
             "staged_os_hadamard_hbm_bytes": staged_os["hbm_bytes"],
             "staged_fft_io_hbm_bytes": float(fft_io),
             "fused_le_staged_os": bool(
-                fused_sparse["hbm_bytes"] <= staged_os["hbm_bytes"]),
-            "fused_predicted_us": 1e6 * max(fused_sparse["hbm_s"],
-                                            fused_sparse["compute_s"]),
+                fused_plan["hbm_bytes"]
+                <= staged_os["hbm_bytes"] + fft_io),
+            "fused_predicted_us": 1e6 * max(fused_plan["hbm_s"],
+                                            fused_plan["compute_s"]),
             "staged_hadamard_predicted_us": 1e6 * max(staged_os["hbm_s"],
                                                       staged_os["compute_s"]),
         })
@@ -208,6 +279,67 @@ def fused_sparse_parity_vs_oracle(layers, fft_size: int, alpha: float = 4.0,
             "passes_1e-4": bool(worst <= 1e-4)}
 
 
+def scheduled_parity_vs_oracle(layers, fft_size: int, alpha: float = 4.0,
+                               batch: int = 1, seed: int = 0) -> dict:
+    """Acceptance: the SCHEDULED fused datapath — Alg-2 INDEX/VALUE
+    tables executed element-granularly inside the single pallas_call —
+    matches the sparse-aware einsum oracle to <= 1e-5, bias+ReLU
+    in-kernel, at the Alg-1 configuration tuned for the mode."""
+    from repro.core import autotune, sparse as sp
+    from repro.core import spectral as spec
+    from repro.kernels.fused_spectral_conv import (
+        fused_spectral_conv2d_scheduled)
+
+    rng = np.random.default_rng(seed)
+    per_layer = {}
+    worst = 0.0
+    for layer in layers:
+        x = jnp.asarray(rng.standard_normal(
+            (batch, layer.c_in, layer.h_in, layer.w_in)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal(
+            (layer.c_out, layer.c_in, layer.ksize, layer.ksize))
+            * (2.0 / (layer.c_in * layer.ksize ** 2)) ** 0.5, jnp.float32)
+        b = jnp.asarray(0.1 * rng.standard_normal(layer.c_out), jnp.float32)
+        geo = spec.make_geometry(layer.h_in, layer.w_in, layer.ksize,
+                                 fft_size, layer.pad)
+        sk = sp.prune_magnitude(spec.spectral_kernel(w, fft_size), alpha)
+        tn = autotune.autotune_layer(layer, fft_size, alpha, batch=batch,
+                                     hadamard_modes=("scheduled",))
+        y = fused_spectral_conv2d_scheduled(
+            x, sk, geo, bias=b, relu=True, n_par=tn.block_n,
+            flow=tn.flow, block_m=tn.block_m, block_p=tn.block_p)
+        y_ref = jax.nn.relu(
+            spec.spectral_conv2d_pretransformed(x, sk, geo)
+            + b[None, :, None, None])
+        err = float(jnp.abs(y - y_ref).max())
+        per_layer[layer.name] = err
+        worst = max(worst, err)
+    return {"batch": batch, "alpha": alpha, "epilogue": "bias+relu",
+            "max_abs_err": worst, "per_layer": per_layer,
+            "passes_1e-5": bool(worst <= 1e-5)}
+
+
+def scheduled_network_parity(cfg, batch: int = 1) -> dict:
+    """End-to-end: the smoke network with EVERY layer forced to the
+    scheduled datapath vs the einsum oracle on the same plan."""
+    from repro.core.plan import build_network_plan
+    from repro.models import cnn
+
+    key = jax.random.PRNGKey(0)
+    params = cnn.init(key, cfg)
+    plan = build_network_plan(params, cfg, batch=batch,
+                              hadamard="scheduled")
+    x = jax.random.normal(key, (batch, 3, cfg.image_size, cfg.image_size),
+                          jnp.float32)
+    ref = cnn.forward_spectral(params, plan, x, backend="einsum")
+    out = cnn.forward_spectral(params, plan, x, backend="pallas_fused")
+    err = float(jnp.abs(out - ref).max())
+    return {"model": cfg.name, "batch": batch,
+            "modes": [lp.hadamard for lp in plan.layers],
+            "max_abs_logit_err": err,
+            "passes_1e-5": bool(err <= 1e-5)}
+
+
 def main() -> None:
     from repro.configs import vgg16_spectral
     from repro.core import dataflow as df
@@ -219,19 +351,28 @@ def main() -> None:
                     help="output path for the JSON report")
     ap.add_argument("--full", action="store_true",
                     help="also time the full 224x224 model (slow on CPU)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke path: smoke-scale model everywhere, "
+                    "skip full-resolution plan/parity sweeps")
     ap.add_argument("--iters", type=int, default=3)
     args = ap.parse_args()
 
+    traffic_cfg = (vgg16_spectral.SMOKE if args.quick
+                   else vgg16_spectral.CONFIG)
     report: dict = {
         "bench": "e2e_latency",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
-        "model": "vgg16-spectral",
-        "fft_size": 8,
-        "alpha": 4.0,
+        # --quick swaps the traffic/parity model for the smoke config;
+        # the metadata must say so (smoke layer NAMES shadow real VGG16
+        # layers at much smaller channel counts).
+        "model": traffic_cfg.name,
+        "fft_size": traffic_cfg.fft_size,
+        "alpha": traffic_cfg.alpha,
+        "quick": bool(args.quick),
     }
 
-    print("[1/4] latency: oracle vs staged Pallas vs fused Pallas "
+    print("[1/5] latency: oracle vs staged Pallas vs fused Pallas "
           "(plan built once per batch)")
     report["latency"] = {"smoke": latency_table(
         vgg16_spectral.SMOKE, iters=args.iters)}
@@ -243,63 +384,95 @@ def main() -> None:
             pretty = ", ".join(f"{k}={v:.1f}" for k, v in row.items())
             print(f"      {scale}/{b}: {pretty}")
 
-    print("[2/4] full-VGG16 NetworkPlan (compile once: prune + Alg 2 + "
-          "compaction + autotune)")
+    print(f"[2/5] {traffic_cfg.name} NetworkPlan (compile once: prune + "
+          "Alg 2 tables + compaction + mode-aware autotune)")
     t0 = time.perf_counter()
-    params_full = cnn.init(jax.random.PRNGKey(0), vgg16_spectral.CONFIG)
-    plan_full = build_network_plan(params_full, vgg16_spectral.CONFIG,
-                                   batch=1)
+    params_full = cnn.init(jax.random.PRNGKey(0), traffic_cfg)
+    plan_full = build_network_plan(params_full, traffic_cfg, batch=1)
     report["plan_build_s"] = time.perf_counter() - t0
-    print(f"      built in {report['plan_build_s']:.1f}s")
+    n_sched = sum(lp.hadamard == "scheduled" for lp in plan_full.layers)
+    print(f"      built in {report['plan_build_s']:.1f}s "
+          f"({n_sched}/{len(plan_full.layers)} layers scheduled)")
 
-    print("[3/4] per-layer launches + analytic HBM traffic "
-          "(sparse vs dense vs staged) + Alg-2 PE utilization")
+    print("[3/5] per-layer launches + analytic HBM traffic "
+          "(dense vs bin vs scheduled vs staged) + Alg-2 PE utilization")
     layer_rows = per_layer_traffic(plan_full, 8, batch=1)
     report["layers"] = layer_rows
     tot_fused = sum(r["fused_hbm_bytes"] for r in layer_rows)
     tot_fused_dense = sum(r["fused_hbm_bytes_dense"] for r in layer_rows)
     tot_staged = sum(r["staged_os_hadamard_hbm_bytes"]
                      + r["staged_fft_io_hbm_bytes"] for r in layer_rows)
-    tot_k_sparse = sum(r["kernel_hbm_bytes"] for r in layer_rows)
+    tot_k = sum(r["kernel_hbm_bytes"] for r in layer_rows)
     tot_k_dense = sum(r["kernel_hbm_bytes_dense"] for r in layer_rows)
+    tot_k_bin = sum(r["kernel_hbm_bytes_bin"] for r in layer_rows)
+    tot_k_sched = sum(r["kernel_hbm_bytes_scheduled"] for r in layer_rows)
     mus = [r["pe_utilization"] for r in layer_rows
            if r["pe_utilization"] is not None]
+    sparse_rows = [r for r in layer_rows if r["alpha"] > 1.0]
     report["totals"] = {
         "fused_hbm_mb": tot_fused / 1e6,
         "fused_dense_hbm_mb": tot_fused_dense / 1e6,
         "staged_hbm_mb": tot_staged / 1e6,
         "hbm_reduction_vs_staged_pct": 100 * (1 - tot_fused / tot_staged),
-        "kernel_hbm_mb": tot_k_sparse / 1e6,
+        "kernel_hbm_mb": tot_k / 1e6,
         "kernel_dense_hbm_mb": tot_k_dense / 1e6,
-        "kernel_bytes_reduction": tot_k_dense / tot_k_sparse,
+        "kernel_bin_hbm_mb": tot_k_bin / 1e6,
+        "kernel_scheduled_hbm_mb": tot_k_sched / 1e6,
+        "kernel_bytes_reduction": tot_k_dense / tot_k,
         "mean_pe_utilization": float(np.mean(mus)) if mus else None,
         "launches_fused": FUSED_LAUNCHES_PER_LAYER * len(layer_rows),
         "launches_staged": STAGED_LAUNCHES_PER_LAYER * len(layer_rows),
+        "hadamard_modes": {m: sum(r["hadamard"] == m for r in layer_rows)
+                           for m in df.HADAMARD_MODES},
         "all_layers_fused_le_staged_os": all(
             r["fused_le_staged_os"] for r in layer_rows),
+        "all_sparse_scheduled_le_bin": all(
+            r["scheduled_le_bin"] for r in sparse_rows),
     }
     t = report["totals"]
     print(f"      fused {t['fused_hbm_mb']:.1f} MB (dense "
           f"{t['fused_dense_hbm_mb']:.1f} MB) vs staged "
           f"{t['staged_hbm_mb']:.1f} MB HBM "
           f"({t['hbm_reduction_vs_staged_pct']:.0f}% less than staged); "
-          f"kernel bytes {t['kernel_hbm_mb']:.1f} MB vs dense "
-          f"{t['kernel_dense_hbm_mb']:.1f} MB "
-          f"({t['kernel_bytes_reduction']:.1f}x ~= alpha); mean PE util "
+          f"kernel bytes {t['kernel_hbm_mb']:.1f} MB (dense "
+          f"{t['kernel_dense_hbm_mb']:.1f} / bin "
+          f"{t['kernel_bin_hbm_mb']:.1f} / scheduled "
+          f"{t['kernel_scheduled_hbm_mb']:.1f} MB; "
+          f"{t['kernel_bytes_reduction']:.1f}x vs dense); "
+          f"scheduled<=bin on all sparse layers: "
+          f"{t['all_sparse_scheduled_le_bin']}; modes "
+          f"{t['hadamard_modes']}; mean PE util "
           f"{t['mean_pe_utilization']:.1%}; launches "
           f"{t['launches_fused']} vs {t['launches_staged']}")
 
-    print("[4/4] parity on full VGG16 (batch 1): fused vs spatial "
-          "(alpha=1) and fused-sparse+epilogue vs einsum oracle (alpha=4)")
-    report["parity"] = fused_parity_vs_spatial(df.VGG16_LAYERS, 8, batch=1)
-    print(f"      dense vs spatial: max abs err "
-          f"{report['parity']['max_abs_err']:.2e} "
-          f"(<= 1e-3: {report['parity']['passes_1e-3']})")
-    report["parity_sparse"] = fused_sparse_parity_vs_oracle(
-        df.VGG16_LAYERS, 8, alpha=4.0, batch=1)
-    print(f"      sparse+epilogue vs oracle: max abs err "
-          f"{report['parity_sparse']['max_abs_err']:.2e} "
-          f"(<= 1e-4: {report['parity_sparse']['passes_1e-4']})")
+    if not args.quick:
+        print("[4/5] parity on full VGG16 (batch 1): fused vs spatial "
+              "(alpha=1) and fused-sparse+epilogue vs oracle (alpha=4)")
+        report["parity"] = fused_parity_vs_spatial(df.VGG16_LAYERS, 8,
+                                                   batch=1)
+        print(f"      dense vs spatial: max abs err "
+              f"{report['parity']['max_abs_err']:.2e} "
+              f"(<= 1e-3: {report['parity']['passes_1e-3']})")
+        report["parity_sparse"] = fused_sparse_parity_vs_oracle(
+            df.VGG16_LAYERS, 8, alpha=4.0, batch=1)
+        print(f"      sparse+epilogue vs oracle: max abs err "
+              f"{report['parity_sparse']['max_abs_err']:.2e} "
+              f"(<= 1e-4: {report['parity_sparse']['passes_1e-4']})")
+
+    print("[5/5] SCHEDULED-fused parity vs einsum oracle (acceptance "
+          "<= 1e-5)")
+    sched = {"network_smoke": scheduled_network_parity(
+        vgg16_spectral.SMOKE, batch=1)}
+    if not args.quick:
+        sched["per_layer_conv5"] = scheduled_parity_vs_oracle(
+            df.VGG16_LAYERS[-3:], 8, alpha=4.0, batch=1)
+        print(f"      conv5 trio (512ch, tables in-kernel): max abs err "
+              f"{sched['per_layer_conv5']['max_abs_err']:.2e} "
+              f"(<= 1e-5: {sched['per_layer_conv5']['passes_1e-5']})")
+    report["parity_scheduled"] = sched
+    print(f"      smoke net, all layers scheduled: max abs logit err "
+          f"{sched['network_smoke']['max_abs_logit_err']:.2e} "
+          f"(<= 1e-5: {sched['network_smoke']['passes_1e-5']})")
 
     with open(args.json, "w") as f:
         json.dump(report, f, indent=2)

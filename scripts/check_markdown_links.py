@@ -1,0 +1,55 @@
+"""Markdown link check: every relative link target must exist on disk.
+
+External (scheme://) and mailto links are skipped — CI must not depend
+on network reachability; anchors are stripped before the existence
+check.  Exit code 1 lists every broken link.
+
+  python scripts/check_markdown_links.py README.md docs/*.md ...
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — target captured up to the closing paren; images too.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    for n, line in enumerate(path.read_text().splitlines(), 1):
+        for target in _LINK.findall(line):
+            if re.match(r"^[a-zA-Z][a-zA-Z0-9+.-]*:", target):
+                continue                      # http:, https:, mailto:
+            rel = target.split("#", 1)[0]
+            if not rel:                       # pure in-page anchor
+                continue
+            if not (path.parent / rel).exists():
+                errors.append(f"{path}:{n}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_markdown_links.py FILE.md [FILE.md ...]")
+        return 2
+    errors: list[str] = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check_file(p))
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"{len(errors)} broken link(s)")
+        return 1
+    print(f"ok: {len(argv)} file(s), all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -44,7 +44,13 @@ BLOCK_CANDIDATES = (32, 64, 128, 256)
 
 @dataclasses.dataclass(frozen=True)
 class FusedTuning:
-    """Chosen fused-kernel configuration for one conv layer."""
+    """Chosen fused-kernel configuration for one conv layer.
+
+    ``hadamard`` is the Hadamard-stage mode (``df.HADAMARD_MODES``)
+    when the tuner searched the mode axis, or None when it ran in
+    legacy single-datapath mode (the cost model's compressed-stream
+    default).
+    """
 
     layer: str
     flow: str
@@ -55,6 +61,7 @@ class FusedTuning:
     vmem_bytes: float
     predicted_s: float           # max(hbm_s, compute_s) roofline estimate
     measured_s: float | None = None
+    hadamard: str | None = None
 
     def kwargs(self) -> dict:
         """Keyword arguments for ``fused_spectral_conv2d``."""
@@ -90,10 +97,13 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
                    hw_safe: bool = True,
                    flows: Sequence[str] = FLOWS,
                    active_bins: int | None = None,
+                   hadamard_modes: Sequence[str] | None = None,
+                   schedule_r: int = df.SCHEDULE_R,
+                   schedule_mu: float = df.SCHEDULE_MU,
                    cost_fn: Callable | None = None,
                    measure_fn: Callable[[FusedTuning], float] | None = None,
                    measure_top_k: int = 3) -> FusedTuning:
-    """Pick (flow, block_n, block_m, block_p) for one layer.
+    """Pick (flow, block_n, block_m, block_p[, hadamard]) for one layer.
 
     Analytic pass: minimize the roofline latency max(hbm_s, compute_s)
     over all in-budget candidates (ties break toward fewer HBM bytes).
@@ -101,25 +111,45 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
     scale with nnz = K^2/alpha and the spectral-transform dims with
     ``active_bins`` (pass the plan's compacted bin count so Alg 1 sees
     exactly the kernel Alg 2 compressed — this is where the two
-    algorithms compose).  Measured pass (optional): re-rank the
-    ``measure_top_k`` best analytic candidates by ``measure_fn`` wall
-    time.  ``hw_safe`` (default) keeps only configurations the fused
-    kernel accepts on real TPU.  ``cost_fn`` defaults to the fused
-    kernel's model; pass ``dataflow.tpu_flow_cost`` (with hw_safe=False)
-    to tune the staged Hadamard under the same selection policy.
+    algorithms compose).
+
+    ``hadamard_modes`` adds the third search axis: a subset of
+    ``df.HADAMARD_MODES`` to rank per candidate (e.g. ('bin',
+    'scheduled')), costed via ``cost_fn(..., hadamard=mode,
+    r=schedule_r, mu=schedule_mu)``; the winning mode lands in
+    ``FusedTuning.hadamard``.  None (default) keeps the legacy
+    single-datapath behavior — the cost model's compressed-stream
+    default and ``hadamard=None`` on the result.
+
+    Measured pass (optional): re-rank the ``measure_top_k`` best
+    analytic candidates by ``measure_fn`` wall time.  ``hw_safe``
+    (default) keeps only configurations the fused kernel accepts on
+    real TPU.  ``cost_fn`` defaults to the fused kernel's model; pass
+    ``dataflow.tpu_flow_cost`` (with hw_safe=False) to tune the staged
+    Hadamard under the same selection policy.
     """
     if cost_fn is None:
         cost_fn = df.tpu_fused_flow_cost
+    modes: Sequence[str | None] = (
+        [None] if hadamard_modes is None else list(hadamard_modes))
+
+    def cost(bn, bp, bm, flow, mode):
+        kw = {} if mode is None else {"hadamard": mode, "r": schedule_r,
+                                      "mu": schedule_mu}
+        return cost_fn(layer, fft_size, alpha, bn, bp, bm, flow,
+                       batch=batch, active_bins=active_bins, **kw)
+
     scored: list[FusedTuning] = []
     for flow, bn, bm, bp in _layer_candidates(layer, fft_size, batch,
                                               blocks, hw_safe, flows):
-        c = cost_fn(layer, fft_size, alpha, bn, bp, bm, flow, batch=batch,
-                    active_bins=active_bins)
-        if c["vmem_bytes"] > vmem_budget:
-            continue
-        scored.append(FusedTuning(
-            layer.name, flow, bn, bm, bp, c["hbm_bytes"], c["vmem_bytes"],
-            max(c["hbm_s"], c["compute_s"])))
+        for mode in modes:
+            c = cost(bn, bp, bm, flow, mode)
+            if c["vmem_bytes"] > vmem_budget:
+                continue
+            scored.append(FusedTuning(
+                layer.name, flow, bn, bm, bp, c["hbm_bytes"],
+                c["vmem_bytes"], max(c["hbm_s"], c["compute_s"]),
+                hadamard=mode))
     if not scored:
         # Nothing fits the budget: return the smallest-footprint config
         # anyway.  Interpret mode runs it regardless; on real TPU an
@@ -135,11 +165,11 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
                 bp = layer.tiles(fft_size) * batch
             elif flow == "input_stationary":
                 bn = layer.c_out
-        c = cost_fn(layer, fft_size, alpha, bn, bp, bm, flow, batch=batch,
-                    active_bins=active_bins)
+        c = cost(bn, bp, bm, flow, modes[0])
         return FusedTuning(layer.name, flow, bn, bm, bp, c["hbm_bytes"],
                            c["vmem_bytes"],
-                           max(c["hbm_s"], c["compute_s"]))
+                           max(c["hbm_s"], c["compute_s"]),
+                           hadamard=modes[0])
     scored.sort(key=lambda tn: (tn.predicted_s, tn.hbm_bytes))
     if measure_fn is None:
         return scored[0]
@@ -159,14 +189,41 @@ def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
                      blocks: Sequence[int] = BLOCK_CANDIDATES,
                      hw_safe: bool = True,
                      active_bins: dict[str, int] | None = None,
+                     hadamard_modes: Sequence[str] | None = None,
+                     schedule_r: int = df.SCHEDULE_R,
+                     schedule_mu: float = df.SCHEDULE_MU,
                      measure: bool = False,
                      interpret: bool | None = None
                      ) -> dict[str, FusedTuning]:
     """Alg-1-on-TPU over a conv stack -> {layer name: FusedTuning}.
 
-    ``alpha`` may be a scalar or a per-layer sequence (the paper prunes
-    layers non-uniformly); ``active_bins`` optionally maps layer name to
-    the compacted bin count Fa realized by that layer's pruned kernels.
+    Args:
+      layers: the conv stack to tune (default: the paper's VGG16).
+      fft_size: spectral tile size K.
+      alpha: kernel compression ratio — a scalar broadcasts, a sequence
+        supplies one alpha per layer (the paper prunes non-uniformly).
+      batch: images per forward call; scales the tile count the blocks
+        are chosen against (plans are batch-specific, see
+        ``models.cnn.forward_spectral``).
+      vmem_budget: the BRAM-cap analogue — candidates whose working set
+        exceeds it are dropped.
+      blocks: candidate block sizes for each of block_n/block_m/block_p
+        (clamped to the layer dims).
+      hw_safe: only emit configurations the fused kernel accepts on
+        real TPU (RMW flows need a consecutive accumulation revisit).
+      active_bins: optional {layer name: Fa} — the compacted bin count
+        realized by that layer's pruned kernels, so the cost model sees
+        the kernel Alg 2 compressed.
+      hadamard_modes: optional subset of ``df.HADAMARD_MODES`` to rank
+        as a third search axis per layer (None = legacy single
+        datapath); the winner lands in ``FusedTuning.hadamard``.
+      schedule_r / schedule_mu: Alg-2 replica count and estimated Eq-14
+        utilization used to cost 'scheduled' candidates — keep them in
+        sync with what the tables will actually be compiled with.
+      measure: re-rank top analytic candidates by wall time on
+        synthetic layer data (``interpret`` as in the kernels).
+
+    Returns {layer name: ``FusedTuning``}.
     """
     from repro.core.sparse import per_layer_alphas
 
@@ -182,6 +239,8 @@ def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
             layer, fft_size, a, batch=batch, vmem_budget=vmem_budget,
             blocks=blocks, hw_safe=hw_safe,
             active_bins=(active_bins or {}).get(layer.name),
+            hadamard_modes=hadamard_modes,
+            schedule_r=schedule_r, schedule_mu=schedule_mu,
             measure_fn=measure_fn)
     return plan
 
@@ -199,7 +258,8 @@ def _make_measure_fn(layer: df.ConvLayer, fft_size: int, alpha: float,
 
     from repro.core import sparse as sp
     from repro.core import spectral as spec
-    from repro.kernels.fused_spectral_conv import fused_spectral_conv2d
+    from repro.kernels.fused_spectral_conv import (
+        fused_spectral_conv2d, fused_spectral_conv2d_scheduled)
 
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (batch, layer.c_in, layer.h_in, layer.w_in),
@@ -213,9 +273,27 @@ def _make_measure_fn(layer: df.ConvLayer, fft_size: int, alpha: float,
         w_f = sp.prune_magnitude(w_f, alpha)
 
     def measure(tn: FusedTuning, iters: int = 3) -> float:
-        fn = lambda: fused_spectral_conv2d(x, w_f, geo,
-                                           interpret=interpret,
-                                           **tn.kwargs())
+        if tn.hadamard == "scheduled" and hasattr(w_f, "values"):
+            # Compile the Alg-2 tables ONCE per candidate, outside the
+            # timing loop — the wall time ranked here must be the
+            # kernel's, not the host scheduler's.
+            from repro.core import scheduler as sch
+            import numpy as np
+            k2 = fft_size * fft_size
+            tabs = sch.compile_layer_tables(
+                np.asarray(w_f.indices),
+                np.asarray(w_f.values).reshape(w_f.n_out, w_f.n_in, k2),
+                k2, df.SCHEDULE_R, min(tn.block_n, w_f.n_out),
+                active=sp.compacted_active_bins(w_f),
+                m_pad_to=min(tn.block_m, w_f.n_in))
+            fn = lambda: fused_spectral_conv2d_scheduled(
+                x, w_f, geo, n_par=tn.block_n, flow=tn.flow,
+                block_m=tn.block_m, block_p=tn.block_p, tables=tabs,
+                interpret=interpret)
+        else:
+            fn = lambda: fused_spectral_conv2d(x, w_f, geo,
+                                               interpret=interpret,
+                                               **tn.kwargs())
         fn().block_until_ready()          # compile
         t0 = time.perf_counter()
         for _ in range(iters):

@@ -267,7 +267,8 @@ def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                   block_n: int, block_p: int, block_m: int,
                   flow: str, batch: int = 1,
                   bytes_per_el: int = 4,
-                  active_bins: int | None = None) -> dict[str, float]:
+                  active_bins: int | None = None,
+                  hadamard: str | None = None) -> dict[str, float]:
     """HBM traffic + VMEM residency of one spectral-Hadamard pallas_call.
 
     The Pallas kernel contracts input channels per frequency bin:
@@ -289,8 +290,10 @@ def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     ``tpu_fused_flow_cost`` (which IS sparsity-aware) and ignored.  The
     scheduled sparse kernel and the fused kernel's active-bin compaction
     are what turn compression into traffic/compute savings.
+    ``hadamard`` is likewise accepted-and-ignored (the staged Hadamard
+    has exactly one datapath).
     """
-    del alpha, active_bins  # dense-plane streaming: no compression here
+    del alpha, active_bins, hadamard  # dense-plane streaming only
     k2 = fft_size * fft_size
     t = layer.tiles(fft_size) * batch
     cplx = 2
@@ -325,33 +328,72 @@ def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     }
 
 
+# Hadamard-stage modes of the fused kernel (kernels.fused_spectral_conv):
+#   'dense'      full-K^2 kernel planes, Karatsuba GEMM;
+#   'bin'        planes compacted to the Fa active bins, Karatsuba GEMM;
+#   'scheduled'  Alg-2 INDEX/VALUE tables executed element-granularly.
+HADAMARD_MODES = ("dense", "bin", "scheduled")
+
+# Default Alg-2 knobs for analytic costing (paper S6.3: r = 10 replicas;
+# mu ~= Eq-14 PE utilization, VGG16 measures ~0.85-0.9 — used to
+# estimate schedule length T ~= nnz / mu before the schedule is built).
+SCHEDULE_R = 10
+SCHEDULE_MU = 0.85
+
+
 def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                         block_n: int, block_p: int, block_m: int,
                         flow: str, batch: int = 1,
                         bytes_per_el: int = 4,
-                        active_bins: int | None = None) -> dict[str, float]:
+                        active_bins: int | None = None,
+                        hadamard: str | None = None,
+                        r: int = SCHEDULE_R,
+                        mu: float = SCHEDULE_MU) -> dict[str, float]:
     """HBM traffic + VMEM working set of ONE fused pallas_call
     (``kernels.fused_spectral_conv``): FFT + Hadamard + IFFT (+ fused
     bias/ReLU epilogue) in a single kernel, so HBM only ever sees
 
       X  overlap-save windows [S, M, P]  real,  S = K^2, P = T * batch
-      W  spectral kernel  [Fa, N, M]     complex, compacted/compressed
+      W  the Hadamard-stage kernel operand (planes or Alg-2 tables)
       Y  valid output tiles [S2, N, P]   real,  S2 = tile^2
 
     — the complex spectral intermediates X~/Y~ of the staged path
     (``tpu_flow_cost``'s x/y terms) never leave VMEM, and the post-conv
     elementwise epilogue adds no traffic at all.
 
-    Sparsity (Alg 1 meets Alg 2): kernel bytes and Hadamard MACs scale
-    with nnz = K^2/alpha — the paper streams kernels in compressed
-    (value, index) form and the schedule executes only non-zeros.  The
-    spectral-transform dims scale with ``active_bins`` (Fa <= K^2, the
-    bin-granular compaction the TPU kernel actually realizes; pass the
-    plan's padded count, default dense).  The nnz-granular Hadamard
-    saving is fully realized by the scheduled sparse kernel and, on the
-    fused path, down to active-bin granularity — the residual gap is the
-    price of MXU-dense GEMMs and is visible here as
-    ``kernel_hbm_bytes`` (nnz-scaled) vs FFT flops (Fa-scaled).
+    Args:
+      layer, fft_size, alpha: the conv layer, tile size K and kernel
+        compression ratio (nnz = K^2/alpha per kernel).
+      block_n/block_p/block_m: VMEM block sizes (the paper's N'/P'/M');
+        clamped to the layer dims.
+      flow: grid iteration order, one of ``FLOWS``.
+      batch: images per call (scales the tile count P).
+      active_bins: Fa <= K^2, the compacted bin count realized by this
+        layer's pruned kernels (``sparse.compacted_active_bins``); None
+        means all K^2 bins.  Scales the spectral-transform dims
+        (FFT/IFFT flops, spectral VMEM blocks, operator residency).
+      hadamard: Hadamard-stage mode (``HADAMARD_MODES``), controlling
+        the kernel-operand traffic and Hadamard MAC terms:
+          None          legacy compressed-stream model: kernel bytes and
+                        MACs ~ nnz (the paper's (value, index) stream),
+                        kept for back-compat with pre-mode callers;
+          'dense'       full K^2 planes — bytes and MACs ~ K^2;
+          'bin'         compacted planes — bytes and MACs ~ Fa (what the
+                        Karatsuba GEMM on active bins actually does);
+          'scheduled'   Alg-2 tables — bytes ~ T*(r + 3N') words per
+                        (group, channel) with T ~= nnz/mu cycles, i.e.
+                        O(nnz); MACs are the HONEST one-hot-matmul
+                        realization (gather/route/scatter GEMMs), which
+                        exceeds the paper's element count — the mode
+                        wins on bandwidth, not flops, and Alg 1 sees
+                        both sides of that trade.
+      r, mu: Alg-2 replica count and estimated Eq-14 utilization used
+        to size the scheduled tables before the schedule exists.
+
+    Returns a dict with ``hbm_bytes``, ``kernel_hbm_bytes`` (the
+    W-operand share of hbm_bytes, re-read factors included),
+    ``had_flops`` (Hadamard stage only), ``flops``, ``vmem_bytes``,
+    ``hbm_s``/``compute_s`` roofline times and ``fits_vmem``.
 
     Re-read factors follow the grid iteration order of each flow:
 
@@ -363,6 +405,9 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
       'input_stationary'  (Flow #2, reuse activations): X read once; W
           re-read per p block; same psum RMW traffic.
     """
+    if hadamard is not None and hadamard not in HADAMARD_MODES:
+        raise ValueError(f"hadamard must be None or one of "
+                         f"{HADAMARD_MODES}, got {hadamard!r}")
     k2 = fft_size * fft_size
     tile = layer.tile_size(fft_size)
     t = layer.tiles(fft_size) * batch
@@ -372,11 +417,35 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     gn = max(1, _ceil(layer.c_out, block_n))
     gm = max(1, _ceil(layer.c_in, block_m))
     gp = max(1, _ceil(t, block_p))
+    bn = min(block_n, layer.c_out)
+    bm = min(block_m, layer.c_in)
+    bp = min(block_p, t)
     s = k2                   # overlap-save: K x K input windows
     s2 = tile * tile         # only the valid rows are written back
     x_bytes = layer.c_in * s * t * bytes_per_el
-    w_bytes = layer.c_out * layer.c_in * nnz * cplx * bytes_per_el
     y_bytes = layer.c_out * s2 * t * bytes_per_el
+
+    t_cyc = max(nnz, _ceil(nnz, mu))     # schedule length estimate
+    if hadamard is None:                 # legacy compressed stream
+        w_bytes = layer.c_out * layer.c_in * nnz * cplx * bytes_per_el
+        had_flops = 8 * t * nnz * layer.c_in * layer.c_out
+    elif hadamard == "dense":
+        w_bytes = layer.c_out * layer.c_in * k2 * cplx * bytes_per_el
+        had_flops = 8 * t * k2 * layer.c_in * layer.c_out
+    elif hadamard == "bin":
+        w_bytes = layer.c_out * layer.c_in * fa * cplx * bytes_per_el
+        had_flops = 8 * t * fa * layer.c_in * layer.c_out
+    else:                                # scheduled: Alg-2 tables
+        mp = gm * bm
+        w_bytes = gn * mp * t_cyc * (r + 3 * bn) * bytes_per_el
+        # One-hot-matmul realization, per (group, channel, cycle):
+        #   p-dependent  gather 2*r*Fa + route 2*N'*r + cmul 6*N'
+        #                + scatter 2*N'*Fa  (per tile element),
+        #   p-independent  scatter one-hot o = sel @ gather,
+        #                2*N'*r*Fa, recomputed per p block.
+        per_cyc_p = 2 * r * fa + 2 * bn * r + 6 * bn + 2 * bn * fa
+        per_cyc_fix = 2 * bn * r * fa
+        had_flops = gn * mp * t_cyc * (per_cyc_p * t + per_cyc_fix * gp)
 
     if flow == "output_stationary":
         hbm = x_bytes * gn + w_bytes * gp + y_bytes
@@ -390,21 +459,25 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     else:
         raise ValueError(flow)
 
-    bn = min(block_n, layer.c_out)
-    bm = min(block_m, layer.c_in)
-    bp = min(block_p, t)
     # Streamed blocks are double-buffered by the Pallas pipeline (x2);
     # the DFT operators, the in-flight spectral blocks and the psum
     # scratch are single-copy VMEM residents.  Spectral dims are Fa.
-    vmem = (2 * (s * bm * bp                       # X window block
-                 + cplx * fa * bn * bm             # W block (re+im)
-                 + s2 * bn * bp)                   # Y output block
-            + cplx * fa * bm * bp                  # X~ in flight
-            + 2 * cplx * fa * bn * bp              # Y~ psum / Karatsuba
-            + 2 * fa * s + 2 * s2 * fa             # DFT / IDFT operators
+    if hadamard == "scheduled":
+        w_block = bm * t_cyc * (r + 3 * bn)       # table block
+        flight = bm * (r * fa + bn * r + bn * fa  # one-hot g/s/o
+                       + 2 * r * bp + 2 * bn * bp)  # replicas + PE in
+    else:
+        w_block = cplx * fa * bn * bm             # W plane block
+        flight = 0
+    vmem = (2 * (s * bm * bp                      # X window block
+                 + w_block
+                 + s2 * bn * bp)                  # Y output block
+            + cplx * fa * bm * bp                 # X~ in flight
+            + 2 * cplx * fa * bn * bp             # Y~ psum / Karatsuba
+            + flight
+            + 2 * fa * s + 2 * s2 * fa            # DFT / IDFT operators
             ) * bytes_per_el
 
-    had_flops = 8 * t * nnz * layer.c_in * layer.c_out
     fft_flops = (2 * 2 * fa * s * layer.c_in * t
                  * (gn if flow != "input_stationary" else 1))
     ifft_passes = 1 if flow == "output_stationary" else gm
@@ -413,6 +486,7 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     return {
         "hbm_bytes": float(hbm),
         "kernel_hbm_bytes": float(w_hbm),
+        "had_flops": float(had_flops),
         "vmem_bytes": float(vmem),
         "flops": float(flops),
         "hbm_s": float(hbm) / TPU_HBM_GBPS,

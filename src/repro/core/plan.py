@@ -17,12 +17,19 @@ small IR built once, offline, and executed by every backend of
       (== the union of non-zero kernel bins, see
       ``scheduler.active_bins_from_tables``) with the compacted kernel
       planes and restricted DFT operators derived from it,
-    * the autotuned (flow, block_n, block_m, block_p) from Alg-1-on-TPU
-      (``core.autotune``), costed sparsity-aware so Alg 1 sees the
-      kernel Alg 2 compressed,
+    * the autotuned (flow, block_n, block_m, block_p, hadamard mode)
+      from Alg-1-on-TPU (``core.autotune``), costed sparsity-aware so
+      Alg 1 sees the kernel Alg 2 compressed AND ranks the scheduled
+      element-granular datapath against bin compaction per layer,
+    * for layers whose mode is 'scheduled': the full Alg-2 INDEX/VALUE
+      tables (one exact-cover schedule per kernel-group x channel,
+      ``scheduler.compile_layer_tables``), remapped to compacted-bin
+      coordinates and padded to the tuned blocks — the fused kernel
+      executes them directly,
     * a fused epilogue spec (bias + ReLU inside the kernel flush,
       2x2-max-pool flag for the spatial stage that follows),
-    * sampled Alg-2 schedule statistics (cycles, Eq-14 PE utilization).
+    * Alg-2 schedule statistics (cycles, Eq-14 PE utilization) —
+      sampled for plane modes, exact for scheduled layers.
 
   NetworkPlan  the per-layer plans plus the FC-head bookkeeping.
 
@@ -36,7 +43,7 @@ geometry work ever runs inside (or between) jitted steps.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -61,9 +68,47 @@ class EpilogueSpec:
     pool: bool = False       # 2x2 max-pool follows this layer (spatial)
 
 
+class PlanTables(NamedTuple):
+    """Device-resident Alg-2 INDEX/VALUE tables for one scheduled layer
+    (stacked layout of ``scheduler.LayerTables``; consumed verbatim by
+    ``kernels.fused_spectral_conv.fused_spectral_pipeline_scheduled``).
+    """
+
+    idx: Array                        # [GN, Mp, T, r]  int32
+    sel: Array                        # [GN, Mp, T, N'] int32
+    vr: Array                         # [GN, Mp, T, N'] f32
+    vi: Array
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self)
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class LayerPlan:
-    """Precompiled state for one spectral conv layer (see module doc)."""
+    """Precompiled state for one spectral conv layer (see module doc).
+
+    Fields (N = c_out, M = c_in, S = K^2, S2 = tile^2, Fa = active
+    bins):
+
+      layer / geo / kernels / alpha   static layer description, tile
+          geometry and the pruned spectral kernels (per-layer alpha).
+      tuning      Alg-1-on-TPU result: flow, block sizes, the chosen
+          Hadamard mode and its analytic cost.
+      epilogue / bias                 fused bias+ReLU spec (+ pool-after
+          flag); bias is [1, N] f32, zeros when disabled.
+      active      compacted active-bin set (host numpy) or None (all
+          K^2 bins); coordinate system of the spectral operands below.
+      wr / wi     [Fa, N, M] f32 kernel planes (dense/bin modes).
+      dfr / dfi   [Fa, S] forward DFT rows; dvr/dvi [S2, Fa] inverse
+          DFT on valid rows — shared by every Hadamard mode.
+      hadamard    'dense' | 'bin' | 'scheduled' — which datapath
+          ``execute_layer_plan`` dispatches to.
+      tables      ``PlanTables`` for scheduled layers, else None.
+      schedule_cycles / pe_utilization   Alg-2 stats: exact totals when
+          the full tables were compiled (scheduled mode), otherwise
+          sampled (None when scheduling was skipped).
+    """
 
     layer: df.ConvLayer
     geo: spec.SpectralGeometry
@@ -79,8 +124,10 @@ class LayerPlan:
     dfi: Array
     dvr: Array                        # [S2, Fa] inverse DFT (valid rows)
     dvi: Array
-    schedule_cycles: int | None       # sampled Alg-2 stats (None: skipped)
-    pe_utilization: float | None      # Eq 14, sampled
+    schedule_cycles: int | None       # Alg-2 stats (None: skipped)
+    pe_utilization: float | None      # Eq 14
+    hadamard: str = "bin"             # Hadamard-stage mode
+    tables: PlanTables | None = None  # Alg-2 tables (scheduled mode)
 
     @property
     def n_active_bins(self) -> int:
@@ -95,10 +142,13 @@ class LayerPlan:
             "nnz": self.kernels.nnz,
             "active_bins": self.n_active_bins,
             "flow": self.tuning.flow,
+            "hadamard": self.hadamard,
             "block_n": self.tuning.block_n,
             "block_m": self.tuning.block_m,
             "block_p": self.tuning.block_p,
             "hbm_bytes": self.tuning.hbm_bytes,
+            "table_bytes": (self.tables.nbytes
+                            if self.tables is not None else 0),
             "schedule_cycles": self.schedule_cycles,
             "pe_utilization": self.pe_utilization,
             "pool": self.epilogue.pool,
@@ -150,6 +200,30 @@ def _sampled_schedule_stats(sk: sp.SparseSpectralKernels, k2: int, *,
     return total_cycles, mu, np.asarray(sorted(bins), np.int64)
 
 
+def _resolve_hadamard_modes(hadamard: str, alpha: float, schedule: bool,
+                            active: np.ndarray | None) -> list[str]:
+    """Hadamard-mode candidates for one layer, honoring availability.
+
+    'bin' needs a compacted active set (otherwise it IS dense);
+    'scheduled' needs a non-degenerate schedule (alpha > 1 and
+    scheduling enabled) — when it degenerates, the request falls back
+    to the plane datapath, the ISSUE's dense/bin fallback.
+    """
+    plane = "bin" if active is not None else "dense"
+    sched_ok = schedule and alpha > 1.0
+    if hadamard == "auto":
+        return [plane] + (["scheduled"] if sched_ok else [])
+    if hadamard == "scheduled":
+        return ["scheduled"] if sched_ok else [plane]
+    if hadamard == "bin":
+        return [plane]
+    if hadamard == "dense":
+        return ["dense"]
+    raise ValueError(
+        f"hadamard must be 'auto' or one of {df.HADAMARD_MODES}, "
+        f"got {hadamard!r}")
+
+
 def build_network_plan(params: dict, cfg, *,
                        batch: int = 1,
                        prune: str = "magnitude",
@@ -160,17 +234,47 @@ def build_network_plan(params: dict, cfg, *,
                        schedule_r: int = 10,
                        schedule_n_par: int = 64,
                        schedule_channel_sample: int = 2,
+                       hadamard: str = "auto",
+                       schedule_mu: float = df.SCHEDULE_MU,
                        measure: bool = False,
                        interpret: bool | None = None) -> NetworkPlan:
     """Compile the whole conv stack once (see module docstring).
 
-    ``cfg`` is duck-typed on ``layers`` / ``fft_size`` / ``alpha`` /
-    ``pool_after`` / ``name`` (``models.cnn.SpectralCNNConfig``);
-    ``cfg.alpha`` may be a scalar or a per-layer sequence.  ``params``
-    supplies spatial conv weights + biases (``models.cnn.init``);
-    kernels are spectrally transformed and pruned here — the paper's
-    offline path — and the per-layer bias is baked into the plan for the
-    fused epilogue.
+    Args:
+      params: spatial conv weights + biases (``models.cnn.init``);
+        kernels are spectrally transformed and pruned here — the
+        paper's offline path — and each layer's bias is baked into the
+        plan for the fused epilogue.
+      cfg: duck-typed on ``layers`` / ``fft_size`` / ``alpha`` /
+        ``pool_after`` / ``name`` (``models.cnn.SpectralCNNConfig``);
+        ``cfg.alpha`` may be a scalar or a per-layer sequence.
+      batch: images per forward call the autotuner assumes; the plan
+        records it and the fused backend enforces it for RMW flows.
+      prune: 'magnitude' (SPEC2-like) or 'random' (Fig-10 robustness).
+      vmem_budget / blocks / hw_safe: Alg-1 search space, see
+        ``autotune.autotune_layer``.
+      schedule: run Alg 2 at all (False skips schedule stats AND
+        disables the scheduled datapath).
+      schedule_r: r, the BRAM-replica analogue (paper S6.3: 10).
+      schedule_n_par: PE-group size for the SAMPLED stats of plane-mode
+        layers (scheduled layers group by the tuned block_n instead).
+      schedule_channel_sample: channels sampled for those stats.
+      hadamard: 'auto' (default — Alg 1 ranks the available modes per
+        layer), or force 'dense' / 'bin' / 'scheduled'.  A forced
+        'scheduled' falls back to the plane datapath when the schedule
+        degenerates (alpha ~= 1); forced 'bin' degrades to 'dense' when
+        no bin is empty.
+      schedule_mu: estimated Eq-14 utilization used by the cost model
+        to size scheduled tables before the schedules exist.
+      measure: re-rank top analytic candidates by wall time
+        (``autotune``); ``interpret`` selects the kernel execution mode
+        for that measurement.
+
+    For every layer whose chosen mode is 'scheduled', the full Alg-2
+    tables are compiled here (one exact-cover schedule per kernel-group
+    x input-channel — the expensive offline step the FPGA does at
+    synthesis time) and stored device-resident in the plan; the fused
+    kernel then executes them without any host-side work per call.
     """
     prune_fn = {"magnitude": sp.prune_magnitude,
                 "random": sp.prune_random}[prune]
@@ -204,11 +308,30 @@ def build_network_plan(params: dict, cfg, *,
         if measure:
             measure_fn = at._make_measure_fn(layer, cfg.fft_size, alpha,
                                              batch, interpret)
+        modes = _resolve_hadamard_modes(hadamard, alpha, schedule, active)
         tuning = at.autotune_layer(
             layer, cfg.fft_size, alpha, batch=batch,
             vmem_budget=vmem_budget, blocks=blocks, hw_safe=hw_safe,
             active_bins=len(active) if active is not None else None,
-            measure_fn=measure_fn)
+            hadamard_modes=modes, schedule_r=schedule_r,
+            schedule_mu=schedule_mu, measure_fn=measure_fn)
+
+        tables = None
+        if tuning.hadamard == "scheduled":
+            # The paper's offline schedule compilation: one exact-cover
+            # schedule per (kernel-group, channel), stacked and
+            # remapped to the compacted coordinates of the operators
+            # above.  Group size == the tuned block_n; channel padding
+            # == the tuned block_m.
+            lt = sch.compile_layer_tables(
+                np.asarray(sk.indices),
+                np.asarray(sk.values).reshape(layer.c_out, layer.c_in,
+                                              k2),
+                k2, schedule_r, min(tuning.block_n, layer.c_out),
+                active=active, m_pad_to=min(tuning.block_m, layer.c_in))
+            tables = PlanTables(jnp.asarray(lt.idx), jnp.asarray(lt.sel),
+                                jnp.asarray(lt.vr), jnp.asarray(lt.vi))
+            cycles, mu = lt.total_cycles, lt.pe_utilization  # exact
 
         epi = EpilogueSpec(bias=True, relu=True,
                            pool=layer.name in pool_after)
@@ -217,7 +340,10 @@ def build_network_plan(params: dict, cfg, *,
             layer=layer, geo=geo, kernels=sk, alpha=alpha, tuning=tuning,
             epilogue=epi, bias=bias, active=active, wr=wr, wi=wi,
             dfr=dfr, dfi=dfi, dvr=dvr, dvi=dvi,
-            schedule_cycles=cycles, pe_utilization=mu))
+            schedule_cycles=cycles, pe_utilization=mu,
+            hadamard=tuning.hadamard or
+            ("bin" if active is not None else "dense"),
+            tables=tables))
     return NetworkPlan(name=getattr(cfg, "name", "spectral-cnn"),
                        fft_size=cfg.fft_size, batch=batch,
                        layers=tuple(plans))

@@ -323,6 +323,138 @@ def active_bins_from_tables(tables: "ScheduleTables | list[ScheduleTables]"
     return np.asarray(sorted(bins), np.int64)
 
 
+@dataclasses.dataclass(frozen=True)
+class LayerTables:
+    """Whole-layer Alg-2 tables, stacked and padded for the FUSED kernel.
+
+    ``build_tables`` emits one ``ScheduleTables`` per (kernel-group,
+    input-channel) pair; the fused scheduled datapath
+    (``kernels.fused_spectral_conv``, hadamard mode 'scheduled') wants
+    them as four rectangular operands it can block over the (n, m) grid
+    axes.  Two FPGA planes are folded away relative to Fig 6:
+
+      * ``valid`` — invalid PE lanes carry a zero weight, and a zero
+        weight already kills the MAC *and* the scatter contribution;
+      * ``out_index`` — by construction ``out_index == index_table[t,
+        sel]``, so the scatter one-hot is recovered in-kernel as
+        ``onehot(sel) @ onehot(index_table)`` (route the gather one-hot
+        instead of the gathered value) and never needs streaming.
+
+    Shapes (GN kernel groups of N' = n_par, Mp >= M channels, T cycles):
+
+      idx  int32 [GN, Mp, T, r]   replica read addresses, in COMPACTED
+                                  active-bin coordinates when ``active``
+                                  was given (0-padded);
+      sel  int32 [GN, Mp, T, N']  replica column feeding PE n;
+      vr/vi f32  [GN, Mp, T, N']  complex weight per PE lane, zeroed on
+                                  idle lanes and padded cycles/channels.
+
+    ``total_cycles`` sums schedule length over every (group, channel)
+    pair — the layer's serial Hadamard latency in PE cycles — and
+    ``pe_utilization`` is the exact Eq-14 value over the whole layer
+    (not sampled).
+    """
+
+    idx: np.ndarray
+    sel: np.ndarray
+    vr: np.ndarray
+    vi: np.ndarray
+    total_cycles: int
+    pe_utilization: float
+
+    @property
+    def n_groups(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def m_pad(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def n_cycles(self) -> int:
+        return self.idx.shape[2]
+
+    @property
+    def r(self) -> int:
+        return self.idx.shape[3]
+
+    @property
+    def n_par(self) -> int:
+        return self.sel.shape[3]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in (self.idx, self.sel, self.vr, self.vi))
+
+
+def compile_layer_tables(indices: np.ndarray, values: np.ndarray,
+                         k2: int, r: int, n_par: int, *,
+                         method: str = "exact_cover",
+                         active: np.ndarray | None = None,
+                         m_pad_to: int = 1) -> LayerTables:
+    """Run Alg 2 over EVERY (kernel-group, input-channel) pair of a layer
+    and stack the resulting INDEX/VALUE tables into ``LayerTables``.
+
+    indices: int [N, M, nnz] per-kernel sorted frequency indices
+             (``SparseSpectralKernels.indices``);
+    values:  complex [N, M, K^2] dense kernel values (zeros at pruned
+             positions);
+    n_par:   N', the PE-group size == the fused kernel's block_n;
+    active:  optional sorted active-bin set — table coordinates are
+             remapped to positions within it so the kernel can gather/
+             scatter directly against compacted spectral blocks;
+    m_pad_to: pad the channel axis to this multiple (the fused kernel's
+             block_m) with inert all-zero channels.
+
+    This is the paper's offline schedule-compilation step and runs in
+    host numpy exactly once per layer (``core.plan``); padded cycles,
+    channels and group remainders all carry zero weights and are inert.
+    """
+    fn = SCHEDULERS[method]
+    n, m_ch, _ = indices.shape
+    groups = [(g0, min(g0 + n_par, n)) for g0 in range(0, n, n_par)]
+    per: list[list[ScheduleTables]] = []
+    t_max = 1
+    total_ops = 0
+    total_slots = 0
+    total_cycles = 0
+    for g0, g1 in groups:
+        row = []
+        for m in range(m_ch):
+            mat = np.asarray(indices[g0:g1, m, :])
+            s = fn(mat, k2, r)
+            total_ops += s.total_ops
+            total_slots += s.n_cycles * (g1 - g0)
+            total_cycles += s.n_cycles
+            tb = build_tables(s, np.asarray(values[g0:g1, m, :]), mat)
+            t_max = max(t_max, tb.n_cycles)
+            row.append(tb)
+        per.append(row)
+
+    pos = None
+    if active is not None:
+        pos = np.zeros(k2, np.int64)
+        pos[np.asarray(active)] = np.arange(len(active))
+    mp = m_ch + (-m_ch) % m_pad_to
+    gn = len(groups)
+    idx = np.zeros((gn, mp, t_max, r), np.int32)
+    sel = np.zeros((gn, mp, t_max, n_par), np.int32)
+    vr = np.zeros((gn, mp, t_max, n_par), np.float32)
+    vi = np.zeros((gn, mp, t_max, n_par), np.float32)
+    for g, (g0, g1) in enumerate(groups):
+        ng = g1 - g0
+        for m, tb in enumerate(per[g]):
+            t = tb.n_cycles
+            it = tb.index_table
+            idx[g, m, :t] = pos[it] if pos is not None else it
+            sel[g, m, :t, :ng] = tb.sel
+            v = np.where(tb.valid, tb.values, 0)
+            vr[g, m, :t, :ng] = v.real
+            vi[g, m, :t, :ng] = v.imag
+    mu = total_ops / max(1, total_slots)
+    return LayerTables(idx, sel, vr, vi, total_cycles, mu)
+
+
 def execute_tables(tables: ScheduleTables, x_tile: np.ndarray) -> np.ndarray:
     """Replay the INDEX/VALUE tables against one spectral input tile.
 

@@ -30,6 +30,21 @@ two contributions to the same pallas_call:
     planes, Karatsuba Hadamard batch, IFFT columns and the psum scratch
     all shrink by Fa/K^2.  When nnz ~= K^2 (padded Fa >= K^2) the caller
     falls back to dense — compaction would buy nothing.
+  * **Element-granular scheduled sparse Hadamard (Alg 2 proper).**  The
+    Hadamard stage has three modes.  'dense' and 'bin' stream kernel
+    PLANES ([Fa, N, M] complex) and run the Karatsuba GEMM above.
+    'scheduled' instead streams the exact-cover schedule's INDEX/VALUE
+    tables (``scheduler.compile_layer_tables``) and executes them with
+    the one-hot-matmul datapath of ``kernels.sparse_hadamard`` — gather
+    r replicas per cycle, route through the sel crossbar, complex-MAC,
+    scatter — *inside the same pallas_call*, between the tile-FFT and
+    the IFFT/epilogue.  Kernel-operand traffic drops from O(Fa*N*M)
+    plane words toward O(nnz) table words (~3*T*N' words per group and
+    channel, T ~= nnz/mu cycles), which is what the paper streams; the
+    price is one-hot MXU work, so ``core.autotune`` ranks the mode per
+    layer against bin compaction with ``dataflow.tpu_fused_flow_cost
+    (hadamard=...)`` and falls back to dense/bin when the schedule
+    degenerates (alpha ~= 1).
 
 Per grid step the kernel performs, entirely in VMEM:
 
@@ -192,6 +207,74 @@ def _epilogue(y, b_ref, relu: bool):
     return y
 
 
+def _ifft_real_nf(re, im, dvr_ref, dvi_ref):
+    """Stage 3 for the scheduled datapath: Re(Dinv @ Y~) on n-leading
+    psums.  re/im [N', Fa, bp] -> [S2, N', bp] finished spatial rows."""
+    dn = (((1,), (1,)), ((), ()))
+    return (jax.lax.dot_general(dvr_ref[...], re, dn,
+                                preferred_element_type=jnp.float32)
+            - jax.lax.dot_general(dvi_ref[...], im, dn,
+                                  preferred_element_type=jnp.float32))
+
+
+def _scheduled_hadamard(idx_ref, sel_ref, vr_ref, vi_ref, xfr, xfi):
+    """Stage 2, 'scheduled' mode: execute the Alg-2 INDEX/VALUE tables
+    (``scheduler.LayerTables`` blocks) with MXU one-hot matmuls.
+
+    Per cycle t, vectorized over the bm channels of the block and the
+    bp tiles: gather the r replica rows of X~ (one-hot [r, Fa] @ X~),
+    route them to the N' PE lanes (sel one-hot [N', r] @ replicas),
+    complex-MAC against the VALUE plane (idle lanes carry zero weights),
+    and scatter into the psum — the scatter one-hot is the ROUTED gather
+    one-hot (sel @ gather), which is exactly ``out_index ==
+    index_table[t, sel]`` of Fig 6, so the out-index plane never needs
+    streaming.
+
+    idx_ref [1, bm, T, r] int32 (compacted-bin coords), sel_ref /
+    vr_ref / vi_ref [1, bm, T, N']; xfr/xfi [Fa, bm, bp] spectral
+    planes.  Returns (re, im) psum contributions [N', Fa, bp] summed
+    over the block's channels and cycles.
+    """
+    _, bm, n_cycles, r = idx_ref.shape
+    n_pe = sel_ref.shape[3]
+    fa, _, bp = xfr.shape
+    xr = jnp.transpose(xfr, (1, 0, 2))                  # [bm, Fa, bp]
+    xi = jnp.transpose(xfi, (1, 0, 2))
+    idx, sel = idx_ref[0], sel_ref[0]
+    vr, vi = vr_ref[0], vi_ref[0]
+    f_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, fa), 2)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, r), 2)
+
+    def bmm(a, b):                                      # batch over bm
+        return jax.lax.dot_general(a, b, (((2,), (1,)), ((0,), (0,))),
+                                   preferred_element_type=jnp.float32)
+
+    def cycle(t, carry):
+        ar, ai = carry
+        take = lambda a: jax.lax.dynamic_index_in_dim(a, t, 1,
+                                                      keepdims=False)
+        g = (take(idx)[:, :, None] == f_iota).astype(jnp.float32)
+        s = (take(sel)[:, :, None] == r_iota).astype(jnp.float32)
+        rep_r = bmm(g, xr)                              # [bm, r, bp]
+        rep_i = bmm(g, xi)
+        in_r = bmm(s, rep_r)                            # [bm, N', bp]
+        in_i = bmm(s, rep_i)
+        wr = take(vr)[:, :, None]
+        wi = take(vi)[:, :, None]
+        pr = wr * in_r - wi * in_i
+        pi = wr * in_i + wi * in_r
+        o = bmm(s, g)                                   # [bm, N', Fa]
+        dn = (((0,), (0,)), ((1,), (1,)))               # sum channels
+        ar = ar + jax.lax.dot_general(o, pr, dn,
+                                      preferred_element_type=jnp.float32)
+        ai = ai + jax.lax.dot_general(o, pi, dn,
+                                      preferred_element_type=jnp.float32)
+        return ar, ai
+
+    zero = jnp.zeros((n_pe, fa, bp), jnp.float32)
+    return jax.lax.fori_loop(0, n_cycles, cycle, (zero, zero))
+
+
 def _kernel_os(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
                b_ref, y_ref, acc_r, acc_i, *, n_m_blocks: int, relu: bool):
     """Output-stationary: psums live in VMEM scratch across the innermost
@@ -271,6 +354,63 @@ def _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks: int,
         y_ref[...] = _epilogue(y_ref[...] + y, b_ref, relu)
 
 
+def _kernel_os_sched(x_ref, idx_ref, sel_ref, vr_ref, vi_ref,
+                     dfr_ref, dfi_ref, dvr_ref, dvi_ref, b_ref, y_ref,
+                     acc_r, acc_i, *, n_m_blocks: int, relu: bool):
+    """Output-stationary, scheduled Hadamard: n-leading psums [N', Fa, bp]
+    accumulate in VMEM scratch across the m grid dim."""
+    gm = pl.program_id(2)
+
+    @pl.when(gm == 0)
+    def _init():
+        acc_r[...] = jnp.zeros_like(acc_r)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    re, im = _scheduled_hadamard(idx_ref, sel_ref, vr_ref, vi_ref,
+                                 *_tile_fft(x_ref, dfr_ref, dfi_ref))
+    acc_r[...] += re
+    acc_i[...] += im
+
+    @pl.when(gm == n_m_blocks - 1)
+    def _flush():
+        y = _ifft_real_nf(acc_r[...], acc_i[...], dvr_ref, dvi_ref)
+        y_ref[...] = _epilogue(y, b_ref, relu)
+
+
+def _kernel_ws_sched(x_ref, idx_ref, sel_ref, vr_ref, vi_ref,
+                     dfr_ref, dfi_ref, dvr_ref, dvi_ref, b_ref, y_ref,
+                     *, n_m_blocks: int, relu: bool):
+    """Weight-stationary, scheduled Hadamard: the table block (the
+    'kernel' operand of this mode) is constant across the inner p loop;
+    partial psums are IFFT'd eagerly and RMW'd as spatial rows."""
+    gm = pl.program_id(1)
+    re, im = _scheduled_hadamard(idx_ref, sel_ref, vr_ref, vi_ref,
+                                 *_tile_fft(x_ref, dfr_ref, dfi_ref))
+    y = _ifft_real_nf(re, im, dvr_ref, dvi_ref)
+    _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks, relu)
+
+
+def _kernel_is_sched(x_ref, idx_ref, sel_ref, vr_ref, vi_ref,
+                     dfr_ref, dfi_ref, dvr_ref, dvi_ref, b_ref, y_ref,
+                     xfr_s, xfi_s, *, n_m_blocks: int, relu: bool):
+    """Input-stationary, scheduled Hadamard: the window block's FFT is
+    computed once (n-block 0) into VMEM scratch and reused while table
+    blocks re-stream."""
+    gm = pl.program_id(1)
+    gn = pl.program_id(2)
+
+    @pl.when(gn == 0)
+    def _fft_once():
+        xfr, xfi = _tile_fft(x_ref, dfr_ref, dfi_ref)
+        xfr_s[...] = xfr
+        xfi_s[...] = xfi
+
+    re, im = _scheduled_hadamard(idx_ref, sel_ref, vr_ref, vi_ref,
+                                 xfr_s[...], xfi_s[...])
+    y = _ifft_real_nf(re, im, dvr_ref, dvi_ref)
+    _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks, relu)
+
+
 # ---------------------------------------------------------------------------
 # pallas_call wrapper
 # ---------------------------------------------------------------------------
@@ -282,6 +422,47 @@ def _pad_axis(x: Array, axis: int, mult: int) -> Array:
     pad = [(0, 0)] * x.ndim
     pad[axis] = (0, rem)
     return jnp.pad(x, pad)
+
+
+def _flow_layout(flow: str, gn: int, gm: int, gp: int):
+    """(grid, canon, dimension_semantics) for a reuse flow.
+
+    ``canon`` maps the flow's grid arguments back to canonical
+    (n, p, m) block indices, so every operand's BlockSpec index map can
+    be written once against the canonical order."""
+    if flow == "output_stationary":
+        grid = (gn, gp, gm)
+        canon = lambda n, p, m: (n, p, m)
+        semantics = ("parallel", "parallel", "arbitrary")
+    elif flow == "weight_stationary":
+        grid = (gn, gm, gp)
+        canon = lambda n, m, p: (n, p, m)
+        semantics = ("parallel", "arbitrary", "arbitrary")
+    elif flow == "input_stationary":
+        grid = (gp, gm, gn)
+        canon = lambda p, m, n: (n, p, m)
+        semantics = ("parallel", "arbitrary", "arbitrary")
+    else:
+        raise ValueError(f"flow must be one of {FLOWS}")
+    return grid, canon, semantics
+
+
+def _check_hw_safe(flow: str, gn: int, gp: int, interpret: bool) -> None:
+    """Pallas TPU keeps an output window only across CONSECUTIVE grid
+    steps; the RMW flows accumulate into y across the m axis, so on
+    hardware the revisit must be consecutive (see module docstring)."""
+    if interpret:
+        return
+    if flow == "weight_stationary" and gp > 1:
+        raise NotImplementedError(
+            "weight_stationary on TPU hardware needs block_p >= P "
+            f"(got {gp} p blocks); use output_stationary or a "
+            "hardware-safe autotune plan")
+    if flow == "input_stationary" and gn > 1:
+        raise NotImplementedError(
+            "input_stationary on TPU hardware needs block_n >= N "
+            f"(got {gn} n blocks); use output_stationary or a "
+            "hardware-safe autotune plan")
 
 
 @functools.partial(
@@ -322,54 +503,26 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
     bias_ = _pad_axis(bias, 1, bn)
     np_, mp_, pp_ = wr_.shape[1], wr_.shape[2], xt_.shape[2]
     gn, gm, gp = np_ // bn, mp_ // bm, pp_ // bp
-
-    if not interpret:
-        # Pallas TPU keeps an output window only across CONSECUTIVE grid
-        # steps; the RMW flows accumulate into y across the m axis, so on
-        # hardware the revisit must be consecutive (see module docstring).
-        if flow == "weight_stationary" and gp > 1:
-            raise NotImplementedError(
-                "weight_stationary on TPU hardware needs block_p >= P "
-                f"(got {bp} < {pp_}); use output_stationary or a "
-                "hardware-safe autotune plan")
-        if flow == "input_stationary" and gn > 1:
-            raise NotImplementedError(
-                "input_stationary on TPU hardware needs block_n >= N "
-                f"(got {bn} < {np_}); use output_stationary or a "
-                "hardware-safe autotune plan")
+    _check_hw_safe(flow, gn, gp, interpret)
+    grid, canon, semantics = _flow_layout(flow, gn, gm, gp)
 
     if flow == "output_stationary":
-        grid = (gn, gp, gm)
-        x_map = lambda a, b, c: (0, c, b)
-        w_map = lambda a, b, c: (0, a, c)
-        b_map = lambda a, b, c: (0, a)
-        y_map = lambda a, b, c: (0, a, b)
         kernel = functools.partial(_kernel_os, n_m_blocks=gm, relu=relu)
         scratch = [pltpu.VMEM((fa, bn, bp), jnp.float32)] * 2
-        semantics = ("parallel", "parallel", "arbitrary")
     elif flow == "weight_stationary":
-        grid = (gn, gm, gp)
-        x_map = lambda a, c, b: (0, c, b)
-        w_map = lambda a, c, b: (0, a, c)
-        b_map = lambda a, c, b: (0, a)
-        y_map = lambda a, c, b: (0, a, b)
         kernel = functools.partial(_kernel_ws, n_m_blocks=gm, relu=relu)
         scratch = []
-        semantics = ("parallel", "arbitrary", "arbitrary")
     else:  # input_stationary
-        grid = (gp, gm, gn)
-        x_map = lambda b, c, a: (0, c, b)
-        w_map = lambda b, c, a: (0, a, c)
-        b_map = lambda b, c, a: (0, a)
-        y_map = lambda b, c, a: (0, a, b)
         kernel = functools.partial(_kernel_is, n_m_blocks=gm, relu=relu)
         scratch = [pltpu.VMEM((fa, bm, bp), jnp.float32)] * 2
-        semantics = ("parallel", "arbitrary", "arbitrary")
 
-    x_spec = pl.BlockSpec((s, bm, bp), x_map)
-    w_spec = pl.BlockSpec((fa, bn, bm), w_map)
-    b_spec = pl.BlockSpec((1, bn), b_map)
-    y_spec = pl.BlockSpec((s2, bn, bp), y_map)
+    x_spec = pl.BlockSpec(
+        (s, bm, bp), lambda *g: (0, canon(*g)[2], canon(*g)[1]))
+    w_spec = pl.BlockSpec(
+        (fa, bn, bm), lambda *g: (0, canon(*g)[0], canon(*g)[2]))
+    b_spec = pl.BlockSpec((1, bn), lambda *g: (0, canon(*g)[0]))
+    y_spec = pl.BlockSpec(
+        (s2, bn, bp), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
     d_spec = lambda rows, cols: pl.BlockSpec(
         (rows, cols), lambda *_: (0, 0))
 
@@ -391,6 +544,127 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
 
 @functools.partial(
     jax.jit,
+    static_argnames=("n_out", "flow", "block_m", "block_p", "relu",
+                     "interpret"))
+def fused_spectral_pipeline_scheduled(xt: Array, idx: Array, sel: Array,
+                                      vr: Array, vi: Array,
+                                      dfr: Array, dfi: Array,
+                                      dvr: Array, dvi: Array,
+                                      bias: Array, *, n_out: int,
+                                      flow: str = "output_stationary",
+                                      block_m: int = 64,
+                                      block_p: int = 128,
+                                      relu: bool = False,
+                                      interpret: bool = True) -> Array:
+    """FFT -> SCHEDULED sparse Hadamard -> IFFT (+ epilogue) in one
+    pallas_call — the element-granular sibling of
+    ``fused_spectral_pipeline``.
+
+    The kernel operand is not a plane stack but the Alg-2 INDEX/VALUE
+    tables of ``scheduler.LayerTables`` (already padded/remapped):
+
+    xt: [S, M, P] f32          overlap-save windows, s-leading
+    idx: [GN, Mp, T, r] int32  replica read addresses (compacted coords)
+    sel: [GN, Mp, T, N'] int32 crossbar selects
+    vr/vi: [GN, Mp, T, N'] f32 PE weight planes (zero = idle lane)
+    dfr/dfi: [Fa, S], dvr/dvi: [S2, Fa], bias: [1, n_out]
+
+    block_n is implied: it equals the schedule's PE-group size N' (the
+    tables were compiled for it); the table channel padding Mp must
+    equal M padded to block_m — both are enforced.  Returns
+    [S2, n_out, P] finished spatial outputs.
+    """
+    s, m, p = xt.shape
+    gn, mp_t, t_cycles, r = idx.shape
+    n_pe = sel.shape[3]
+    fa = dfr.shape[0]
+    s2 = dvr.shape[0]
+    assert sel.shape == (gn, mp_t, t_cycles, n_pe), (sel.shape, idx.shape)
+    assert vr.shape == sel.shape and vi.shape == sel.shape
+    assert dfr.shape == (fa, s) and dvr.shape == (s2, fa), \
+        (dfr.shape, dvr.shape, (fa, s, s2))
+    assert n_out <= gn * n_pe, (n_out, gn, n_pe)
+    assert bias.shape == (1, n_out), (bias.shape, n_out)
+
+    bm, bp = min(block_m, m), min(block_p, p)
+    xt_ = _pad_axis(_pad_axis(xt, 1, bm), 2, bp)
+    bias_ = _pad_axis(bias, 1, n_pe)
+    mp_, pp_ = xt_.shape[1], xt_.shape[2]
+    assert mp_ == mp_t, \
+        (f"tables padded for {mp_t} channels but windows pad to {mp_}; "
+         f"compile_layer_tables(m_pad_to=block_m) must use the same "
+         f"block_m (= {bm})")
+    np_ = gn * n_pe
+    gm, gp = mp_ // bm, pp_ // bp
+    _check_hw_safe(flow, gn, gp, interpret)
+    grid, canon, semantics = _flow_layout(flow, gn, gm, gp)
+
+    if flow == "output_stationary":
+        kernel = functools.partial(_kernel_os_sched, n_m_blocks=gm,
+                                   relu=relu)
+        scratch = [pltpu.VMEM((n_pe, fa, bp), jnp.float32)] * 2
+    elif flow == "weight_stationary":
+        kernel = functools.partial(_kernel_ws_sched, n_m_blocks=gm,
+                                   relu=relu)
+        scratch = []
+    else:  # input_stationary
+        kernel = functools.partial(_kernel_is_sched, n_m_blocks=gm,
+                                   relu=relu)
+        scratch = [pltpu.VMEM((fa, bm, bp), jnp.float32)] * 2
+
+    x_spec = pl.BlockSpec(
+        (s, bm, bp), lambda *g: (0, canon(*g)[2], canon(*g)[1]))
+    t_spec = lambda lanes: pl.BlockSpec(
+        (1, bm, t_cycles, lanes),
+        lambda *g: (canon(*g)[0], canon(*g)[2], 0, 0))
+    b_spec = pl.BlockSpec((1, n_pe), lambda *g: (0, canon(*g)[0]))
+    y_spec = pl.BlockSpec(
+        (s2, n_pe, bp), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
+    d_spec = lambda rows, cols: pl.BlockSpec(
+        (rows, cols), lambda *_: (0, 0))
+
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, t_spec(r), t_spec(n_pe), t_spec(n_pe),
+                  t_spec(n_pe),
+                  d_spec(fa, s), d_spec(fa, s),
+                  d_spec(s2, fa), d_spec(s2, fa), b_spec],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((s2, np_, pp_), jnp.float32),
+        scratch_shapes=scratch,
+        compiler_params=CompilerParams(
+            dimension_semantics=semantics),
+        interpret=interpret,
+    )(xt_.astype(jnp.float32), idx, sel, vr, vi, dfr, dfi, dvr, dvi,
+      bias_)
+    return y[:, :n_out, :p]
+
+
+def _windows_layout(x: Array, geo: SpectralGeometry) -> tuple[Array, int]:
+    """Overlap-save window extraction + s-leading layout [S, M, B*T] —
+    the in-kernel FFT contracts the leading dim with one GEMM, no
+    transposes on the TPU side."""
+    b, m = x.shape[:2]
+    windows = extract_tiles_overlapping(x, geo)         # [B, M, T, K, K]
+    t_cnt = windows.shape[2]
+    s = geo.fft_size * geo.fft_size
+    xt = (windows.reshape(b, m, t_cnt, s)
+          .transpose(3, 1, 0, 2).reshape(s, m, b * t_cnt))
+    return xt, t_cnt
+
+
+def _assemble_output(y: Array, geo: SpectralGeometry, b: int, n: int,
+                     t_cnt: int, dtype) -> Array:
+    """[t^2, N, B*T] pipeline output -> assembled [B, N, H, W]."""
+    s2 = geo.tile * geo.tile
+    y_tiles = (y.reshape(s2, n, b, t_cnt).transpose(2, 1, 3, 0)
+               .reshape(b, n, t_cnt, geo.tile, geo.tile))
+    return assemble_valid_tiles(y_tiles.astype(dtype), geo)
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("geo", "flow", "block_n", "block_m", "block_p",
                      "relu", "interpret"))
 def _fused_conv(x: Array, wr: Array, wi: Array, dfr: Array, dfi: Array,
@@ -406,24 +680,33 @@ def _fused_conv(x: Array, wr: Array, wi: Array, dfr: Array, dfi: Array,
     sparsity-related is derived in here."""
     b, m = x.shape[:2]
     n = wr.shape[1]
-
-    windows = extract_tiles_overlapping(x, geo)         # [B, M, T, K, K]
-    t_cnt = windows.shape[2]
-    s = geo.fft_size * geo.fft_size
-    # s-leading layout: [S, M, B*T] — the in-kernel FFT contracts the
-    # leading dim with one GEMM, no transposes on the TPU side.
-    xt = (windows.reshape(b, m, t_cnt, s)
-          .transpose(3, 1, 0, 2).reshape(s, m, b * t_cnt))
-
+    xt, t_cnt = _windows_layout(x, geo)
     y = fused_spectral_pipeline(
         xt, wr, wi, dfr, dfi, dvr, dvi, bias, flow=flow,
         block_n=block_n, block_m=block_m, block_p=block_p, relu=relu,
         interpret=interpret)                            # [t^2, N, B*T]
+    return _assemble_output(y, geo, b, n, t_cnt, x.dtype)
 
-    s2 = geo.tile * geo.tile
-    y_tiles = (y.reshape(s2, n, b, t_cnt).transpose(2, 1, 3, 0)
-               .reshape(b, n, t_cnt, geo.tile, geo.tile))
-    return assemble_valid_tiles(y_tiles.astype(x.dtype), geo)
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geo", "n_out", "flow", "block_m", "block_p",
+                     "relu", "interpret"))
+def _fused_conv_scheduled(x: Array, idx: Array, sel: Array, vr: Array,
+                          vi: Array, dfr: Array, dfi: Array, dvr: Array,
+                          dvi: Array, bias: Array, *,
+                          geo: SpectralGeometry, n_out: int, flow: str,
+                          block_m: int, block_p: int,
+                          relu: bool, interpret: bool) -> Array:
+    """Jitted body of the scheduled-Hadamard fused conv (same relayout
+    contract as ``_fused_conv``; kernel operands are Alg-2 tables)."""
+    b = x.shape[0]
+    xt, t_cnt = _windows_layout(x, geo)
+    y = fused_spectral_pipeline_scheduled(
+        xt, idx, sel, vr, vi, dfr, dfi, dvr, dvi, bias, n_out=n_out,
+        flow=flow, block_m=block_m, block_p=block_p, relu=relu,
+        interpret=interpret)
+    return _assemble_output(y, geo, b, n_out, t_cnt, x.dtype)
 
 
 def fused_spectral_conv2d(x: Array, w_f, geo: SpectralGeometry, *,
@@ -472,20 +755,91 @@ def fused_spectral_conv2d(x: Array, w_f, geo: SpectralGeometry, *,
                        block_p=block_p, relu=relu, interpret=interpret)
 
 
+def fused_spectral_conv2d_scheduled(x: Array, sk, geo: SpectralGeometry,
+                                    *, r: int = 10, n_par: int = 64,
+                                    flow: str = "output_stationary",
+                                    block_m: int = 64, block_p: int = 128,
+                                    bias: Array | None = None,
+                                    relu: bool = False,
+                                    method: str = "exact_cover",
+                                    tables=None,
+                                    interpret: bool | None = None
+                                    ) -> Array:
+    """Full spectral conv layer through the SCHEDULED fused pallas_call.
+
+    x: [B, M, H, W] real NCHW; sk: ``SparseSpectralKernels`` whose Alg-2
+    exact-cover schedule (group size ``n_par`` == the kernel's block_n,
+    ``r`` BRAM-replica analogue) is compiled to INDEX/VALUE tables here
+    and executed element-granularly inside the fused kernel.  Pass a
+    precompiled ``scheduler.LayerTables`` via ``tables`` to skip the
+    per-call scheduling (it must have been built with the same
+    ``active`` set and ``m_pad_to == min(block_m, M)``) — repeated
+    calls (e.g. the measured autotune pass) should not re-run, let
+    alone re-time, the host-side scheduler.
+
+    NOTE: without ``tables`` this ad-hoc entry runs the scheduler per
+    call (one schedule per kernel-group x channel); the compile-once
+    path is ``core.plan.build_network_plan(hadamard='scheduled'|'auto')``
+    + ``execute_layer_plan``.
+    """
+    from repro.core import scheduler as sch
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    assert sk.fft_size == geo.fft_size
+    k2 = geo.fft_size * geo.fft_size
+    n, m = sk.n_out, sk.n_in
+    bm = min(block_m, m)
+    n_par = min(n_par, n)
+    active = sp.compacted_active_bins(sk)
+    tabs = tables
+    if tabs is None:
+        vals = np.asarray(sk.values).reshape(n, m, k2)
+        tabs = sch.compile_layer_tables(
+            np.asarray(sk.indices), vals, k2, r, n_par,
+            method=method, active=active, m_pad_to=bm)
+    ops = overlap_save_operators(
+        geo.fft_size, geo.ksize,
+        tuple(int(a) for a in active) if active is not None else None)
+    dfr, dfi, dvr, dvi = (jnp.asarray(a) for a in ops)
+    if bias is None:
+        bias_arr = jnp.zeros((1, n), jnp.float32)
+    else:
+        bias_arr = jnp.asarray(bias, jnp.float32).reshape(1, n)
+    return _fused_conv_scheduled(
+        x, jnp.asarray(tabs.idx), jnp.asarray(tabs.sel),
+        jnp.asarray(tabs.vr), jnp.asarray(tabs.vi),
+        dfr, dfi, dvr, dvi, bias_arr, geo=geo, n_out=n,
+        flow=flow, block_m=bm, block_p=block_p, relu=relu,
+        interpret=interpret)
+
+
 def execute_layer_plan(x: Array, lp, *, interpret: bool | None = None
                        ) -> Array:
     """Run one conv layer from a precompiled ``core.plan.LayerPlan``.
 
-    Consumes the plan's precomputed operands (compacted kernel planes,
-    DFT operators, bias, autotuned flow/blocks) — nothing is re-derived
-    per call, so repeated forwards hit the jit cache of ``_fused_conv``
-    directly.  Pooling (``lp.epilogue.pool``) is spatial and stays with
-    the caller.
+    Consumes the plan's precomputed operands and dispatches on the
+    plan's Hadamard mode: 'dense'/'bin' execute the Karatsuba-GEMM
+    pipeline on the (possibly compacted) kernel planes; 'scheduled'
+    executes the precompiled Alg-2 INDEX/VALUE tables element-
+    granularly.  Nothing is re-derived per call — no scheduling,
+    compaction or geometry work — so repeated forwards hit the jit
+    cache of ``_fused_conv``/``_fused_conv_scheduled`` directly.
+    Pooling (``lp.epilogue.pool``) is spatial and stays with the
+    caller.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     tn = lp.tuning
     bias = lp.bias if lp.epilogue.bias else jnp.zeros_like(lp.bias)
+    if getattr(lp, "hadamard", None) == "scheduled":
+        tb = lp.tables
+        return _fused_conv_scheduled(
+            x, tb.idx, tb.sel, tb.vr, tb.vi,
+            lp.dfr, lp.dfi, lp.dvr, lp.dvi, bias, geo=lp.geo,
+            n_out=lp.layer.c_out, flow=tn.flow, block_m=tn.block_m,
+            block_p=tn.block_p, relu=lp.epilogue.relu,
+            interpret=interpret)
     return _fused_conv(x, lp.wr, lp.wi, lp.dfr, lp.dfi, lp.dvr, lp.dvi,
                        bias, geo=lp.geo, flow=tn.flow,
                        block_n=tn.block_n, block_m=tn.block_m,

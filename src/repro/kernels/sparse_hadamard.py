@@ -23,6 +23,13 @@ Shapes:
   index_table int32 [M, T, r]; sel int32 [M, T, N']; valid f32 [M, T, N'];
   val_r/val_i f32 [M, T, N']; out_index int32 [M, T, N'];
   xr/xi f32 [M, F, P]   ->   yr/yi f32 [N', F, P]   (summed over M, T).
+
+Since PR 4 the same datapath also runs INSIDE the fused conv kernel
+(``fused_spectral_conv.fused_spectral_pipeline_scheduled``, Hadamard
+mode 'scheduled'), between the in-kernel tile-FFT and IFFT/epilogue and
+without the ``valid``/``out_index`` planes (see ``scheduler.LayerTables``).
+This standalone kernel remains the direct Fig-6 table executor for an
+externally-provided spectral input.
 """
 
 from __future__ import annotations

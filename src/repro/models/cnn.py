@@ -107,18 +107,34 @@ def forward_spectral(params: dict, plan, x: Array, *,
                      interpret: bool | None = None) -> Array:
     """Inference by executing a precompiled ``core.plan.NetworkPlan``.
 
-    backend selects the conv-stack implementation:
-      'einsum'        pure-jnp oracle (sparse-aware masked einsum)
-      'pallas_staged' 3 pallas_calls/layer: fft8 -> hadamard -> ifft8,
-                      spectral intermediates round-tripping through HBM
-      'pallas_fused'  ONE pallas_call/layer executing the plan's
-                      precompiled operands — compacted kernel planes,
-                      restricted DFT operators, autotuned flow/blocks —
-                      with bias+ReLU fused into the kernel flush.
+    Args:
+      params: the weights ``init`` produced (the conv stack reads only
+        the plan's baked operands, but the FC head reads ``params``).
+      plan: a ``core.plan.NetworkPlan`` built ONCE by
+        ``build_network_plan`` for this config and batch size.
+      x: [B, C, H, W] f32 input batch; must match the plan's layer
+        geometry, and for the fused backend on hardware the plan's
+        tuned batch (RMW-flow safety — see the error message).
+      backend: conv-stack implementation, one of ``BACKENDS``:
+        'einsum'        pure-jnp oracle (sparse-aware masked einsum);
+        'pallas_staged' 3 pallas_calls/layer: fft8 -> hadamard ->
+                        ifft8, spectral intermediates round-tripping
+                        through HBM;
+        'pallas_fused'  ONE pallas_call/layer executing the plan's
+                        precompiled operands with bias+ReLU fused into
+                        the kernel flush.  Each layer runs the Hadamard
+                        datapath its plan chose (``LayerPlan.hadamard``):
+                        'dense'/'bin' stream (compacted) kernel planes
+                        through the Karatsuba GEMM, 'scheduled' executes
+                        the layer's Alg-2 INDEX/VALUE tables element-
+                        granularly (``execute_layer_plan`` dispatches).
+      interpret: force Pallas interpret mode (None = auto: interpret
+        everywhere except real TPU).
 
-    Everything layer-specific was derived at plan-build time; nothing
-    (geometry, schedules, pruning, autotune) is rebuilt here, so
-    repeated calls go straight to the jit cache.
+    Returns [B, n_classes] logits.  Everything layer-specific was
+    derived at plan-build time; nothing (geometry, schedules, pruning,
+    table compilation, autotune) is rebuilt here, so repeated calls go
+    straight to the jit cache.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}")
