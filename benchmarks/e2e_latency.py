@@ -26,15 +26,26 @@ BENCH_e2e.json schema
       one-off full-VGG16 plan construction time (prune + Alg 2 +
       compaction + table compilation + autotune).
   layers[]  (one row per conv layer, analytic, at the TUNED config)
-      layer / flow / hadamard / block_n / block_m / block_p
-          the plan's Alg-1 choice, incl. the Hadamard mode.
+      layer / flow / hadamard / input_mode / block_n / block_m / block_p
+          the plan's Alg-1 choice, incl. the Hadamard and input modes.
       alpha / nnz / active_bins / pe_utilization / schedule_cycles
           sparsity + Alg-2 stats (exact for scheduled layers).
       launches_fused / launches_staged
           kernel launches per layer (1 vs 3).
       fused_hbm_bytes / fused_hbm_bytes_dense
           total analytic HBM traffic of the fused kernel in the plan's
-          mode vs the dense (alpha = 1) datapath at the same config.
+          modes vs the fully dense datapath (alpha = 1, windowed
+          input) at the same config.
+      input_hbm_bytes{,_windowed,_halo}
+          the input-operand share of HBM traffic (stream * flow
+          re-read factor + the one-off materialization / gather-
+          selector bytes): the plan's input mode, then both modes at
+          the same config.  halo counts raw-plus-halo words read
+          straight from the NCHW activation; windowed counts the
+          host-materialized [B, M, T, K, K] window tensor (one
+          relayout pass + the ~(K/t)^2 duplicated stream).
+      halo_lt_windowed
+          acceptance flag: halo input bytes < windowed at this config.
       kernel_hbm_bytes{,_dense,_bin,_scheduled}
           the kernel-operand share of HBM traffic (re-read factors
           included): the plan's mode, then each mode at the same
@@ -59,9 +70,11 @@ BENCH_e2e.json schema
           round-trips — the three launches it actually needs).
   totals
       aggregates of the above (MB), kernel_bytes vs dense/bin/
-      scheduled, mean Eq-14 PE utilization, launch counts, and the
-      acceptance booleans ``all_layers_fused_le_staged_os`` and
-      ``all_sparse_scheduled_le_bin``.
+      scheduled, input_bytes vs windowed/halo, per-mode layer counts,
+      mean Eq-14 PE utilization, launch counts, and the acceptance
+      booleans ``all_layers_fused_le_staged_os``,
+      ``all_sparse_scheduled_le_bin`` and
+      ``all_layers_halo_input_lt_windowed`` (CI asserts the last one).
   parity / parity_sparse
       fused vs spatial (alpha = 1, <= 1e-3) and fused-sparse+epilogue
       vs einsum oracle (alpha = 4, <= 1e-4) on full-resolution VGG16.
@@ -70,6 +83,11 @@ BENCH_e2e.json schema
       <= 1e-5 — per-layer on the conv5 trio at full channel counts and
       end-to-end on the smoke network with every layer forced
       scheduled.
+  parity_halo
+      acceptance: the halo input path (in-kernel gather from the raw
+      activation) vs the einsum oracle, <= 1e-5, across ALL THREE
+      flows x ALL THREE Hadamard modes, plus the max deviation from
+      the windowed path (one-hot gather => 0.0).
 """
 
 from __future__ import annotations
@@ -144,13 +162,16 @@ def per_layer_traffic(plan, fft_size: int, batch: int = 1) -> list[dict]:
     for lp in plan.layers:
         layer, tn = lp.layer, lp.tuning
         fa = lp.n_active_bins
-        cost = lambda a, bins, mode: df.tpu_fused_flow_cost(
+        cost = lambda a, bins, mode, imode: df.tpu_fused_flow_cost(
             layer, fft_size, a, tn.block_n, tn.block_p, tn.block_m,
-            tn.flow, batch=batch, active_bins=bins, hadamard=mode)
-        fused_plan = cost(lp.alpha, fa, lp.hadamard)
-        fused_dense = cost(1.0, None, "dense")
-        mode_cost = {m: cost(lp.alpha, fa, m)
+            tn.flow, batch=batch, active_bins=bins, hadamard=mode,
+            input_mode=imode)
+        fused_plan = cost(lp.alpha, fa, lp.hadamard, lp.input_mode)
+        fused_dense = cost(1.0, None, "dense", "windowed")
+        mode_cost = {m: cost(lp.alpha, fa, m, lp.input_mode)
                      for m in df.HADAMARD_MODES}
+        input_cost = {im: cost(lp.alpha, fa, lp.hadamard, im)
+                      for im in df.INPUT_MODES}
         staged_os = best_staged_os(layer, lp.alpha)
         # Scheduled kernel bytes: prefer the ACTUAL compiled table
         # stream (exact t_max/channel padding) over the nnz/mu estimate
@@ -163,17 +184,23 @@ def per_layer_traffic(plan, fft_size: int, batch: int = 1) -> list[dict]:
             reread = 1 if tn.flow == "weight_stationary" else gp
             sched_bytes = float(lp.tables.nbytes * reread)
         # staged pipeline additionally round-trips tiles through the
-        # separate FFT/IFFT kernels (real in, 2 f32 planes out and back)
+        # separate FFT/IFFT kernels (real in, 2 f32 planes out and
+        # back), and consumes the same host-materialized window tensor
+        # the windowed fused path does (raw read + windowed write) —
+        # counted for symmetry with the fused input accounting.
         k2 = fft_size * fft_size
         t = layer.tiles(fft_size) * batch
         fft_io = (layer.c_in * t * (k2 + 2 * k2)
-                  + layer.c_out * t * (2 * k2 + k2)) * 4
+                  + layer.c_out * t * (2 * k2 + k2)
+                  + layer.c_in * (layer.h_in * layer.w_in * batch
+                                  + k2 * t)) * 4
         rows.append({
             "layer": layer.name,
             "launches_fused": FUSED_LAUNCHES_PER_LAYER,
             "launches_staged": STAGED_LAUNCHES_PER_LAYER,
             "flow": tn.flow,
             "hadamard": lp.hadamard,
+            "input_mode": lp.input_mode,
             "block_n": tn.block_n, "block_m": tn.block_m,
             "block_p": tn.block_p,
             "alpha": lp.alpha,
@@ -183,6 +210,13 @@ def per_layer_traffic(plan, fft_size: int, batch: int = 1) -> list[dict]:
             "schedule_cycles": lp.schedule_cycles,
             "fused_hbm_bytes": fused_plan["hbm_bytes"],
             "fused_hbm_bytes_dense": fused_dense["hbm_bytes"],
+            "input_hbm_bytes": fused_plan["input_hbm_bytes"],
+            "input_hbm_bytes_windowed":
+                input_cost["windowed"]["input_hbm_bytes"],
+            "input_hbm_bytes_halo": input_cost["halo"]["input_hbm_bytes"],
+            "halo_lt_windowed": bool(
+                input_cost["halo"]["input_hbm_bytes"]
+                < input_cost["windowed"]["input_hbm_bytes"]),
             "kernel_hbm_bytes": fused_plan["kernel_hbm_bytes"],
             "kernel_hbm_bytes_dense": fused_dense["kernel_hbm_bytes"],
             "kernel_hbm_bytes_bin": mode_cost["bin"]["kernel_hbm_bytes"],
@@ -203,8 +237,9 @@ def per_layer_traffic(plan, fft_size: int, batch: int = 1) -> list[dict]:
             "fused_le_staged_os": bool(
                 fused_plan["hbm_bytes"]
                 <= staged_os["hbm_bytes"] + fft_io),
-            "fused_predicted_us": 1e6 * max(fused_plan["hbm_s"],
-                                            fused_plan["compute_s"]),
+            "fused_predicted_us": 1e6 * (
+                fused_plan["serial_s"] + max(fused_plan["hbm_s"],
+                                             fused_plan["compute_s"])),
             "staged_hadamard_predicted_us": 1e6 * max(staged_os["hbm_s"],
                                                       staged_os["compute_s"]),
         })
@@ -340,6 +375,66 @@ def scheduled_network_parity(cfg, batch: int = 1) -> dict:
             "passes_1e-5": bool(err <= 1e-5)}
 
 
+def halo_parity_matrix(fft_size: int = 8, alpha: float = 4.0,
+                       batch: int = 1, seed: int = 0,
+                       small: bool = False) -> dict:
+    """Acceptance: the halo input path (in-kernel window gather from the
+    raw activation) matches the einsum oracle <= 1e-5 across ALL THREE
+    flows x ALL THREE Hadamard modes, bias+ReLU fused.  Also reports
+    the max |halo - windowed| deviation, which the one-hot gather makes
+    exactly 0.0."""
+    from repro.core import dataflow as df
+    from repro.core import sparse as sp
+    from repro.core import spectral as spec
+    from repro.kernels.fused_spectral_conv import (
+        fused_spectral_conv2d, fused_spectral_conv2d_scheduled)
+
+    rng = np.random.default_rng(seed)
+    layer = (df.ConvLayer("halo_matrix_smoke", 8, 8, 12, 12) if small
+             else df.ConvLayer("halo_matrix", 48, 64, 28, 28))
+    x = jnp.asarray(rng.standard_normal(
+        (batch, layer.c_in, layer.h_in, layer.w_in)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(
+        (layer.c_out, layer.c_in, layer.ksize, layer.ksize))
+        * (2.0 / (layer.c_in * layer.ksize ** 2)) ** 0.5, jnp.float32)
+    b = jnp.asarray(0.1 * rng.standard_normal(layer.c_out), jnp.float32)
+    geo = spec.make_geometry(layer.h_in, layer.w_in, layer.ksize,
+                             fft_size, layer.pad)
+    sk = sp.prune_magnitude(spec.spectral_kernel(w, fft_size), alpha)
+    y_ref = jax.nn.relu(
+        spec.spectral_conv2d_pretransformed(x, sk, geo)
+        + b[None, :, None, None])
+
+    cells = {}
+    worst_oracle = worst_windowed = 0.0
+    for flow in df.FLOWS:
+        for mode in df.HADAMARD_MODES:
+            out = {}
+            for imode in df.INPUT_MODES:
+                bn = min(16, layer.c_out)
+                bm = min(16, layer.c_in)
+                if mode == "scheduled":
+                    out[imode] = fused_spectral_conv2d_scheduled(
+                        x, sk, geo, n_par=bn, flow=flow, block_m=bm,
+                        block_p=32, bias=b, relu=True, input_mode=imode)
+                else:
+                    w_f = sk.values if mode == "dense" else sk
+                    out[imode] = fused_spectral_conv2d(
+                        x, w_f, geo, flow=flow, block_n=bn, block_m=bm,
+                        block_p=32, bias=b, relu=True, input_mode=imode)
+            e_or = float(jnp.abs(out["halo"] - y_ref).max())
+            e_win = float(jnp.abs(out["halo"] - out["windowed"]).max())
+            cells[f"{flow}/{mode}"] = {"vs_oracle": e_or,
+                                       "vs_windowed": e_win}
+            worst_oracle = max(worst_oracle, e_or)
+            worst_windowed = max(worst_windowed, e_win)
+    return {"layer": layer.name, "alpha": alpha, "epilogue": "bias+relu",
+            "cells": cells,
+            "max_abs_err_vs_oracle": worst_oracle,
+            "max_abs_err_vs_windowed": worst_windowed,
+            "passes_1e-5": bool(worst_oracle <= 1e-5)}
+
+
 def main() -> None:
     from repro.configs import vgg16_spectral
     from repro.core import dataflow as df
@@ -372,7 +467,7 @@ def main() -> None:
         "quick": bool(args.quick),
     }
 
-    print("[1/5] latency: oracle vs staged Pallas vs fused Pallas "
+    print("[1/6] latency: oracle vs staged Pallas vs fused Pallas "
           "(plan built once per batch)")
     report["latency"] = {"smoke": latency_table(
         vgg16_spectral.SMOKE, iters=args.iters)}
@@ -384,7 +479,7 @@ def main() -> None:
             pretty = ", ".join(f"{k}={v:.1f}" for k, v in row.items())
             print(f"      {scale}/{b}: {pretty}")
 
-    print(f"[2/5] {traffic_cfg.name} NetworkPlan (compile once: prune + "
+    print(f"[2/6] {traffic_cfg.name} NetworkPlan (compile once: prune + "
           "Alg 2 tables + compaction + mode-aware autotune)")
     t0 = time.perf_counter()
     params_full = cnn.init(jax.random.PRNGKey(0), traffic_cfg)
@@ -394,7 +489,7 @@ def main() -> None:
     print(f"      built in {report['plan_build_s']:.1f}s "
           f"({n_sched}/{len(plan_full.layers)} layers scheduled)")
 
-    print("[3/5] per-layer launches + analytic HBM traffic "
+    print("[3/6] per-layer launches + analytic HBM traffic "
           "(dense vs bin vs scheduled vs staged) + Alg-2 PE utilization")
     layer_rows = per_layer_traffic(plan_full, 8, batch=1)
     report["layers"] = layer_rows
@@ -406,6 +501,9 @@ def main() -> None:
     tot_k_dense = sum(r["kernel_hbm_bytes_dense"] for r in layer_rows)
     tot_k_bin = sum(r["kernel_hbm_bytes_bin"] for r in layer_rows)
     tot_k_sched = sum(r["kernel_hbm_bytes_scheduled"] for r in layer_rows)
+    tot_in = sum(r["input_hbm_bytes"] for r in layer_rows)
+    tot_in_win = sum(r["input_hbm_bytes_windowed"] for r in layer_rows)
+    tot_in_halo = sum(r["input_hbm_bytes_halo"] for r in layer_rows)
     mus = [r["pe_utilization"] for r in layer_rows
            if r["pe_utilization"] is not None]
     sparse_rows = [r for r in layer_rows if r["alpha"] > 1.0]
@@ -419,15 +517,23 @@ def main() -> None:
         "kernel_bin_hbm_mb": tot_k_bin / 1e6,
         "kernel_scheduled_hbm_mb": tot_k_sched / 1e6,
         "kernel_bytes_reduction": tot_k_dense / tot_k,
+        "input_hbm_mb": tot_in / 1e6,
+        "input_windowed_hbm_mb": tot_in_win / 1e6,
+        "input_halo_hbm_mb": tot_in_halo / 1e6,
+        "input_bytes_reduction": tot_in_win / tot_in_halo,
         "mean_pe_utilization": float(np.mean(mus)) if mus else None,
         "launches_fused": FUSED_LAUNCHES_PER_LAYER * len(layer_rows),
         "launches_staged": STAGED_LAUNCHES_PER_LAYER * len(layer_rows),
         "hadamard_modes": {m: sum(r["hadamard"] == m for r in layer_rows)
                            for m in df.HADAMARD_MODES},
+        "input_modes": {m: sum(r["input_mode"] == m for r in layer_rows)
+                        for m in df.INPUT_MODES},
         "all_layers_fused_le_staged_os": all(
             r["fused_le_staged_os"] for r in layer_rows),
         "all_sparse_scheduled_le_bin": all(
             r["scheduled_le_bin"] for r in sparse_rows),
+        "all_layers_halo_input_lt_windowed": all(
+            r["halo_lt_windowed"] for r in layer_rows),
     }
     t = report["totals"]
     print(f"      fused {t['fused_hbm_mb']:.1f} MB (dense "
@@ -439,14 +545,19 @@ def main() -> None:
           f"{t['kernel_bin_hbm_mb']:.1f} / scheduled "
           f"{t['kernel_scheduled_hbm_mb']:.1f} MB; "
           f"{t['kernel_bytes_reduction']:.1f}x vs dense); "
+          f"input bytes {t['input_hbm_mb']:.1f} MB (windowed "
+          f"{t['input_windowed_hbm_mb']:.1f} / halo "
+          f"{t['input_halo_hbm_mb']:.1f} MB; "
+          f"{t['input_bytes_reduction']:.1f}x, halo<windowed on all "
+          f"layers: {t['all_layers_halo_input_lt_windowed']}); "
           f"scheduled<=bin on all sparse layers: "
           f"{t['all_sparse_scheduled_le_bin']}; modes "
-          f"{t['hadamard_modes']}; mean PE util "
+          f"{t['hadamard_modes']} / {t['input_modes']}; mean PE util "
           f"{t['mean_pe_utilization']:.1%}; launches "
           f"{t['launches_fused']} vs {t['launches_staged']}")
 
     if not args.quick:
-        print("[4/5] parity on full VGG16 (batch 1): fused vs spatial "
+        print("[4/6] parity on full VGG16 (batch 1): fused vs spatial "
               "(alpha=1) and fused-sparse+epilogue vs oracle (alpha=4)")
         report["parity"] = fused_parity_vs_spatial(df.VGG16_LAYERS, 8,
                                                    batch=1)
@@ -459,7 +570,7 @@ def main() -> None:
               f"{report['parity_sparse']['max_abs_err']:.2e} "
               f"(<= 1e-4: {report['parity_sparse']['passes_1e-4']})")
 
-    print("[5/5] SCHEDULED-fused parity vs einsum oracle (acceptance "
+    print("[5/6] SCHEDULED-fused parity vs einsum oracle (acceptance "
           "<= 1e-5)")
     sched = {"network_smoke": scheduled_network_parity(
         vgg16_spectral.SMOKE, batch=1)}
@@ -473,6 +584,16 @@ def main() -> None:
     print(f"      smoke net, all layers scheduled: max abs logit err "
           f"{sched['network_smoke']['max_abs_logit_err']:.2e} "
           f"(<= 1e-5: {sched['network_smoke']['passes_1e-5']})")
+
+    print("[6/6] HALO input path parity vs einsum oracle, 3 flows x "
+          "3 Hadamard modes (acceptance <= 1e-5)")
+    report["parity_halo"] = halo_parity_matrix(8, alpha=4.0, batch=1,
+                                               small=args.quick)
+    ph = report["parity_halo"]
+    print(f"      {ph['layer']}: max abs err vs oracle "
+          f"{ph['max_abs_err_vs_oracle']:.2e} (<= 1e-5: "
+          f"{ph['passes_1e-5']}); vs windowed path "
+          f"{ph['max_abs_err_vs_windowed']:.2e}")
 
     with open(args.json, "w") as f:
         json.dump(report, f, indent=2)

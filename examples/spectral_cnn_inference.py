@@ -58,17 +58,17 @@ def main() -> None:
     print(f"      built in {time.time() - t0:.2f}s "
           f"(K={cfg.fft_size}, alpha={cfg.alpha})")
 
-    print("[3/4] per-layer plan: flow / Hadamard mode / nnz / active "
-          "bins / Alg-2 cycles")
-    print(f"      {'layer':>9} {'flow':>18} {'hadamard':>9} {'blocks':>12} "
-          f"{'nnz':>4} {'Fa':>3} {'cycles':>6} {'mu':>6}")
+    print("[3/4] per-layer plan: flow / Hadamard mode / input mode / "
+          "nnz / active bins / Alg-2 cycles")
+    print(f"      {'layer':>9} {'flow':>18} {'hadamard':>9} {'input':>8} "
+          f"{'blocks':>12} {'nnz':>4} {'Fa':>3} {'cycles':>6} {'mu':>6}")
     for row in plan.summary():
         blocks = f"{row['block_n']}/{row['block_m']}/{row['block_p']}"
         mu = ("  --" if row["pe_utilization"] is None
               else f"{row['pe_utilization']:.1%}")
         cyc = row["schedule_cycles"] if row["schedule_cycles"] else "--"
         print(f"      {row['layer']:>9} {row['flow']:>18} "
-              f"{row['hadamard']:>9} {blocks:>12} "
+              f"{row['hadamard']:>9} {row['input_mode']:>8} {blocks:>12} "
               f"{row['nnz']:>4} {row['active_bins']:>3} {cyc!s:>6} {mu:>6}")
 
     print(f"[4/4] inference x{args.calls} reusing the SAME plan "

@@ -2,9 +2,11 @@
 
 External (scheme://) and mailto links are skipped — CI must not depend
 on network reachability; anchors are stripped before the existence
-check.  Exit code 1 lists every broken link.
+check.  Directory arguments are searched recursively for ``*.md``, so
+new documentation pages are covered the moment they land.  Exit code 1
+lists every broken link.
 
-  python scripts/check_markdown_links.py README.md docs/*.md ...
+  python scripts/check_markdown_links.py README.md DESIGN.md docs ...
 """
 
 from __future__ import annotations
@@ -33,21 +35,29 @@ def check_file(path: Path) -> list[str]:
 
 def main(argv: list[str]) -> int:
     if not argv:
-        print("usage: check_markdown_links.py FILE.md [FILE.md ...]")
+        print("usage: check_markdown_links.py FILE.md|DIR [...]")
         return 2
     errors: list[str] = []
+    files: list[Path] = []
     for name in argv:
         p = Path(name)
         if not p.exists():
             errors.append(f"{name}: file not found")
-            continue
+        elif p.is_dir():
+            found = sorted(p.rglob("*.md"))
+            if not found:
+                errors.append(f"{name}: directory holds no .md files")
+            files.extend(found)
+        else:
+            files.append(p)
+    for p in files:
         errors.extend(check_file(p))
     for e in errors:
         print(e)
     if errors:
         print(f"{len(errors)} broken link(s)")
         return 1
-    print(f"ok: {len(argv)} file(s), all relative links resolve")
+    print(f"ok: {len(files)} file(s), all relative links resolve")
     return 0
 
 

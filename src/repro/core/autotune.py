@@ -42,6 +42,14 @@ from repro.core.dataflow import FLOWS
 BLOCK_CANDIDATES = (32, 64, 128, 256)
 
 
+def _predict(c: dict) -> float:
+    """Roofline latency of one cost-model row: pipelined kernel time
+    plus any serial host-side pass (the windowed input path's window
+    relayout — ``dataflow.tpu_fused_flow_cost`` 'serial_s'; staged
+    ``tpu_flow_cost`` rows have none)."""
+    return c.get("serial_s", 0.0) + max(c["hbm_s"], c["compute_s"])
+
+
 @dataclasses.dataclass(frozen=True)
 class FusedTuning:
     """Chosen fused-kernel configuration for one conv layer.
@@ -49,7 +57,9 @@ class FusedTuning:
     ``hadamard`` is the Hadamard-stage mode (``df.HADAMARD_MODES``)
     when the tuner searched the mode axis, or None when it ran in
     legacy single-datapath mode (the cost model's compressed-stream
-    default).
+    default).  ``input_mode`` is the input path (``df.INPUT_MODES``)
+    when the tuner searched that axis, or None (= 'windowed') in
+    legacy mode.
     """
 
     layer: str
@@ -59,14 +69,20 @@ class FusedTuning:
     block_p: int
     hbm_bytes: float
     vmem_bytes: float
-    predicted_s: float           # max(hbm_s, compute_s) roofline estimate
+    predicted_s: float           # serial_s + max(hbm_s, compute_s)
     measured_s: float | None = None
     hadamard: str | None = None
+    input_mode: str | None = None
 
     def kwargs(self) -> dict:
-        """Keyword arguments for ``fused_spectral_conv2d``."""
+        """Keyword arguments for ``fused_spectral_conv2d`` — includes
+        the tuned ``input_mode`` so callers applying a halo-tuned
+        config don't silently run the windowed path.  The Hadamard
+        mode is NOT included (the scheduled datapath needs tables and
+        a different entry point — dispatch on ``self.hadamard``)."""
         return {"flow": self.flow, "block_n": self.block_n,
-                "block_m": self.block_m, "block_p": self.block_p}
+                "block_m": self.block_m, "block_p": self.block_p,
+                "input_mode": self.input_mode or "windowed"}
 
 
 def _layer_candidates(layer: df.ConvLayer, fft_size: int, batch: int,
@@ -98,6 +114,7 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
                    flows: Sequence[str] = FLOWS,
                    active_bins: int | None = None,
                    hadamard_modes: Sequence[str] | None = None,
+                   input_modes: Sequence[str] | None = None,
                    schedule_r: int = df.SCHEDULE_R,
                    schedule_mu: float = df.SCHEDULE_MU,
                    cost_fn: Callable | None = None,
@@ -121,6 +138,16 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
     single-datapath behavior — the cost model's compressed-stream
     default and ``hadamard=None`` on the result.
 
+    ``input_modes`` adds the fourth axis: a subset of
+    ``df.INPUT_MODES`` ranking the host-materialized window stream
+    against the in-kernel halo gather per candidate; the winner lands
+    in ``FusedTuning.input_mode``.  None keeps the legacy windowed
+    costing and ``input_mode=None`` on the result.  A 'halo'
+    weight-stationary candidate is only hardware-safe at batch 1 (the
+    halo p axis cannot merge images into one block, so the consecutive-
+    revisit requirement caps the grid at one image) — ``hw_safe``
+    drops it otherwise.
+
     Measured pass (optional): re-rank the ``measure_top_k`` best
     analytic candidates by ``measure_fn`` wall time.  ``hw_safe``
     (default) keeps only configurations the fused kernel accepts on
@@ -132,10 +159,14 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
         cost_fn = df.tpu_fused_flow_cost
     modes: Sequence[str | None] = (
         [None] if hadamard_modes is None else list(hadamard_modes))
+    imodes: Sequence[str | None] = (
+        [None] if input_modes is None else list(input_modes))
 
-    def cost(bn, bp, bm, flow, mode):
+    def cost(bn, bp, bm, flow, mode, imode):
         kw = {} if mode is None else {"hadamard": mode, "r": schedule_r,
                                       "mu": schedule_mu}
+        if imode is not None:
+            kw["input_mode"] = imode
         return cost_fn(layer, fft_size, alpha, bn, bp, bm, flow,
                        batch=batch, active_bins=active_bins, **kw)
 
@@ -143,13 +174,17 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
     for flow, bn, bm, bp in _layer_candidates(layer, fft_size, batch,
                                               blocks, hw_safe, flows):
         for mode in modes:
-            c = cost(bn, bp, bm, flow, mode)
-            if c["vmem_bytes"] > vmem_budget:
-                continue
-            scored.append(FusedTuning(
-                layer.name, flow, bn, bm, bp, c["hbm_bytes"],
-                c["vmem_bytes"], max(c["hbm_s"], c["compute_s"]),
-                hadamard=mode))
+            for imode in imodes:
+                if (hw_safe and imode == "halo" and batch > 1
+                        and flow == "weight_stationary"):
+                    continue
+                c = cost(bn, bp, bm, flow, mode, imode)
+                if c["vmem_bytes"] > vmem_budget:
+                    continue
+                scored.append(FusedTuning(
+                    layer.name, flow, bn, bm, bp, c["hbm_bytes"],
+                    c["vmem_bytes"], _predict(c),
+                    hadamard=mode, input_mode=imode))
     if not scored:
         # Nothing fits the budget: return the smallest-footprint config
         # anyway.  Interpret mode runs it regardless; on real TPU an
@@ -165,11 +200,10 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
                 bp = layer.tiles(fft_size) * batch
             elif flow == "input_stationary":
                 bn = layer.c_out
-        c = cost(bn, bp, bm, flow, modes[0])
+        c = cost(bn, bp, bm, flow, modes[0], imodes[0])
         return FusedTuning(layer.name, flow, bn, bm, bp, c["hbm_bytes"],
-                           c["vmem_bytes"],
-                           max(c["hbm_s"], c["compute_s"]),
-                           hadamard=modes[0])
+                           c["vmem_bytes"], _predict(c),
+                           hadamard=modes[0], input_mode=imodes[0])
     scored.sort(key=lambda tn: (tn.predicted_s, tn.hbm_bytes))
     if measure_fn is None:
         return scored[0]
@@ -190,6 +224,7 @@ def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
                      hw_safe: bool = True,
                      active_bins: dict[str, int] | None = None,
                      hadamard_modes: Sequence[str] | None = None,
+                     input_modes: Sequence[str] | None = None,
                      schedule_r: int = df.SCHEDULE_R,
                      schedule_mu: float = df.SCHEDULE_MU,
                      measure: bool = False,
@@ -217,6 +252,10 @@ def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
       hadamard_modes: optional subset of ``df.HADAMARD_MODES`` to rank
         as a third search axis per layer (None = legacy single
         datapath); the winner lands in ``FusedTuning.hadamard``.
+      input_modes: optional subset of ``df.INPUT_MODES`` to rank as a
+        fourth axis — windowed stream vs in-kernel halo gather (None =
+        legacy windowed costing); the winner lands in
+        ``FusedTuning.input_mode``.
       schedule_r / schedule_mu: Alg-2 replica count and estimated Eq-14
         utilization used to cost 'scheduled' candidates — keep them in
         sync with what the tables will actually be compiled with.
@@ -239,7 +278,7 @@ def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
             layer, fft_size, a, batch=batch, vmem_budget=vmem_budget,
             blocks=blocks, hw_safe=hw_safe,
             active_bins=(active_bins or {}).get(layer.name),
-            hadamard_modes=hadamard_modes,
+            hadamard_modes=hadamard_modes, input_modes=input_modes,
             schedule_r=schedule_r, schedule_mu=schedule_mu,
             measure_fn=measure_fn)
     return plan
@@ -273,6 +312,7 @@ def _make_measure_fn(layer: df.ConvLayer, fft_size: int, alpha: float,
         w_f = sp.prune_magnitude(w_f, alpha)
 
     def measure(tn: FusedTuning, iters: int = 3) -> float:
+        imode = tn.input_mode or "windowed"
         if tn.hadamard == "scheduled" and hasattr(w_f, "values"):
             # Compile the Alg-2 tables ONCE per candidate, outside the
             # timing loop — the wall time ranked here must be the
@@ -289,7 +329,7 @@ def _make_measure_fn(layer: df.ConvLayer, fft_size: int, alpha: float,
             fn = lambda: fused_spectral_conv2d_scheduled(
                 x, w_f, geo, n_par=tn.block_n, flow=tn.flow,
                 block_m=tn.block_m, block_p=tn.block_p, tables=tabs,
-                interpret=interpret)
+                input_mode=imode, interpret=interpret)
         else:
             fn = lambda: fused_spectral_conv2d(x, w_f, geo,
                                                interpret=interpret,

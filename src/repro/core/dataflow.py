@@ -38,7 +38,7 @@ import dataclasses
 import math
 from typing import Iterable
 
-from repro.core.spectral import make_geometry
+from repro.core.spectral import halo_block_geometry, make_geometry
 
 BRAM_DEPTH = 1024
 WORD_BYTES = 2  # 16-bit fixed point
@@ -262,6 +262,16 @@ TPU_ICI_GBPS = 50e9
 # the autotuner (core.autotune).
 FLOWS = ("output_stationary", "weight_stationary", "input_stationary")
 
+# Input-side modes of the fused kernel (kernels.fused_spectral_conv):
+#   'windowed'  host materializes the [B, M, T, K, K] overlap-save
+#               window tensor in HBM (one relayout pass + ~(K/t)^2
+#               duplicated halo bytes), kernel streams windows;
+#   'halo'      kernel reads the RAW NCHW activation via overlapping
+#               (element-offset) input blocks sized bth*t + (K-t) per
+#               spatial axis and gathers the windows in VMEM — no
+#               windowed intermediate ever exists in HBM.
+INPUT_MODES = ("windowed", "halo")
+
 
 def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                   block_n: int, block_p: int, block_m: int,
@@ -348,7 +358,8 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                         active_bins: int | None = None,
                         hadamard: str | None = None,
                         r: int = SCHEDULE_R,
-                        mu: float = SCHEDULE_MU) -> dict[str, float]:
+                        mu: float = SCHEDULE_MU,
+                        input_mode: str | None = None) -> dict[str, float]:
     """HBM traffic + VMEM working set of ONE fused pallas_call
     (``kernels.fused_spectral_conv``): FFT + Hadamard + IFFT (+ fused
     bias/ReLU epilogue) in a single kernel, so HBM only ever sees
@@ -389,11 +400,34 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                         both sides of that trade.
       r, mu: Alg-2 replica count and estimated Eq-14 utilization used
         to size the scheduled tables before the schedule exists.
+      input_mode: input-side path (``INPUT_MODES``), controlling the
+        X-operand traffic:
+          None / 'windowed'  the host materializes the [B, M, T, K, K]
+                       overlap-save window tensor: ONE relayout pass
+                       (raw read + windowed write, counted once) plus
+                       the kernel's window stream of T*K^2 words per
+                       channel — ~(K/t)^2 more than the raw image —
+                       re-read per the flow factor below;
+          'halo'       the kernel reads the raw activation through
+                       overlapping halo blocks (bth*t + k - 1 rows by
+                       btw*t + k - 1 cols, ``halo_block_geometry``
+                       split of block_p): raw-plus-halo words, re-read
+                       per the same flow factor, plus the one-hot
+                       gather selectors once; no materialization pass
+                       exists at all.
 
     Returns a dict with ``hbm_bytes``, ``kernel_hbm_bytes`` (the
     W-operand share of hbm_bytes, re-read factors included),
+    ``input_hbm_bytes`` (the X-operand share: stream * re-read factor
+    + the one-off materialization / gather-selector bytes),
     ``had_flops`` (Hadamard stage only), ``flops``, ``vmem_bytes``,
-    ``hbm_s``/``compute_s`` roofline times and ``fits_vmem``.
+    ``hbm_s``/``compute_s`` roofline times, ``serial_s`` and
+    ``fits_vmem``.  ``serial_s`` is the windowed path's materialization
+    pass: an XLA relayout op that runs BEFORE the pallas_call and
+    cannot overlap it, so its time adds to the roofline max instead of
+    hiding under it (``serial_s + max(hbm_s, compute_s)`` is the
+    honest per-layer latency; the halo path has serial_s = 0 — its
+    gather selectors stream through the kernel's own pipeline).
 
     Re-read factors follow the grid iteration order of each flow:
 
@@ -408,6 +442,10 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     if hadamard is not None and hadamard not in HADAMARD_MODES:
         raise ValueError(f"hadamard must be None or one of "
                          f"{HADAMARD_MODES}, got {hadamard!r}")
+    if input_mode is not None and input_mode not in INPUT_MODES:
+        raise ValueError(f"input_mode must be None or one of "
+                         f"{INPUT_MODES}, got {input_mode!r}")
+    halo = input_mode == "halo"
     k2 = fft_size * fft_size
     tile = layer.tile_size(fft_size)
     t = layer.tiles(fft_size) * batch
@@ -422,7 +460,43 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     bp = min(block_p, t)
     s = k2                   # overlap-save: K x K input windows
     s2 = tile * tile         # only the valid rows are written back
-    x_bytes = layer.c_in * s * t * bytes_per_el
+    raw_words = layer.c_in * layer.h_in * layer.w_in * batch
+    if halo:
+        geo = make_geometry(layer.h_in, layer.w_in, layer.ksize,
+                            fft_size, layer.pad)
+        hg = halo_block_geometry(geo, block_p)
+        bp = hg.block_tiles          # effective tile block of the split
+        # the kernel's actual p grid: one step per (image, block-row,
+        # block-col) — NOT ceil(T / bt), which undercounts whenever the
+        # halo split pads the tile grid.
+        gp = max(1, batch * hg.n_blocks)
+        # raw-plus-halo words: every block reads its bth*t+k-1 x
+        # btw*t+k-1 clamped raw region; overlap between neighbours is
+        # the k-1 halo only (vs the windowed tensor's ~(K/t)^2 full
+        # duplication), and nothing is materialized first.
+        x_stream = (layer.c_in * batch * hg.n_blocks * hg.rh * hg.rw
+                    * bytes_per_el)
+        # One-hot selector traffic is residency-aware: a selector block
+        # is refetched only when its block index changes between
+        # consecutive grid steps, so a single-block axis (nbh == 1 /
+        # nbw == 1 — the btw-first split's common case) stays resident
+        # for the whole kernel; otherwise it re-streams with the p
+        # steps (upper bound: every p step, times the n revisits).
+        sel_reread = {"output_stationary": gn * gp,
+                      "weight_stationary": gn * gm * gp,
+                      "input_stationary": gp}.get(flow, gp)
+        gr_words = hg.bth * fft_size * hg.rh
+        gc_words = hg.btw * fft_size * hg.rw
+        x_once = ((gr_words * (1 if hg.nbh == 1 else sel_reread))
+                  + (gc_words * (1 if hg.nbw == 1 else sel_reread))
+                  ) * bytes_per_el
+    else:
+        # windowed: the kernel streams the host-materialized window
+        # tensor (T * K^2 words/channel); the relayout pass that builds
+        # it (raw read + windowed write) happens once, outside the
+        # kernel, and is honest HBM traffic of this input path.
+        x_stream = layer.c_in * s * t * bytes_per_el
+        x_once = (raw_words + layer.c_in * s * t) * bytes_per_el
     y_bytes = layer.c_out * s2 * t * bytes_per_el
 
     t_cyc = max(nnz, _ceil(nnz, mu))     # schedule length estimate
@@ -448,13 +522,16 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
         had_flops = gn * mp * t_cyc * (per_cyc_p * t + per_cyc_fix * gp)
 
     if flow == "output_stationary":
-        hbm = x_bytes * gn + w_bytes * gp + y_bytes
+        x_hbm = x_stream * gn + x_once
+        hbm = x_hbm + w_bytes * gp + y_bytes
         w_hbm = w_bytes * gp
     elif flow == "weight_stationary":
-        hbm = x_bytes * gn + w_bytes + y_bytes * (2 * gm - 1)
+        x_hbm = x_stream * gn + x_once
+        hbm = x_hbm + w_bytes + y_bytes * (2 * gm - 1)
         w_hbm = w_bytes
     elif flow == "input_stationary":
-        hbm = x_bytes + w_bytes * gp + y_bytes * (2 * gm - 1)
+        x_hbm = x_stream + x_once
+        hbm = x_hbm + w_bytes * gp + y_bytes * (2 * gm - 1)
         w_hbm = w_bytes * gp
     else:
         raise ValueError(flow)
@@ -469,7 +546,17 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     else:
         w_block = cplx * fa * bn * bm             # W plane block
         flight = 0
-    vmem = (2 * (s * bm * bp                      # X window block
+    if halo:
+        # raw halo block instead of a window block; the gathered
+        # windows [S, bm, bt] live in VMEM registers in flight, as do
+        # this block's one-hot selectors.
+        x_block = bm * hg.rh * hg.rw
+        flight += (s * bm * bp
+                   + hg.bth * fft_size * hg.rh
+                   + hg.btw * fft_size * hg.rw)
+    else:
+        x_block = s * bm * bp
+    vmem = (2 * (x_block                          # X block (windows/raw)
                  + w_block
                  + s2 * bn * bp)                  # Y output block
             + cplx * fa * bm * bp                 # X~ in flight
@@ -478,18 +565,30 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
             + 2 * fa * s + 2 * s2 * fa            # DFT / IDFT operators
             ) * bytes_per_el
 
-    fft_flops = (2 * 2 * fa * s * layer.c_in * t
-                 * (gn if flow != "input_stationary" else 1))
+    refft = gn if flow != "input_stationary" else 1
+    fft_flops = 2 * 2 * fa * s * layer.c_in * t * refft
+    if halo:
+        # the in-kernel gather's two one-hot matmuls, recomputed
+        # whenever the block's FFT is
+        gather_macs = (hg.n_blocks
+                       * (hg.bth * fft_size * hg.rh * hg.rw
+                          + hg.bth * fft_size * hg.btw * fft_size
+                          * hg.rw))
+        fft_flops += 2 * gather_macs * layer.c_in * batch * refft
     ifft_passes = 1 if flow == "output_stationary" else gm
     ifft_flops = 2 * 2 * s2 * fa * layer.c_out * t * ifft_passes
     flops = had_flops + fft_flops + ifft_flops
+    serial = 0 if halo else x_once      # windowed relayout pass: serial
     return {
         "hbm_bytes": float(hbm),
         "kernel_hbm_bytes": float(w_hbm),
+        "input_hbm_bytes": float(x_hbm),
+        "input_mode": "halo" if halo else "windowed",
         "had_flops": float(had_flops),
         "vmem_bytes": float(vmem),
         "flops": float(flops),
-        "hbm_s": float(hbm) / TPU_HBM_GBPS,
+        "hbm_s": float(hbm - serial) / TPU_HBM_GBPS,
+        "serial_s": float(serial) / TPU_HBM_GBPS,
         "compute_s": float(flops) / TPU_PEAK_FLOPS,
         "fits_vmem": vmem <= TPU_VMEM_BYTES,
     }

@@ -104,6 +104,11 @@ class LayerPlan:
           DFT on valid rows — shared by every Hadamard mode.
       hadamard    'dense' | 'bin' | 'scheduled' — which datapath
           ``execute_layer_plan`` dispatches to.
+      input_mode  'windowed' | 'halo' — which input path the fused
+          kernel uses: host-materialized overlap-save windows, or the
+          in-kernel halo gather reading the raw activation (the
+          windowed path is the fallback/oracle; both are numerically
+          identical).
       tables      ``PlanTables`` for scheduled layers, else None.
       schedule_cycles / pe_utilization   Alg-2 stats: exact totals when
           the full tables were compiled (scheduled mode), otherwise
@@ -127,6 +132,7 @@ class LayerPlan:
     schedule_cycles: int | None       # Alg-2 stats (None: skipped)
     pe_utilization: float | None      # Eq 14
     hadamard: str = "bin"             # Hadamard-stage mode
+    input_mode: str = "windowed"      # fused-kernel input path
     tables: PlanTables | None = None  # Alg-2 tables (scheduled mode)
 
     @property
@@ -143,6 +149,7 @@ class LayerPlan:
             "active_bins": self.n_active_bins,
             "flow": self.tuning.flow,
             "hadamard": self.hadamard,
+            "input_mode": self.input_mode,
             "block_n": self.tuning.block_n,
             "block_m": self.tuning.block_m,
             "block_p": self.tuning.block_p,
@@ -224,6 +231,18 @@ def _resolve_hadamard_modes(hadamard: str, alpha: float, schedule: bool,
         f"got {hadamard!r}")
 
 
+def _resolve_input_modes(input_mode: str) -> list[str]:
+    """Input-path candidates for the autotuner ('auto' ranks both; the
+    windowed path is always a valid forced fallback/oracle)."""
+    if input_mode == "auto":
+        return list(df.INPUT_MODES)
+    if input_mode in df.INPUT_MODES:
+        return [input_mode]
+    raise ValueError(
+        f"input_mode must be 'auto' or one of {df.INPUT_MODES}, "
+        f"got {input_mode!r}")
+
+
 def build_network_plan(params: dict, cfg, *,
                        batch: int = 1,
                        prune: str = "magnitude",
@@ -235,6 +254,7 @@ def build_network_plan(params: dict, cfg, *,
                        schedule_n_par: int = 64,
                        schedule_channel_sample: int = 2,
                        hadamard: str = "auto",
+                       input_mode: str = "auto",
                        schedule_mu: float = df.SCHEDULE_MU,
                        measure: bool = False,
                        interpret: bool | None = None) -> NetworkPlan:
@@ -264,6 +284,10 @@ def build_network_plan(params: dict, cfg, *,
         'scheduled' falls back to the plane datapath when the schedule
         degenerates (alpha ~= 1); forced 'bin' degrades to 'dense' when
         no bin is empty.
+      input_mode: 'auto' (default — Alg 1 ranks the windowed stream
+        against the in-kernel halo gather per layer; the halo path's
+        raw-plus-halo input bytes win essentially always), or force
+        'windowed' / 'halo' (windowed is the fallback/oracle path).
       schedule_mu: estimated Eq-14 utilization used by the cost model
         to size scheduled tables before the schedules exist.
       measure: re-rank top analytic candidates by wall time
@@ -309,11 +333,13 @@ def build_network_plan(params: dict, cfg, *,
             measure_fn = at._make_measure_fn(layer, cfg.fft_size, alpha,
                                              batch, interpret)
         modes = _resolve_hadamard_modes(hadamard, alpha, schedule, active)
+        imodes = _resolve_input_modes(input_mode)
         tuning = at.autotune_layer(
             layer, cfg.fft_size, alpha, batch=batch,
             vmem_budget=vmem_budget, blocks=blocks, hw_safe=hw_safe,
             active_bins=len(active) if active is not None else None,
-            hadamard_modes=modes, schedule_r=schedule_r,
+            hadamard_modes=modes, input_modes=imodes,
+            schedule_r=schedule_r,
             schedule_mu=schedule_mu, measure_fn=measure_fn)
 
         tables = None
@@ -343,6 +369,7 @@ def build_network_plan(params: dict, cfg, *,
             schedule_cycles=cycles, pe_utilization=mu,
             hadamard=tuning.hadamard or
             ("bin" if active is not None else "dense"),
+            input_mode=tuning.input_mode or "windowed",
             tables=tables))
     return NetworkPlan(name=getattr(cfg, "name", "spectral-cnn"),
                        fft_size=cfg.fft_size, batch=batch,

@@ -143,6 +143,140 @@ def extract_tiles_overlapping(x: Array, geo: SpectralGeometry) -> Array:
     return xt.reshape(b, m, geo.n_tiles, geo.fft_size, geo.fft_size)
 
 
+class HaloGeometry(NamedTuple):
+    """Static geometry of the in-kernel halo gather (PR 5 tentpole).
+
+    The fused kernel's halo input mode reads the RAW NCHW activation
+    directly: each grid step gets an input block covering ``bth x btw``
+    tiles *plus* the k-1-pixel halo the overlap-save windows share —
+    ``rh = bth*t + (K - t)`` rows by ``rw = btw*t + (K - t)`` cols,
+    clamped to the image (small images fit in one block) — and gathers
+    its stride-t, size-K windows in VMEM with one-hot row/col matmuls
+    (``halo_gather_matrices``).  Consecutive blocks overlap by the halo,
+    which Pallas expresses with element-offset (``pl.Unblocked``) index
+    maps; no ``[B, M, T, K, K]`` windowed tensor is ever materialized
+    in HBM.
+    """
+
+    bth: int             # tiles per block along H
+    btw: int             # tiles per block along W
+    nbh: int             # blocks along H  (ceil(n_tiles_h / bth))
+    nbw: int             # blocks along W
+    rh: int              # raw rows per block: min(bth*t + k - 1, h_in)
+    rw: int              # raw cols per block
+
+    @property
+    def block_tiles(self) -> int:
+        """Tiles per grid step — the halo path's effective block_p."""
+        return self.bth * self.btw
+
+    @property
+    def n_blocks(self) -> int:
+        return self.nbh * self.nbw
+
+
+def halo_block_geometry(geo: SpectralGeometry, block_p: int) -> HaloGeometry:
+    """Split a tile-count budget ``block_p`` into a 2-D halo block.
+
+    Favors full tile rows (btw first) so the per-axis halo fraction
+    (K - t)/(b*t) is paid on as few axes as possible; the resulting
+    ``block_tiles = bth*btw <= block_p`` is what the VMEM/psum blocks
+    are sized by.  Deterministic: the kernel, the cost model and the
+    autotuner all derive the same blocks from (geo, block_p).
+    """
+    block_p = max(1, block_p)
+    btw = max(1, min(geo.n_tiles_w, block_p))
+    bth = max(1, min(geo.n_tiles_h, block_p // btw))
+    ov = geo.ksize - 1
+    return HaloGeometry(
+        bth=bth, btw=btw,
+        nbh=-(-geo.n_tiles_h // bth), nbw=-(-geo.n_tiles_w // btw),
+        rh=min(bth * geo.tile + ov, geo.h_in),
+        rw=min(btw * geo.tile + ov, geo.w_in))
+
+
+def halo_block_starts(geo: SpectralGeometry, hg: HaloGeometry
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Clamped raw-image start offsets of every halo block, per axis.
+
+    Block ib's windows span raw rows ``[ib*bth*t - (k-1), ...+rh)``;
+    the start is clamped to ``[0, h_in - rh]`` so the block never reads
+    out of bounds — the gather matrices re-align the windows against
+    the clamped block and encode the 'same'-padding (and bottom/right
+    tile padding) as all-zero one-hot rows.  The kernel's element-offset
+    index map computes exactly this formula on traced indices.
+    """
+    ov = geo.ksize - 1
+    sh = np.arange(hg.nbh) * hg.bth * geo.tile - ov
+    sw = np.arange(hg.nbw) * hg.btw * geo.tile - ov
+    return (np.clip(sh, 0, geo.h_in - hg.rh),
+            np.clip(sw, 0, geo.w_in - hg.rw))
+
+
+def halo_gather_matrices(geo: SpectralGeometry, hg: HaloGeometry
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """One-hot window selectors for the in-kernel halo gather.
+
+    gr [nbh, bth*K, rh] / gc [nbw, btw*K, rw] f32: row ``ii*K + kh`` of
+    block ib selects raw image row ``(ib*bth + ii)*t - (k-1) + kh``
+    relative to the block's clamped start.  Rows whose raw coordinate
+    falls outside the image ('same' zero-padding, bottom/right tile
+    padding past n_tiles) or whose tile index exceeds the tile grid are
+    left all-zero, so the gathered window values are exact zeros — the
+    one-hot matmul IS the zero-padding.  Being 0/1 operands, the gather
+    is numerically exact: halo windows equal
+    ``extract_tiles_overlapping`` bit for bit.
+    """
+    k = geo.fft_size
+    ov = geo.ksize - 1
+    sh, sw = halo_block_starts(geo, hg)
+
+    def axis(nb, bt, n_tiles, start, size, extent):
+        g = np.zeros((nb, bt * k, size), np.float32)
+        for ib in range(nb):
+            for ii in range(bt):
+                tile_idx = ib * bt + ii
+                if tile_idx >= n_tiles:
+                    continue                      # block padding tile
+                for kh in range(k):
+                    raw = tile_idx * geo.tile - ov + kh
+                    if 0 <= raw < extent:
+                        g[ib, ii * k + kh, raw - start[ib]] = 1.0
+        return g
+
+    return (axis(hg.nbh, hg.bth, geo.n_tiles_h, sh, hg.rh, geo.h_in),
+            axis(hg.nbw, hg.btw, geo.n_tiles_w, sw, hg.rw, geo.w_in))
+
+
+def halo_window_reference(x: Array, geo: SpectralGeometry,
+                          hg: HaloGeometry) -> Array:
+    """Host-side emulation of the kernel's halo gather (tests/docs).
+
+    Replays exactly what the fused kernel does per grid step — clamped
+    raw block read, one-hot row/col gather — then reorders the
+    block-major tiles back to row-major and crops the block padding.
+    Must equal ``extract_tiles_overlapping(x, geo)`` for every
+    (H, W, k, t, block_p) the plan can emit (property-tested).
+    """
+    b, m = x.shape[:2]
+    k = geo.fft_size
+    gr, gc = halo_gather_matrices(geo, hg)
+    sh, sw = halo_block_starts(geo, hg)
+    xn = np.asarray(x)
+    out = np.zeros((b, m, hg.nbh * hg.bth, hg.nbw * hg.btw, k, k),
+                   xn.dtype)
+    for ib in range(hg.nbh):
+        for jb in range(hg.nbw):
+            blk = xn[:, :, sh[ib]:sh[ib] + hg.rh, sw[jb]:sw[jb] + hg.rw]
+            win = np.einsum("rh,bmhw,cw->bmrc", gr[ib], blk, gc[jb])
+            win = win.reshape(b, m, hg.bth, k, hg.btw, k)
+            out[:, :, ib * hg.bth:(ib + 1) * hg.bth,
+                jb * hg.btw:(jb + 1) * hg.btw] = win.transpose(
+                    0, 1, 2, 4, 3, 5)
+    out = out[:, :, :geo.n_tiles_h, :geo.n_tiles_w]
+    return jnp.asarray(out.reshape(b, m, geo.n_tiles, k, k))
+
+
 def assemble_valid_tiles(y_tiles: Array, geo: SpectralGeometry) -> Array:
     """Overlap-save output assembly: [B, N, T, h', h'] valid tiles ->
     [B, N, H_out, W_out].

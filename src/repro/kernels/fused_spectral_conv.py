@@ -30,6 +30,23 @@ two contributions to the same pallas_call:
     planes, Karatsuba Hadamard batch, IFFT columns and the psum scratch
     all shrink by Fa/K^2.  When nnz ~= K^2 (padded Fa >= K^2) the caller
     falls back to dense — compaction would buy nothing.
+  * **In-kernel halo gather (PR 5 — true activation reuse).**  The
+    windowed input path consumes a host-materialized [B, M, T, K, K]
+    overlapping-window tensor: one full HBM relayout pass plus a
+    ~(K/t)^2 duplicated stream before any flow-level reuse happens.
+    ``input_mode='halo'`` eliminates it: the kernel reads the RAW NCHW
+    activation through overlapping halo input blocks — element-offset
+    (``pl.Unblocked``) index maps hand each grid step ``bth*t + (k-1)``
+    rows x ``btw*t + (k-1)`` cols covering its bth x btw tiles plus
+    their shared halo, clamped at the image edges — and two one-hot MXU
+    matmuls (``spectral.halo_gather_matrices``) assemble the stride-t
+    K x K windows in VMEM, with all-zero selector rows supplying the
+    'same' zero-padding.  The gather is numerically exact, so the halo
+    path is bit-identical to the windowed one (which stays as the
+    fallback/oracle); HBM sees raw-plus-halo words only.  Available for
+    every flow and Hadamard mode; ``core.plan`` ranks the two input
+    modes per layer as a fourth Alg-1 axis (DESIGN.md adaptation
+    note 7, docs/DATAFLOW.md section 2).
   * **Element-granular scheduled sparse Hadamard (Alg 2 proper).**  The
     Hadamard stage has three modes.  'dense' and 'bin' stream kernel
     PLANES ([Fa, N, M] complex) and run the Karatsuba GEMM above.
@@ -115,9 +132,11 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels._compat import CompilerParams
 
 from repro.core import sparse as sp
-from repro.core.dataflow import FLOWS
-from repro.core.spectral import (SpectralGeometry, assemble_valid_tiles,
-                                 extract_tiles_overlapping)
+from repro.core.dataflow import FLOWS, INPUT_MODES
+from repro.core.spectral import (HaloGeometry, SpectralGeometry,
+                                 assemble_valid_tiles,
+                                 extract_tiles_overlapping,
+                                 halo_block_geometry, halo_gather_matrices)
 from repro.kernels.fft8 import dft_matrices
 
 Array = jax.Array
@@ -273,6 +292,68 @@ def _scheduled_hadamard(idx_ref, sel_ref, vr_ref, vi_ref, xfr, xfi):
 
     zero = jnp.zeros((n_pe, fa, bp), jnp.float32)
     return jax.lax.fori_loop(0, n_cycles, cycle, (zero, zero))
+
+
+def _halo_windows(x_ref, gr_ref, gc_ref, *, bth: int, btw: int,
+                  fft_size: int):
+    """In-kernel halo gather (input_mode='halo'): raw activation block ->
+    overlap-save windows, entirely in VMEM.
+
+    x_ref [1, bm, rh, rw] is a clamped raw-image block covering
+    bth x btw tiles plus their shared k-1 halo (``pl.Unblocked``
+    element offsets — consecutive blocks overlap in HBM, nothing is
+    duplicated).  gr_ref [1, bth*K, rh] / gc_ref [1, btw*K, rw] are this
+    block's one-hot window selectors (``spectral.halo_gather_matrices``;
+    all-zero rows encode the 'same' zero-padding and the tile-grid
+    padding, and make the clamp-shift at image edges exact).  Two MXU
+    matmuls select rows then columns; one-hot f32 operands make the
+    gather numerically exact, so the halo path equals the windowed path
+    bit for bit.  Returns [S, bm, bth*btw] windows, s-leading — the
+    layout ``_tile_fft`` contracts.
+    """
+    k = fft_size
+    x = x_ref[0]                                        # [bm, rh, rw]
+    bm = x.shape[0]
+    rows = jax.lax.dot_general(                         # [bth*K, bm, rw]
+        gr_ref[0], x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    win = jax.lax.dot_general(                          # [bth*K, bm, btw*K]
+        rows, gc_ref[0], (((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    win = win.reshape(bth, k, bm, btw, k)
+    win = win.transpose(1, 4, 2, 0, 3)                  # [K, K, bm, bth, btw]
+    return win.reshape(k * k, bm, bth * btw)
+
+
+class _LazyWindows:
+    """Ref-like stand-in for the gathered windows: ``.shape`` is known
+    statically, the gather itself traces at the ``[...]`` read site.
+    That makes the gather *conditional* wherever the body's window read
+    is — in the input-stationary kernels the read sits inside the
+    ``pl.when(gn == 0)`` FFT-once guard, so the flow's n-block revisits
+    skip the gather matmuls too (matching the cost model's refft = 1
+    for that flow)."""
+
+    def __init__(self, fn, shape):
+        self._fn = fn
+        self.shape = shape
+
+    def __getitem__(self, idx):
+        return self._fn()[idx]
+
+
+def _halo_kernel(body, *, bth: int, btw: int, fft_size: int):
+    """Wrap a flow kernel body so its window operand is gathered in-kernel
+    from a raw halo block instead of read pre-materialized.  The body's
+    first argument only ever sees ``x[...]``/``x.shape``, so the lazy
+    gather substitutes for the windowed Ref unchanged."""
+    def kernel(x_ref, gr_ref, gc_ref, *rest):
+        shape = (fft_size * fft_size, x_ref.shape[1], bth * btw)
+        body(_LazyWindows(
+            lambda: _halo_windows(x_ref, gr_ref, gc_ref, bth=bth,
+                                  btw=btw, fft_size=fft_size),
+            shape), *rest)
+    return kernel
 
 
 def _kernel_os(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
@@ -447,6 +528,48 @@ def _flow_layout(flow: str, gn: int, gm: int, gp: int):
     return grid, canon, semantics
 
 
+def _const_spec(rows: int, cols: int) -> pl.BlockSpec:
+    """Whole-array BlockSpec for the VMEM-resident DFT operators."""
+    return pl.BlockSpec((rows, cols), lambda *_: (0, 0))
+
+
+def _plane_kernel_scratch(flow: str, gm: int, relu: bool, fa: int,
+                          bn: int, bm: int, bp: int, wrap=None):
+    """(kernel, scratch_shapes) of one flow's plane-Hadamard body —
+    shared by the windowed and halo pipeline builders (``wrap`` is the
+    halo gather applied around the body when given)."""
+    body = {"output_stationary": _kernel_os,
+            "weight_stationary": _kernel_ws,
+            "input_stationary": _kernel_is}[flow]
+    kernel = functools.partial(body, n_m_blocks=gm, relu=relu)
+    if wrap is not None:
+        kernel = wrap(kernel)
+    scratch = {"output_stationary": [pltpu.VMEM((fa, bn, bp),
+                                                jnp.float32)] * 2,
+               "weight_stationary": [],
+               "input_stationary": [pltpu.VMEM((fa, bm, bp),
+                                               jnp.float32)] * 2}[flow]
+    return kernel, scratch
+
+
+def _sched_kernel_scratch(flow: str, gm: int, relu: bool, fa: int,
+                          n_pe: int, bm: int, bp: int, wrap=None):
+    """Scheduled-Hadamard sibling of ``_plane_kernel_scratch`` (the
+    output-stationary psums are n-leading [N', Fa, bp])."""
+    body = {"output_stationary": _kernel_os_sched,
+            "weight_stationary": _kernel_ws_sched,
+            "input_stationary": _kernel_is_sched}[flow]
+    kernel = functools.partial(body, n_m_blocks=gm, relu=relu)
+    if wrap is not None:
+        kernel = wrap(kernel)
+    scratch = {"output_stationary": [pltpu.VMEM((n_pe, fa, bp),
+                                                jnp.float32)] * 2,
+               "weight_stationary": [],
+               "input_stationary": [pltpu.VMEM((fa, bm, bp),
+                                               jnp.float32)] * 2}[flow]
+    return kernel, scratch
+
+
 def _check_hw_safe(flow: str, gn: int, gp: int, interpret: bool) -> None:
     """Pallas TPU keeps an output window only across CONSECUTIVE grid
     steps; the RMW flows accumulate into y across the m axis, so on
@@ -505,16 +628,8 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
     gn, gm, gp = np_ // bn, mp_ // bm, pp_ // bp
     _check_hw_safe(flow, gn, gp, interpret)
     grid, canon, semantics = _flow_layout(flow, gn, gm, gp)
-
-    if flow == "output_stationary":
-        kernel = functools.partial(_kernel_os, n_m_blocks=gm, relu=relu)
-        scratch = [pltpu.VMEM((fa, bn, bp), jnp.float32)] * 2
-    elif flow == "weight_stationary":
-        kernel = functools.partial(_kernel_ws, n_m_blocks=gm, relu=relu)
-        scratch = []
-    else:  # input_stationary
-        kernel = functools.partial(_kernel_is, n_m_blocks=gm, relu=relu)
-        scratch = [pltpu.VMEM((fa, bm, bp), jnp.float32)] * 2
+    kernel, scratch = _plane_kernel_scratch(flow, gm, relu, fa, bn, bm,
+                                            bp)
 
     x_spec = pl.BlockSpec(
         (s, bm, bp), lambda *g: (0, canon(*g)[2], canon(*g)[1]))
@@ -523,15 +638,13 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
     b_spec = pl.BlockSpec((1, bn), lambda *g: (0, canon(*g)[0]))
     y_spec = pl.BlockSpec(
         (s2, bn, bp), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
-    d_spec = lambda rows, cols: pl.BlockSpec(
-        (rows, cols), lambda *_: (0, 0))
 
     y = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[x_spec, w_spec, w_spec,
-                  d_spec(fa, s), d_spec(fa, s),
-                  d_spec(s2, fa), d_spec(s2, fa), b_spec],
+                  _const_spec(fa, s), _const_spec(fa, s),
+                  _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
         out_specs=y_spec,
         out_shape=jax.ShapeDtypeStruct((s2, np_, pp_), jnp.float32),
         scratch_shapes=scratch,
@@ -540,6 +653,189 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
         interpret=interpret,
     )(xt_.astype(jnp.float32), wr_, wi_, dfr, dfi, dvr, dvi, bias_)
     return y[:, :n, :p]
+
+
+def _halo_specs(geo: SpectralGeometry, hg: HaloGeometry, bm: int, canon):
+    """(x, gr, gc) BlockSpecs of the halo input path.
+
+    The x spec uses element-offset (``pl.Unblocked``) indexing: the p
+    grid axis enumerates (image, block-row, block-col) and the offset
+    formula is the traced twin of ``spectral.halo_block_starts`` —
+    consecutive blocks' reads overlap by the k-1 halo, clamped at the
+    image edges.  gr/gc stream the block's one-hot window selectors
+    (standard blocked indexing on their leading block axis)."""
+    t, ov = geo.tile, geo.ksize - 1
+    nb = hg.n_blocks
+    h_hi, w_hi = geo.h_in - hg.rh, geo.w_in - hg.rw
+
+    def decomp(p):
+        return p // nb, (p % nb) // hg.nbw, p % hg.nbw
+
+    def x_idx(*g):
+        _, p, m = canon(*g)
+        b, ib, jb = decomp(p)
+        return (b, m * bm,
+                jnp.clip(ib * hg.bth * t - ov, 0, h_hi),
+                jnp.clip(jb * hg.btw * t - ov, 0, w_hi))
+
+    x_spec = pl.BlockSpec((1, bm, hg.rh, hg.rw), x_idx,
+                          indexing_mode=pl.Unblocked())
+    gr_spec = pl.BlockSpec(
+        (1, hg.bth * geo.fft_size, hg.rh),
+        lambda *g: (decomp(canon(*g)[1])[1], 0, 0))
+    gc_spec = pl.BlockSpec(
+        (1, hg.btw * geo.fft_size, hg.rw),
+        lambda *g: (decomp(canon(*g)[1])[2], 0, 0))
+    return x_spec, gr_spec, gc_spec
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geo", "hg", "flow", "block_n", "block_m", "relu",
+                     "interpret"))
+def fused_spectral_pipeline_halo(x: Array, wr: Array, wi: Array,
+                                 dfr: Array, dfi: Array,
+                                 dvr: Array, dvi: Array, bias: Array, *,
+                                 geo: SpectralGeometry, hg: HaloGeometry,
+                                 flow: str = "output_stationary",
+                                 block_n: int = 64, block_m: int = 64,
+                                 relu: bool = False,
+                                 interpret: bool = True) -> Array:
+    """The halo-input sibling of ``fused_spectral_pipeline``: gather ->
+    FFT -> Hadamard -> IFFT (+ epilogue) in one pallas_call, reading the
+    RAW activation.
+
+    x: [B, M, H, W] f32      raw NCHW activation (no windowing, no
+                             padding — the gather encodes both)
+    wr/wi/dfr/dfi/dvr/dvi/bias: as ``fused_spectral_pipeline``.
+    geo/hg: tile + halo-block geometry (``halo_block_geometry``); the
+        effective block_p is ``hg.block_tiles`` and the p grid axis is
+        B * hg.n_blocks.
+    Returns [S2, N, B * nbh*nbw * bth*btw] finished spatial outputs in
+    block-major tile order (``_assemble_output_halo`` restores row-major
+    and crops the block-padding tiles).
+    """
+    if flow not in FLOWS:
+        raise ValueError(f"flow must be one of {FLOWS}")
+    b, m, h, w_px = x.shape
+    assert (h, w_px) == (geo.h_in, geo.w_in), (x.shape, geo)
+    fa, n, _ = wr.shape
+    s = geo.fft_size * geo.fft_size
+    s2 = dvr.shape[0]
+    assert dfr.shape == (fa, s) and dvr.shape == (s2, fa), \
+        (dfr.shape, dvr.shape, (fa, s, s2))
+    assert bias.shape == (1, n), (bias.shape, n)
+
+    bt = hg.block_tiles
+    bn, bm = min(block_n, n), min(block_m, m)
+    x_ = _pad_axis(x, 1, bm)
+    wr_ = _pad_axis(_pad_axis(wr, 1, bn), 2, bm)
+    wi_ = _pad_axis(_pad_axis(wi, 1, bn), 2, bm)
+    bias_ = _pad_axis(bias, 1, bn)
+    np_, mp_ = wr_.shape[1], wr_.shape[2]
+    gn, gm, gp = np_ // bn, mp_ // bm, b * hg.n_blocks
+    _check_hw_safe(flow, gn, gp, interpret)
+    grid, canon, semantics = _flow_layout(flow, gn, gm, gp)
+    gr, gc = (jnp.asarray(a) for a in halo_gather_matrices(geo, hg))
+    wrap = functools.partial(_halo_kernel, bth=hg.bth, btw=hg.btw,
+                             fft_size=geo.fft_size)
+    kernel, scratch = _plane_kernel_scratch(flow, gm, relu, fa, bn, bm,
+                                            bt, wrap=wrap)
+
+    x_spec, gr_spec, gc_spec = _halo_specs(geo, hg, bm, canon)
+    w_spec = pl.BlockSpec(
+        (fa, bn, bm), lambda *g: (0, canon(*g)[0], canon(*g)[2]))
+    b_spec = pl.BlockSpec((1, bn), lambda *g: (0, canon(*g)[0]))
+    y_spec = pl.BlockSpec(
+        (s2, bn, bt), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
+
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, gr_spec, gc_spec, w_spec, w_spec,
+                  _const_spec(fa, s), _const_spec(fa, s),
+                  _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((s2, np_, gp * bt), jnp.float32),
+        scratch_shapes=scratch,
+        compiler_params=CompilerParams(
+            dimension_semantics=semantics),
+        interpret=interpret,
+    )(x_.astype(jnp.float32), gr, gc, wr_, wi_, dfr, dfi, dvr, dvi,
+      bias_)
+    return y[:, :n, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geo", "hg", "n_out", "flow", "block_m", "relu",
+                     "interpret"))
+def fused_spectral_pipeline_scheduled_halo(
+        x: Array, idx: Array, sel: Array, vr: Array, vi: Array,
+        dfr: Array, dfi: Array, dvr: Array, dvi: Array, bias: Array, *,
+        geo: SpectralGeometry, hg: HaloGeometry, n_out: int,
+        flow: str = "output_stationary", block_m: int = 64,
+        relu: bool = False, interpret: bool = True) -> Array:
+    """Halo-input sibling of ``fused_spectral_pipeline_scheduled``: the
+    in-kernel window gather feeding the Alg-2 scheduled datapath.
+    Operand contracts are the scheduled pipeline's (tables padded for
+    ``m_pad_to == min(block_m, M)``, block_n implied == N'), except the
+    input is the raw [B, M, H, W] activation."""
+    b, m, h, w_px = x.shape
+    assert (h, w_px) == (geo.h_in, geo.w_in), (x.shape, geo)
+    gn, mp_t, t_cycles, r = idx.shape
+    n_pe = sel.shape[3]
+    fa = dfr.shape[0]
+    s = geo.fft_size * geo.fft_size
+    s2 = dvr.shape[0]
+    assert sel.shape == (gn, mp_t, t_cycles, n_pe), (sel.shape, idx.shape)
+    assert vr.shape == sel.shape and vi.shape == sel.shape
+    assert n_out <= gn * n_pe, (n_out, gn, n_pe)
+    assert bias.shape == (1, n_out), (bias.shape, n_out)
+
+    bt = hg.block_tiles
+    bm = min(block_m, m)
+    x_ = _pad_axis(x, 1, bm)
+    bias_ = _pad_axis(bias, 1, n_pe)
+    mp_ = x_.shape[1]
+    assert mp_ == mp_t, \
+        (f"tables padded for {mp_t} channels but raw input pads to "
+         f"{mp_}; compile_layer_tables(m_pad_to=block_m) must use the "
+         f"same block_m (= {bm})")
+    np_ = gn * n_pe
+    gm, gp = mp_ // bm, b * hg.n_blocks
+    _check_hw_safe(flow, gn, gp, interpret)
+    grid, canon, semantics = _flow_layout(flow, gn, gm, gp)
+    gr, gc = (jnp.asarray(a) for a in halo_gather_matrices(geo, hg))
+    wrap = functools.partial(_halo_kernel, bth=hg.bth, btw=hg.btw,
+                             fft_size=geo.fft_size)
+    kernel, scratch = _sched_kernel_scratch(flow, gm, relu, fa, n_pe,
+                                            bm, bt, wrap=wrap)
+
+    x_spec, gr_spec, gc_spec = _halo_specs(geo, hg, bm, canon)
+    t_spec = lambda lanes: pl.BlockSpec(
+        (1, bm, t_cycles, lanes),
+        lambda *g: (canon(*g)[0], canon(*g)[2], 0, 0))
+    b_spec = pl.BlockSpec((1, n_pe), lambda *g: (0, canon(*g)[0]))
+    y_spec = pl.BlockSpec(
+        (s2, n_pe, bt), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
+
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, gr_spec, gc_spec, t_spec(r), t_spec(n_pe),
+                  t_spec(n_pe), t_spec(n_pe),
+                  _const_spec(fa, s), _const_spec(fa, s),
+                  _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((s2, np_, gp * bt), jnp.float32),
+        scratch_shapes=scratch,
+        compiler_params=CompilerParams(
+            dimension_semantics=semantics),
+        interpret=interpret,
+    )(x_.astype(jnp.float32), gr, gc, idx, sel, vr, vi, dfr, dfi, dvr,
+      dvi, bias_)
+    return y[:, :n_out, :]
 
 
 @functools.partial(
@@ -598,19 +894,8 @@ def fused_spectral_pipeline_scheduled(xt: Array, idx: Array, sel: Array,
     gm, gp = mp_ // bm, pp_ // bp
     _check_hw_safe(flow, gn, gp, interpret)
     grid, canon, semantics = _flow_layout(flow, gn, gm, gp)
-
-    if flow == "output_stationary":
-        kernel = functools.partial(_kernel_os_sched, n_m_blocks=gm,
-                                   relu=relu)
-        scratch = [pltpu.VMEM((n_pe, fa, bp), jnp.float32)] * 2
-    elif flow == "weight_stationary":
-        kernel = functools.partial(_kernel_ws_sched, n_m_blocks=gm,
-                                   relu=relu)
-        scratch = []
-    else:  # input_stationary
-        kernel = functools.partial(_kernel_is_sched, n_m_blocks=gm,
-                                   relu=relu)
-        scratch = [pltpu.VMEM((fa, bm, bp), jnp.float32)] * 2
+    kernel, scratch = _sched_kernel_scratch(flow, gm, relu, fa, n_pe,
+                                            bm, bp)
 
     x_spec = pl.BlockSpec(
         (s, bm, bp), lambda *g: (0, canon(*g)[2], canon(*g)[1]))
@@ -620,16 +905,14 @@ def fused_spectral_pipeline_scheduled(xt: Array, idx: Array, sel: Array,
     b_spec = pl.BlockSpec((1, n_pe), lambda *g: (0, canon(*g)[0]))
     y_spec = pl.BlockSpec(
         (s2, n_pe, bp), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
-    d_spec = lambda rows, cols: pl.BlockSpec(
-        (rows, cols), lambda *_: (0, 0))
 
     y = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[x_spec, t_spec(r), t_spec(n_pe), t_spec(n_pe),
                   t_spec(n_pe),
-                  d_spec(fa, s), d_spec(fa, s),
-                  d_spec(s2, fa), d_spec(s2, fa), b_spec],
+                  _const_spec(fa, s), _const_spec(fa, s),
+                  _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
         out_specs=y_spec,
         out_shape=jax.ShapeDtypeStruct((s2, np_, pp_), jnp.float32),
         scratch_shapes=scratch,
@@ -709,25 +992,95 @@ def _fused_conv_scheduled(x: Array, idx: Array, sel: Array, vr: Array,
     return _assemble_output(y, geo, b, n_out, t_cnt, x.dtype)
 
 
+def _assemble_output_halo(y: Array, geo: SpectralGeometry,
+                          hg: HaloGeometry, b: int, n: int, dtype
+                          ) -> Array:
+    """[t^2, N, B*nbh*nbw*bth*btw] halo-pipeline output (block-major tile
+    order) -> assembled [B, N, H, W]: restore row-major tiles, crop the
+    block-padding tiles past the (n_tiles_h, n_tiles_w) grid, then the
+    usual valid-tile relayout."""
+    s2 = geo.tile * geo.tile
+    yt = y.reshape(s2, n, b, hg.nbh, hg.nbw, hg.bth, hg.btw)
+    yt = yt.transpose(2, 1, 3, 5, 4, 6, 0)   # [B,N,nbh,bth,nbw,btw,s2]
+    yt = yt.reshape(b, n, hg.nbh * hg.bth, hg.nbw * hg.btw, s2)
+    yt = yt[:, :, :geo.n_tiles_h, :geo.n_tiles_w]
+    yt = yt.reshape(b, n, geo.n_tiles, geo.tile, geo.tile)
+    return assemble_valid_tiles(yt.astype(dtype), geo)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geo", "flow", "block_n", "block_m", "block_p",
+                     "relu", "interpret"))
+def _fused_conv_halo(x: Array, wr: Array, wi: Array, dfr: Array,
+                     dfi: Array, dvr: Array, dvi: Array, bias: Array, *,
+                     geo: SpectralGeometry, flow: str,
+                     block_n: int, block_m: int, block_p: int,
+                     relu: bool, interpret: bool) -> Array:
+    """Jitted body of the halo-input fused conv: NO host-side window
+    materialization — the raw activation goes straight into the
+    pallas_call (the in-kernel gather does the windowing), and only the
+    valid-tile relayout runs outside.  ``block_p`` is split into the
+    2-D halo block by ``halo_block_geometry``."""
+    b, m = x.shape[:2]
+    n = wr.shape[1]
+    hg = halo_block_geometry(geo, block_p)
+    y = fused_spectral_pipeline_halo(
+        x, wr, wi, dfr, dfi, dvr, dvi, bias, geo=geo, hg=hg, flow=flow,
+        block_n=block_n, block_m=block_m, relu=relu, interpret=interpret)
+    return _assemble_output_halo(y, geo, hg, b, n, x.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geo", "n_out", "flow", "block_m", "block_p",
+                     "relu", "interpret"))
+def _fused_conv_scheduled_halo(x: Array, idx: Array, sel: Array,
+                               vr: Array, vi: Array, dfr: Array,
+                               dfi: Array, dvr: Array, dvi: Array,
+                               bias: Array, *, geo: SpectralGeometry,
+                               n_out: int, flow: str, block_m: int,
+                               block_p: int, relu: bool,
+                               interpret: bool) -> Array:
+    """Jitted body of the halo-input scheduled fused conv (same contract
+    as ``_fused_conv_scheduled``, raw activation in)."""
+    b = x.shape[0]
+    hg = halo_block_geometry(geo, block_p)
+    y = fused_spectral_pipeline_scheduled_halo(
+        x, idx, sel, vr, vi, dfr, dfi, dvr, dvi, bias, geo=geo, hg=hg,
+        n_out=n_out, flow=flow, block_m=block_m, relu=relu,
+        interpret=interpret)
+    return _assemble_output_halo(y, geo, hg, b, n_out, x.dtype)
+
+
 def fused_spectral_conv2d(x: Array, w_f, geo: SpectralGeometry, *,
                           flow: str = "output_stationary",
                           block_n: int = 64, block_m: int = 64,
                           block_p: int = 128, bias: Array | None = None,
                           relu: bool = False,
+                          input_mode: str = "windowed",
                           interpret: bool | None = None) -> Array:
     """Full spectral conv layer through the single fused pallas_call.
 
     x: [B, M, H, W] real NCHW; w_f: complex [N, M, K, K] dense, or a
     ``SparseSpectralKernels`` whose active-bin set drives the spectral
     GEMM compaction (dense fallback when nnz ~= K^2).  ``bias``/``relu``
-    select the fused epilogue.  Host side does only the layout work the
-    paper's DMA engine does: overlap-save window extraction going in,
-    valid-tile assembly coming out.
+    select the fused epilogue.  ``input_mode`` selects the input path
+    (``dataflow.INPUT_MODES``): 'windowed' materializes the overlap-save
+    window tensor host-side (the PR-3 formulation, kept as fallback and
+    oracle), 'halo' reads the raw activation through overlapping halo
+    blocks and gathers the windows in VMEM — numerically identical, one
+    whole HBM materialization pass cheaper plus the (K/t)^2 halo
+    duplication.  In windowed mode the host does only the layout work
+    the paper's DMA engine does; in halo mode not even that.
 
     NOTE: this ad-hoc entry recomputes compaction + DFT operators per
     call; the compile-once path is ``core.plan.build_network_plan`` +
     ``execute_layer_plan``.
     """
+    if input_mode not in INPUT_MODES:
+        raise ValueError(f"input_mode must be one of {INPUT_MODES}, "
+                         f"got {input_mode!r}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if hasattr(w_f, "values"):            # SparseSpectralKernels duck-type
@@ -750,9 +1103,10 @@ def fused_spectral_conv2d(x: Array, w_f, geo: SpectralGeometry, *,
         bias_arr = jnp.zeros((1, n), jnp.float32)
     else:
         bias_arr = jnp.asarray(bias, jnp.float32).reshape(1, n)
-    return _fused_conv(x, wr, wi, dfr, dfi, dvr, dvi, bias_arr, geo=geo,
-                       flow=flow, block_n=block_n, block_m=block_m,
-                       block_p=block_p, relu=relu, interpret=interpret)
+    conv = _fused_conv_halo if input_mode == "halo" else _fused_conv
+    return conv(x, wr, wi, dfr, dfi, dvr, dvi, bias_arr, geo=geo,
+                flow=flow, block_n=block_n, block_m=block_m,
+                block_p=block_p, relu=relu, interpret=interpret)
 
 
 def fused_spectral_conv2d_scheduled(x: Array, sk, geo: SpectralGeometry,
@@ -763,6 +1117,7 @@ def fused_spectral_conv2d_scheduled(x: Array, sk, geo: SpectralGeometry,
                                     relu: bool = False,
                                     method: str = "exact_cover",
                                     tables=None,
+                                    input_mode: str = "windowed",
                                     interpret: bool | None = None
                                     ) -> Array:
     """Full spectral conv layer through the SCHEDULED fused pallas_call.
@@ -784,6 +1139,9 @@ def fused_spectral_conv2d_scheduled(x: Array, sk, geo: SpectralGeometry,
     """
     from repro.core import scheduler as sch
 
+    if input_mode not in INPUT_MODES:
+        raise ValueError(f"input_mode must be one of {INPUT_MODES}, "
+                         f"got {input_mode!r}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     assert sk.fft_size == geo.fft_size
@@ -806,7 +1164,9 @@ def fused_spectral_conv2d_scheduled(x: Array, sk, geo: SpectralGeometry,
         bias_arr = jnp.zeros((1, n), jnp.float32)
     else:
         bias_arr = jnp.asarray(bias, jnp.float32).reshape(1, n)
-    return _fused_conv_scheduled(
+    conv = (_fused_conv_scheduled_halo if input_mode == "halo"
+            else _fused_conv_scheduled)
+    return conv(
         x, jnp.asarray(tabs.idx), jnp.asarray(tabs.sel),
         jnp.asarray(tabs.vr), jnp.asarray(tabs.vi),
         dfr, dfi, dvr, dvi, bias_arr, geo=geo, n_out=n,
@@ -824,24 +1184,28 @@ def execute_layer_plan(x: Array, lp, *, interpret: bool | None = None
     executes the precompiled Alg-2 INDEX/VALUE tables element-
     granularly.  Nothing is re-derived per call — no scheduling,
     compaction or geometry work — so repeated forwards hit the jit
-    cache of ``_fused_conv``/``_fused_conv_scheduled`` directly.
+    cache of ``_fused_conv``/``_fused_conv_scheduled`` (or their halo
+    siblings, when the plan's ``input_mode`` is 'halo') directly.
     Pooling (``lp.epilogue.pool``) is spatial and stays with the
     caller.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     tn = lp.tuning
+    halo = getattr(lp, "input_mode", "windowed") == "halo"
     bias = lp.bias if lp.epilogue.bias else jnp.zeros_like(lp.bias)
     if getattr(lp, "hadamard", None) == "scheduled":
         tb = lp.tables
-        return _fused_conv_scheduled(
+        conv = _fused_conv_scheduled_halo if halo else _fused_conv_scheduled
+        return conv(
             x, tb.idx, tb.sel, tb.vr, tb.vi,
             lp.dfr, lp.dfi, lp.dvr, lp.dvi, bias, geo=lp.geo,
             n_out=lp.layer.c_out, flow=tn.flow, block_m=tn.block_m,
             block_p=tn.block_p, relu=lp.epilogue.relu,
             interpret=interpret)
-    return _fused_conv(x, lp.wr, lp.wi, lp.dfr, lp.dfi, lp.dvr, lp.dvi,
-                       bias, geo=lp.geo, flow=tn.flow,
-                       block_n=tn.block_n, block_m=tn.block_m,
-                       block_p=tn.block_p, relu=lp.epilogue.relu,
-                       interpret=interpret)
+    conv = _fused_conv_halo if halo else _fused_conv
+    return conv(x, lp.wr, lp.wi, lp.dfr, lp.dfi, lp.dvr, lp.dvi,
+                bias, geo=lp.geo, flow=tn.flow,
+                block_n=tn.block_n, block_m=tn.block_m,
+                block_p=tn.block_p, relu=lp.epilogue.relu,
+                interpret=interpret)

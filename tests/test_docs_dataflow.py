@@ -1,0 +1,84 @@
+"""docs/DATAFLOW.md stays truthful: its per-flow byte formulas are
+extracted from the page's ``doc-formulas`` fenced block, executed, and
+compared against ``dataflow.tpu_fused_flow_cost`` over layers x flows x
+Hadamard modes x input modes.  If the cost model changes without the
+document, or vice versa, this fails.
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.core import dataflow as df
+from repro.core import spectral as spec
+
+DOC = Path(__file__).resolve().parent.parent / "docs" / "DATAFLOW.md"
+
+_BLOCK = re.compile(r"```python doc-formulas\n(.*?)```", re.DOTALL)
+
+
+def _doc_namespace() -> dict:
+    m = _BLOCK.search(DOC.read_text())
+    assert m, "docs/DATAFLOW.md lost its ```python doc-formulas block"
+    ns: dict = {}
+    exec(compile(m.group(1), str(DOC), "exec"), ns)  # noqa: S102
+    for fn in ("input_bytes", "kernel_bytes", "output_bytes"):
+        assert fn in ns, f"doc-formulas block lost {fn}()"
+    return ns
+
+
+CASES = [(layer, flow, mode, imode)
+         for layer in (df.VGG16_LAYERS[1], df.VGG16_LAYERS[5],
+                       df.VGG16_LAYERS[-1])
+         for flow in df.FLOWS
+         for mode in df.HADAMARD_MODES
+         for imode in df.INPUT_MODES]
+
+
+class TestDocFormulasMatchCode:
+    ns = _doc_namespace()
+
+    @pytest.mark.parametrize("layer,flow,mode,imode", CASES,
+                             ids=[f"{l.name}-{f}-{m}-{i}"
+                                  for l, f, m, i in CASES])
+    def test_shares_and_total(self, layer, flow, mode, imode):
+        fft, alpha, batch = 8, 4.0, 1
+        block_n, block_p, block_m = 64, 128, 64
+        c = df.tpu_fused_flow_cost(layer, fft, alpha, block_n, block_p,
+                                   block_m, flow, batch=batch,
+                                   hadamard=mode, input_mode=imode)
+        geo = spec.make_geometry(layer.h_in, layer.w_in, layer.ksize,
+                                 fft, layer.pad)
+        hg = spec.halo_block_geometry(geo, block_p)
+        T = geo.n_tiles * batch
+        k2 = fft * fft
+        nnz = max(1, round(k2 / alpha))
+        bn = min(block_n, layer.c_out)
+        bm = min(block_m, layer.c_in)
+        gn = max(1, -(-layer.c_out // block_n))
+        gm = max(1, -(-layer.c_in // block_m))
+        if imode == "halo":
+            gp = max(1, batch * hg.n_blocks)   # the actual p grid
+        else:
+            gp = max(1, -(-T // block_p))
+        mp = gm * bm
+
+        x = self.ns["input_bytes"](
+            flow, layer.c_in, layer.h_in, layer.w_in, fft, T, batch,
+            imode, hg.nbh, hg.nbw, hg.rh, hg.rw, hg.bth, hg.btw, gn, gm)
+        w = self.ns["kernel_bytes"](
+            flow, layer.c_out, layer.c_in, fft, k2, nnz,
+            df.SCHEDULE_MU, df.SCHEDULE_R, bn, mp, gp, mode)
+        y = self.ns["output_bytes"](flow, layer.c_out, geo.tile, T, gm)
+
+        assert x == pytest.approx(c["input_hbm_bytes"]), "input share"
+        assert w == pytest.approx(c["kernel_hbm_bytes"]), "kernel share"
+        assert x + w + y == pytest.approx(c["hbm_bytes"]), "total"
+
+    def test_doc_is_linked(self):
+        """README and ARCHITECTURE must point at the walkthrough."""
+        root = DOC.parent.parent
+        assert "docs/DATAFLOW.md" in (root / "README.md").read_text()
+        assert "DATAFLOW.md" in (root / "docs" /
+                                 "ARCHITECTURE.md").read_text()
