@@ -94,6 +94,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
+import tempfile
 import time
 
 import jax
@@ -595,9 +598,68 @@ def main() -> None:
           f"{ph['passes_1e-5']}); vs windowed path "
           f"{ph['max_abs_err_vs_windowed']:.2e}")
 
-    with open(args.json, "w") as f:
-        json.dump(report, f, indent=2)
+    _write_report_atomic(report, args.json)
     print(f"wrote {args.json}")
+
+    failed = _failed_gates(report)
+    if failed:
+        print("[gates] FAILED:", file=sys.stderr)
+        for name, value in failed:
+            print(f"  - {name} = {value!r}", file=sys.stderr)
+        sys.exit(1)
+    print("[gates] all acceptance gates pass")
+
+
+def _write_report_atomic(report: dict, path: str) -> None:
+    """Write the JSON report via a temp file in the same directory +
+    ``os.replace`` so a crash (or a concurrent reader, e.g. CI tailing
+    the file) never observes a truncated BENCH_e2e.json."""
+    dirname = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=dirname, prefix=".bench_e2e_",
+                               suffix=".json.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _failed_gates(report: dict) -> list[tuple[str, object]]:
+    """Collect acceptance-gate violations from a finished report.
+
+    The report is written FIRST (atomically), then the gates fail the
+    process with a nonzero exit so CI blocks on a parity or
+    halo<windowed regression while the artifact stays inspectable."""
+    gates: list[tuple[str, object]] = [
+        ("totals.all_layers_halo_input_lt_windowed",
+         report["totals"]["all_layers_halo_input_lt_windowed"]),
+        ("totals.all_layers_fused_le_staged_os",
+         report["totals"]["all_layers_fused_le_staged_os"]),
+        ("totals.all_sparse_scheduled_le_bin",
+         report["totals"]["all_sparse_scheduled_le_bin"]),
+        ("parity_scheduled.network_smoke.passes_1e-5",
+         report["parity_scheduled"]["network_smoke"]["passes_1e-5"]),
+        ("parity_halo.passes_1e-5",
+         report["parity_halo"]["passes_1e-5"]),
+    ]
+    # full-run-only sweeps (absent under --quick)
+    if "parity" in report:
+        gates.append(("parity.passes_1e-3",
+                      report["parity"]["passes_1e-3"]))
+    if "parity_sparse" in report:
+        gates.append(("parity_sparse.passes_1e-4",
+                      report["parity_sparse"]["passes_1e-4"]))
+    if "per_layer_conv5" in report.get("parity_scheduled", {}):
+        gates.append(
+            ("parity_scheduled.per_layer_conv5.passes_1e-5",
+             report["parity_scheduled"]["per_layer_conv5"]["passes_1e-5"]))
+    return [(name, value) for name, value in gates if not value]
 
 
 if __name__ == "__main__":

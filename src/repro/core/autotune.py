@@ -42,12 +42,18 @@ from repro.core.dataflow import FLOWS
 BLOCK_CANDIDATES = (32, 64, 128, 256)
 
 
-def _predict(c: dict) -> float:
+def predict_seconds(c: dict) -> float:
     """Roofline latency of one cost-model row: pipelined kernel time
     plus any serial host-side pass (the windowed input path's window
     relayout — ``dataflow.tpu_fused_flow_cost`` 'serial_s'; staged
-    ``tpu_flow_cost`` rows have none)."""
+    ``tpu_flow_cost`` rows have none).  Public because the degradation
+    ladder (``core.resilience.demote_layer``) re-prices demoted
+    configurations through the same formula, keeping
+    ``FusedTuning.predicted_s`` honest after a demotion."""
     return c.get("serial_s", 0.0) + max(c["hbm_s"], c["compute_s"])
+
+
+_predict = predict_seconds
 
 
 @dataclasses.dataclass(frozen=True)

@@ -272,6 +272,12 @@ FLOWS = ("output_stationary", "weight_stationary", "input_stationary")
 #               windowed intermediate ever exists in HBM.
 INPUT_MODES = ("windowed", "halo")
 
+# Per-layer execution backends, in degradation-ladder order (see
+# core.resilience.DEMOTION_LADDER): the fused single-pallas_call kernel,
+# the 3-launch staged pipeline, and the pure-jnp einsum oracle — the
+# terminal rung, which always executes.
+EXEC_BACKENDS = ("fused", "staged", "einsum")
+
 
 def tpu_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                   block_n: int, block_p: int, block_m: int,

@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.core import autotune as at
 from repro.core import dataflow as df
+from repro.core import resilience as res
 from repro.core import scheduler as sch
 from repro.core import sparse as sp
 from repro.core import spectral as spec
@@ -113,6 +114,13 @@ class LayerPlan:
       schedule_cycles / pe_utilization   Alg-2 stats: exact totals when
           the full tables were compiled (scheduled mode), otherwise
           sampled (None when scheduling was skipped).
+      backend     'fused' | 'staged' | 'einsum' — which execution path
+          runs this layer under the pallas_fused network backend
+          (``df.EXEC_BACKENDS``).  Always 'fused' at build time; the
+          degradation ladder (``core.resilience``) demotes it when the
+          fused variant cannot compile/execute.
+      provenance  audit trail of demotions applied to this layer by
+          ``resilience.harden_network_plan`` (empty = as built).
     """
 
     layer: df.ConvLayer
@@ -134,6 +142,8 @@ class LayerPlan:
     hadamard: str = "bin"             # Hadamard-stage mode
     input_mode: str = "windowed"      # fused-kernel input path
     tables: PlanTables | None = None  # Alg-2 tables (scheduled mode)
+    backend: str = "fused"            # per-layer execution path
+    provenance: tuple[str, ...] = ()  # demotion audit trail
 
     @property
     def n_active_bins(self) -> int:
@@ -150,6 +160,8 @@ class LayerPlan:
             "flow": self.tuning.flow,
             "hadamard": self.hadamard,
             "input_mode": self.input_mode,
+            "backend": self.backend,
+            "demotions": len(self.provenance),
             "block_n": self.tuning.block_n,
             "block_m": self.tuning.block_m,
             "block_p": self.tuning.block_p,
@@ -177,6 +189,41 @@ class NetworkPlan:
 
     def summary(self) -> list[dict]:
         return [lp.stats() for lp in self.layers]
+
+    def health_report(self) -> dict:
+        """Resilience status of the plan: validation diagnostics plus
+        the demotion audit trail (``core.resilience``).
+
+        Returns a dict with ``healthy`` (no error-severity diagnostics
+        and no demoted layers), ``demoted_layers``, ``issues`` (count
+        by severity) and one row per layer carrying its current modes,
+        provenance and any outstanding diagnostics.
+        """
+        diags = res.validate_plan(self, raise_on_error=False)
+        rows = []
+        for lp in self.layers:
+            name = lp.layer.name
+            mine = [d for d in diags if d.layer == name]
+            rows.append({
+                "layer": name,
+                "backend": lp.backend,
+                "flow": lp.tuning.flow,
+                "hadamard": lp.hadamard,
+                "input_mode": lp.input_mode,
+                "demotions": list(lp.provenance),
+                "issues": [str(d) for d in mine],
+            })
+        n_err = sum(d.severity == "error" for d in diags)
+        n_warn = sum(d.severity == "warn" for d in diags)
+        demoted = [lp.layer.name for lp in self.layers if lp.provenance]
+        return {
+            "name": self.name,
+            "batch": self.batch,
+            "healthy": n_err == 0 and not demoted,
+            "demoted_layers": demoted,
+            "issues": {"error": n_err, "warn": n_warn},
+            "layers": rows,
+        }
 
 
 def _sampled_schedule_stats(sk: sp.SparseSpectralKernels, k2: int, *,
@@ -257,7 +304,8 @@ def build_network_plan(params: dict, cfg, *,
                        input_mode: str = "auto",
                        schedule_mu: float = df.SCHEDULE_MU,
                        measure: bool = False,
-                       interpret: bool | None = None) -> NetworkPlan:
+                       interpret: bool | None = None,
+                       validate: bool = True) -> NetworkPlan:
     """Compile the whole conv stack once (see module docstring).
 
     Args:
@@ -293,6 +341,13 @@ def build_network_plan(params: dict, cfg, *,
       measure: re-rank top analytic candidates by wall time
         (``autotune``); ``interpret`` selects the kernel execution mode
         for that measurement.
+      validate: run ``resilience.validate_plan`` on the finished plan
+        (default) so invariant violations — corrupted Alg-2 tables,
+        inconsistent operators, out-of-range halo starts — are rejected
+        at plan build, not at kernel launch.  VMEM/hw-safety findings
+        are advisory (warn severity) here because the autotuner's
+        documented fallback may legitimately exceed the budget; use
+        ``resilience.harden_network_plan`` to demote such layers.
 
     For every layer whose chosen mode is 'scheduled', the full Alg-2
     tables are compiled here (one exact-cover schedule per kernel-group
@@ -320,8 +375,11 @@ def build_network_plan(params: dict, cfg, *,
                 sk, k2, r=schedule_r, n_par=schedule_n_par,
                 channel_sample=schedule_channel_sample)
             full = np.asarray(sk.active_bins)
-            assert np.isin(sampled_bins, full).all(), \
-                "schedule touched a bin outside the pruned kernel support"
+            if not np.isin(sampled_bins, full).all():
+                raise res.PlanValidationError(
+                    f"Alg-2 schedule for {layer.name} touched a "
+                    f"frequency bin outside the pruned kernel support",
+                    layer=layer.name, site="schedule-stats")
 
         active = sp.compacted_active_bins(sk)
         wr, wi = sp.compact_planes(sk, active)
@@ -371,9 +429,12 @@ def build_network_plan(params: dict, cfg, *,
             ("bin" if active is not None else "dense"),
             input_mode=tuning.input_mode or "windowed",
             tables=tables))
-    return NetworkPlan(name=getattr(cfg, "name", "spectral-cnn"),
-                       fft_size=cfg.fft_size, batch=batch,
-                       layers=tuple(plans))
+    net = NetworkPlan(name=getattr(cfg, "name", "spectral-cnn"),
+                      fft_size=cfg.fft_size, batch=batch,
+                      layers=tuple(plans))
+    if validate:
+        res.validate_plan(net, vmem_budget=vmem_budget, hw_safe=hw_safe)
+    return net
 
 
 def _operators(geo: spec.SpectralGeometry, active: np.ndarray | None):

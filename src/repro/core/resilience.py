@@ -1,0 +1,720 @@
+"""Resilient execution layer: validated plans, tiered degradation, guards.
+
+Everything aggressive in the fused path — element-offset halo blocks,
+scheduled one-hot Hadamard, the in-kernel epilogue — is validated in
+interpret mode but flagged as unverified on real Mosaic (ROADMAP item 6).
+Until this module existed, any lowering failure, VMEM overflow or
+corrupted Alg-2 table surfaced as a raw Pallas traceback or, worse, a
+silently wrong output.  The paper's own framing (and SPEC2's fixed-point
+parity gates) is that a compressed/scheduled datapath earns its speedups
+only if it is *provably equivalent* to the reference — so the execution
+layer needs a principled failure model:
+
+  1. **Plan validation** (build time).  ``validate_plan`` runs structured
+     invariant checks over a ``core.plan.NetworkPlan`` — VMEM budget vs
+     the chosen blocks, Alg-2 INDEX/VALUE table bounds and dtypes, halo
+     block starts within the raw image, psum-revisit hardware safety —
+     and raises ``PlanValidationError`` with per-layer diagnostics
+     instead of a bare ``ValueError`` or a kernel-launch-time assert.
+
+  2. **Tiered graceful degradation** (plan hardening).
+     ``harden_network_plan`` probes each layer's chosen kernel variant
+     (compile + one forward on zeros) and, on failure, demotes the layer
+     one rung at a time along the explicit ladder
+
+         input_mode   halo      -> windowed
+         hadamard     scheduled -> dense (plane datapath)
+         backend      fused     -> staged -> einsum
+
+     re-pricing the tuning via ``dataflow.tpu_fused_flow_cost`` /
+     ``tpu_flow_cost`` so the recorded cost stays honest.  Every
+     demotion is recorded in ``LayerPlan.provenance`` and surfaced via
+     ``NetworkPlan.health_report()``.  Every rung lands on a datapath
+     that is numerically equivalent to the one it replaces (windowed ==
+     halo bit-for-bit; plane == scheduled to float tolerance; staged /
+     einsum are the standing oracles), so a demoted plan stays inside
+     the existing parity gates.
+
+  3. **Runtime numeric guards** (opt-in).  ``NumericGuards`` adds a
+     per-layer NaN/Inf scan and a sampled-channel parity self-check
+     against the einsum oracle to ``models.cnn.forward_spectral``, with
+     a configurable policy: ``raise`` (``NumericGuardError``),
+     ``demote`` (recompute the offending layer through the oracle and
+     continue) or ``warn``.
+
+  4. **Deterministic fault injection** (testing).  The module hosts the
+     low-level fault registry (``install_fault`` / ``fault_check`` /
+     ``fault_corrupt``) that ``repro.testing.faults`` drives, so tests
+     exercise *every* edge of the degradation ladder without real
+     hardware.  The hooks are no-ops (one truthiness check) when no
+     fault is installed.
+
+Import discipline: this module imports only leaf ``core`` modules
+(``dataflow`` / ``sparse`` / ``spectral``); kernels, models and
+``core.plan`` import *it*, and the probe/execute helpers import them
+lazily.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dataflow as df
+from repro.core import sparse as sp
+from repro.core import spectral as spec
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+
+class ResilienceError(Exception):
+    """Base of the structured failure taxonomy.
+
+    Carries the failing ``layer`` (or None for network-level failures),
+    the ``site`` that detected the problem, and a list of per-layer
+    ``Diagnostic`` records — so callers never have to parse a raw
+    traceback to find out *which* layer, *which* invariant.
+    """
+
+    def __init__(self, message: str, *, layer: str | None = None,
+                 site: str | None = None,
+                 diagnostics: Sequence["Diagnostic"] = ()):
+        self.layer = layer
+        self.site = site
+        self.diagnostics = tuple(diagnostics)
+        if self.diagnostics:
+            lines = [message] + [f"  - {d}" for d in self.diagnostics]
+            message = "\n".join(lines)
+        super().__init__(message)
+
+
+class PlanValidationError(ResilienceError, ValueError):
+    """A NetworkPlan/LayerPlan invariant is violated (build/validate
+    time).  Subclasses ``ValueError`` so pre-taxonomy callers that
+    caught the bare error keep working."""
+
+
+class KernelLoweringError(ResilienceError, NotImplementedError):
+    """The chosen kernel variant cannot compile/lower/execute (VMEM
+    overflow, Mosaic lowering failure, unsupported grid shape...).
+    Subclasses ``NotImplementedError`` for back-compat with the old
+    ``_check_hw_safe`` contract."""
+
+
+class NumericGuardError(ResilienceError, ValueError):
+    """A runtime numeric guard tripped: non-finite activations or a
+    sampled parity check against the einsum oracle out of tolerance."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One failed (or advisory) invariant check for one layer."""
+
+    layer: str
+    check: str               # e.g. 'tables/idx-bounds', 'vmem-budget'
+    message: str
+    severity: str = "error"  # 'error' | 'warn'
+
+    def __str__(self) -> str:
+        return f"[{self.layer}] {self.check} ({self.severity}): " \
+               f"{self.message}"
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection registry (driven by repro.testing.faults)
+# ---------------------------------------------------------------------------
+
+# Named sites production code consults.  Keep in sync with
+# ``repro.testing.faults.FAULT_SITES``.
+FAULT_SITES = ("lowering", "vmem_overflow", "oob_index", "corrupt_value",
+               "nan_activations")
+
+
+@dataclasses.dataclass
+class InjectedFault:
+    """A deterministic fault installed at a named site.
+
+    ``match`` restricts the fault to call sites whose context carries
+    every listed key with an equal value (e.g. ``{"input_mode":
+    "halo"}`` fails only halo-variant attempts, so a probe demoting to
+    'windowed' succeeds — exactly one rung of the ladder).  ``exc`` is
+    an exception *factory* for raise-sites; ``corrupt`` a value
+    transform for corruption-sites.  ``fires`` counts activations so
+    tests can assert the fault actually triggered.
+    """
+
+    site: str
+    match: dict = dataclasses.field(default_factory=dict)
+    exc: Callable[[], Exception] | None = None
+    corrupt: Callable[[Any], Any] | None = None
+    fires: int = 0
+
+    def matches(self, ctx: dict) -> bool:
+        return all(ctx.get(k) == v for k, v in self.match.items())
+
+
+_FAULTS: list[InjectedFault] = []
+
+
+def install_fault(fault: InjectedFault) -> None:
+    if fault.site not in FAULT_SITES:
+        raise ValueError(f"unknown fault site {fault.site!r}; "
+                         f"must be one of {FAULT_SITES}")
+    _FAULTS.append(fault)
+
+
+def remove_fault(fault: InjectedFault) -> None:
+    if fault in _FAULTS:
+        _FAULTS.remove(fault)
+
+
+def fault_check(site: str, **ctx) -> None:
+    """Raise the injected exception if a matching fault is installed.
+
+    Called by production code at named failure sites (kernel entry,
+    staged dispatch...).  A no-op — one truthiness check — when no
+    fault is active.
+    """
+    if not _FAULTS:
+        return
+    for f in _FAULTS:
+        if f.site == site and f.exc is not None and f.matches(ctx):
+            f.fires += 1
+            raise f.exc()
+
+
+def fault_corrupt(site: str, value, **ctx):
+    """Return ``value`` passed through any matching corruption faults."""
+    if not _FAULTS:
+        return value
+    for f in _FAULTS:
+        if f.site == site and f.corrupt is not None and f.matches(ctx):
+            f.fires += 1
+            value = f.corrupt(value)
+    return value
+
+
+# ---------------------------------------------------------------------------
+# (1) Plan validation
+# ---------------------------------------------------------------------------
+
+def validate_tables(tables, *, n_bins: int, r: int, c_out: int,
+                    c_in: int, block_m: int, layer: str = "?"
+                    ) -> list[Diagnostic]:
+    """Bounds/dtype/shape invariants of one layer's Alg-2 tables.
+
+    ``tables`` duck-types ``core.plan.PlanTables`` /
+    ``scheduler.LayerTables`` (``idx``/``sel``/``vr``/``vi``).  Checks:
+
+      * dtypes: idx/sel int32, vr/vi float32;
+      * idx entries within [0, n_bins) — the compacted-coordinate
+        gather addresses the kernel one-hots against;
+      * sel entries within [0, r) — the crossbar replica columns;
+      * sel/vr/vi share one shape, idx agrees on [GN, Mp, T];
+      * GN * N' covers c_out and Mp equals c_in padded to block_m;
+      * vr/vi finite (a NaN weight poisons every psum it touches).
+    """
+    out: list[Diagnostic] = []
+    d = lambda check, msg: out.append(Diagnostic(layer, check, msg))
+
+    idx = np.asarray(tables.idx)
+    sel = np.asarray(tables.sel)
+    vr = np.asarray(tables.vr)
+    vi = np.asarray(tables.vi)
+    for name, arr, want in (("idx", idx, np.int32), ("sel", sel, np.int32),
+                            ("vr", vr, np.float32),
+                            ("vi", vi, np.float32)):
+        if arr.dtype != want:
+            d(f"tables/{name}-dtype",
+              f"{name} dtype {arr.dtype} != {np.dtype(want)}")
+    if sel.shape != vr.shape or sel.shape != vi.shape:
+        d("tables/shape", f"sel {sel.shape} / vr {vr.shape} / "
+                          f"vi {vi.shape} shapes disagree")
+    if idx.ndim != 4 or sel.ndim != 4 or idx.shape[:3] != sel.shape[:3]:
+        d("tables/shape",
+          f"idx {idx.shape} does not align with sel {sel.shape} "
+          f"on [GN, Mp, T]")
+        return out                       # downstream checks meaningless
+    gn, mp, _, r_tab = idx.shape
+    n_pe = sel.shape[3]
+    if r_tab > r:
+        d("tables/replicas", f"idx carries {r_tab} replica slots, "
+                             f"schedule allows r={r}")
+    if gn * n_pe < c_out:
+        d("tables/groups", f"GN*N' = {gn}*{n_pe} covers only "
+                           f"{gn * n_pe} kernels, layer has {c_out}")
+    bm = min(block_m, c_in)
+    mp_want = c_in + (-c_in) % max(1, bm)
+    if mp != mp_want:
+        d("tables/m-pad", f"channel padding Mp={mp} != {mp_want} "
+                          f"(c_in={c_in} padded to block_m={bm}); the "
+                          f"kernel blocks over mismatched channels")
+    if idx.size and (idx.min() < 0 or idx.max() >= n_bins):
+        d("tables/idx-bounds",
+          f"INDEX entries outside [0, {n_bins}): min={idx.min()} "
+          f"max={idx.max()} — an in-kernel gather against these "
+          f"addresses reads unrelated spectra")
+    if sel.size and (sel.min() < 0 or sel.max() >= max(1, r_tab)):
+        d("tables/sel-bounds",
+          f"sel entries outside [0, {r_tab}): min={sel.min()} "
+          f"max={sel.max()}")
+    if not (np.isfinite(vr).all() and np.isfinite(vi).all()):
+        d("tables/value-finite", "non-finite entries in VALUE planes")
+    return out
+
+
+def _layer_cost(lp, batch: int) -> dict:
+    """Re-price one layer's tuned config through the fused cost model."""
+    tn = lp.tuning
+    fa = lp.n_active_bins if lp.active is not None else None
+    return df.tpu_fused_flow_cost(
+        lp.layer, lp.geo.fft_size, lp.alpha, tn.block_n, tn.block_p,
+        tn.block_m, tn.flow, batch=batch, active_bins=fa,
+        hadamard=lp.hadamard, input_mode=lp.input_mode)
+
+
+def validate_layer_plan(lp, *, batch: int = 1,
+                        vmem_budget: int = df.TPU_VMEM_BYTES,
+                        hw_safe: bool = True) -> list[Diagnostic]:
+    """Structured invariant checks for one ``core.plan.LayerPlan``.
+
+    Returns a list of ``Diagnostic`` records (empty = healthy).
+    Severity 'error' marks invariants whose violation makes the kernel
+    wrong or un-launchable; 'warn' marks advisory findings (an
+    over-budget VMEM working set still runs in interpret mode — the
+    autotuner's documented smallest-footprint fallback — but will fail
+    Mosaic compilation on hardware).
+    """
+    out: list[Diagnostic] = []
+    name = lp.layer.name
+    d = lambda check, msg, sev="error": out.append(
+        Diagnostic(name, check, msg, sev))
+
+    backend = getattr(lp, "backend", "fused")
+    if backend not in df.EXEC_BACKENDS:
+        d("modes/backend", f"backend {backend!r} not in "
+                           f"{df.EXEC_BACKENDS}")
+        return out
+    if backend != "fused":
+        return out          # staged/einsum consume only kernels+geo
+    tn = lp.tuning
+    if tn.flow not in df.FLOWS:
+        d("modes/flow", f"flow {tn.flow!r} not in {df.FLOWS}")
+        return out
+    if lp.hadamard not in df.HADAMARD_MODES:
+        d("modes/hadamard",
+          f"hadamard {lp.hadamard!r} not in {df.HADAMARD_MODES}")
+        return out
+    if lp.input_mode not in df.INPUT_MODES:
+        d("modes/input",
+          f"input_mode {lp.input_mode!r} not in {df.INPUT_MODES}")
+        return out
+
+    k2 = lp.geo.fft_size ** 2
+    s2 = lp.geo.tile ** 2
+    fa = lp.n_active_bins
+    if lp.dfr.shape != (fa, k2) or lp.dvr.shape != (s2, fa):
+        d("operators/shape",
+          f"DFT operators dfr {lp.dfr.shape} / dvr {lp.dvr.shape} "
+          f"do not match (Fa={fa}, S={k2}, S2={s2})")
+    if lp.hadamard != "scheduled" and lp.wr.shape != (
+            fa, lp.layer.c_out, lp.layer.c_in):
+        d("operators/planes",
+          f"kernel planes {lp.wr.shape} != "
+          f"({fa}, {lp.layer.c_out}, {lp.layer.c_in})")
+    bias = np.asarray(lp.bias)
+    if bias.shape != (1, lp.layer.c_out):
+        d("epilogue/bias-shape",
+          f"bias {bias.shape} != (1, {lp.layer.c_out})")
+    elif not np.isfinite(bias).all():
+        d("epilogue/bias-finite", "non-finite bias entries")
+
+    # --- VMEM budget vs the chosen blocks -----------------------------
+    try:
+        cost = _layer_cost(lp, batch)
+        if cost["vmem_bytes"] > vmem_budget:
+            d("vmem-budget",
+              f"working set {cost['vmem_bytes'] / 2**20:.1f} MiB exceeds "
+              f"budget {vmem_budget / 2**20:.1f} MiB at blocks "
+              f"(n={tn.block_n}, m={tn.block_m}, p={tn.block_p}); "
+              f"Mosaic compilation will fail on hardware", "warn")
+    except Exception as e:          # cost model itself rejected the config
+        d("vmem-budget", f"cost model rejected the tuned config: {e}")
+
+    # --- Alg-2 tables -------------------------------------------------
+    if lp.hadamard == "scheduled":
+        if lp.tables is None:
+            d("tables/missing", "hadamard='scheduled' but no tables "
+                                "compiled into the plan")
+        else:
+            out.extend(validate_tables(
+                lp.tables, n_bins=fa, r=df.SCHEDULE_R,
+                c_out=lp.layer.c_out, c_in=lp.layer.c_in,
+                block_m=tn.block_m, layer=name))
+
+    # --- halo geometry: block starts within the raw image -------------
+    t_total = lp.layer.tiles(lp.geo.fft_size) * batch
+    if lp.input_mode == "halo":
+        try:
+            hg = spec.halo_block_geometry(lp.geo, tn.block_p)
+            sh, sw = spec.halo_block_starts(lp.geo, hg)
+            if (sh.size and (sh.min() < 0
+                             or sh.max() + hg.rh > lp.geo.h_in)) or \
+               (sw.size and (sw.min() < 0
+                             or sw.max() + hg.rw > lp.geo.w_in)):
+                d("halo/starts",
+                  f"halo block starts leave the raw image: rows "
+                  f"{sh.min()}..{sh.max()}+{hg.rh} vs H={lp.geo.h_in}, "
+                  f"cols {sw.min()}..{sw.max()}+{hg.rw} vs "
+                  f"W={lp.geo.w_in}")
+            gr, gc = spec.halo_gather_matrices(lp.geo, hg)
+            if (gr.sum(axis=2) > 1).any() or (gc.sum(axis=2) > 1).any():
+                d("halo/gather-onehot",
+                  "gather selector has a row with >1 non-zero — the "
+                  "window 'gather' would sum raw pixels")
+        except Exception as e:
+            d("halo/geometry", f"halo geometry rejected block_p="
+                               f"{tn.block_p}: {e}")
+
+    # --- psum-revisit hardware safety ---------------------------------
+    if hw_safe:
+        if lp.input_mode == "halo":
+            hg = spec.halo_block_geometry(lp.geo, tn.block_p)
+            gp = batch * hg.n_blocks
+        else:
+            gp = max(1, -(-t_total // tn.block_p))
+        gn = max(1, -(-lp.layer.c_out // tn.block_n))
+        if tn.flow == "weight_stationary" and gp > 1:
+            d("hw-safe/psum-revisit",
+              f"weight_stationary with {gp} p blocks: the psum revisit "
+              f"across the m axis is non-consecutive on hardware "
+              f"(needs block_p >= {t_total})")
+        if tn.flow == "input_stationary" and gn > 1:
+            d("hw-safe/psum-revisit",
+              f"input_stationary with {gn} n blocks: needs block_n >= "
+              f"{lp.layer.c_out}")
+
+    if lp.pe_utilization is not None and not (
+            0.0 < lp.pe_utilization <= 1.0):
+        d("schedule/utilization",
+          f"Eq-14 utilization {lp.pe_utilization} outside (0, 1]")
+    return out
+
+
+def validate_plan(plan, *, vmem_budget: int = df.TPU_VMEM_BYTES,
+                  hw_safe: bool = True, raise_on_error: bool = True
+                  ) -> list[Diagnostic]:
+    """Validate every layer of a ``core.plan.NetworkPlan``.
+
+    Returns all diagnostics (errors and warnings).  When
+    ``raise_on_error`` (default), raises ``PlanValidationError``
+    aggregating every *error*-severity diagnostic — at build time, not
+    at kernel launch.
+    """
+    diags: list[Diagnostic] = []
+    for lp in plan.layers:
+        diags.extend(validate_layer_plan(
+            lp, batch=plan.batch, vmem_budget=vmem_budget,
+            hw_safe=hw_safe))
+    errors = [d for d in diags if d.severity == "error"]
+    if errors and raise_on_error:
+        raise PlanValidationError(
+            f"plan {plan.name!r} failed validation "
+            f"({len(errors)} error(s))",
+            layer=errors[0].layer, site="validate_plan",
+            diagnostics=errors)
+    return diags
+
+
+# ---------------------------------------------------------------------------
+# Per-layer execution with a per-layer backend (the bottom ladder axis)
+# ---------------------------------------------------------------------------
+
+def _spatial_epilogue(y, lp):
+    if lp.epilogue.bias:
+        y = y + lp.bias[0][None, :, None, None]
+    if lp.epilogue.relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def execute_planned_layer(x, lp, *, interpret: bool | None = None):
+    """Run one conv layer honoring ``LayerPlan.backend``.
+
+    'fused' dispatches to ``kernels.fused_spectral_conv.
+    execute_layer_plan`` (the plan's tuned variant); 'staged' runs the
+    three-launch Pallas pipeline; 'einsum' the pure-jnp oracle — the
+    ladder's terminal rung, which always executes.  Pooling stays with
+    the caller.
+    """
+    backend = getattr(lp, "backend", "fused")
+    if backend == "einsum":
+        y = spec.spectral_conv2d_pretransformed(x, lp.kernels, lp.geo)
+        return _spatial_epilogue(y, lp)
+    if backend == "staged":
+        fault_check("lowering", layer=lp.layer.name, backend="staged")
+        from repro.kernels import ops
+        y = ops.spectral_conv2d_pallas(x, lp.kernels.values, lp.geo,
+                                       interpret=interpret)
+        return _spatial_epilogue(y, lp)
+    from repro.kernels.fused_spectral_conv import execute_layer_plan
+    return execute_layer_plan(x, lp, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# (2) Tiered graceful degradation
+# ---------------------------------------------------------------------------
+
+# The explicit demotion ladder, cheapest rung first.  Each entry is
+# (axis, from, to); 'backend' rungs change which execution path runs
+# the layer, the others stay on the fused kernel with a safer variant.
+DEMOTION_LADDER = (
+    ("input_mode", "halo", "windowed"),
+    ("hadamard", "scheduled", "dense"),
+    ("backend", "fused", "staged"),
+    ("backend", "staged", "einsum"),
+)
+
+
+def _summarize(err: BaseException) -> str:
+    first = str(err).strip().splitlines()
+    return f"{type(err).__name__}: {first[0] if first else ''}"
+
+
+def demote_layer(lp, *, batch: int = 1, reason: BaseException | str = ""):
+    """Demote one layer ONE rung down ``DEMOTION_LADDER``.
+
+    Returns the demoted ``LayerPlan`` (tuning re-priced through the
+    cost model so autotune's recorded numbers stay honest, demotion
+    recorded in provenance), or None when the layer already sits on the
+    terminal rung (einsum).
+    """
+    import dataclasses as dc
+
+    note = _summarize(reason) if isinstance(reason, BaseException) \
+        else str(reason)
+    backend = getattr(lp, "backend", "fused")
+
+    if backend == "fused" and lp.input_mode == "halo":
+        new = dc.replace(lp, input_mode="windowed")
+        rung = "input_mode halo->windowed"
+    elif backend == "fused" and lp.hadamard == "scheduled":
+        plane = "bin" if lp.active is not None else "dense"
+        new = dc.replace(lp, hadamard=plane, tables=None)
+        rung = f"hadamard scheduled->{plane}"
+    elif backend == "fused":
+        new = dc.replace(lp, backend="staged")
+        rung = "backend fused->staged"
+    elif backend == "staged":
+        new = dc.replace(lp, backend="einsum")
+        rung = "backend staged->einsum"
+    else:
+        return None
+
+    from repro.core.autotune import predict_seconds
+
+    tn = new.tuning
+    if getattr(new, "backend", "fused") == "fused":
+        cost = _layer_cost(new, batch)
+        tn = dc.replace(tn, hbm_bytes=cost["hbm_bytes"],
+                        vmem_bytes=cost["vmem_bytes"],
+                        predicted_s=predict_seconds(cost),
+                        hadamard=new.hadamard,
+                        input_mode=new.input_mode)
+    else:
+        cost = df.tpu_flow_cost(new.layer, new.geo.fft_size, new.alpha,
+                                tn.block_n, tn.block_p, tn.block_m,
+                                "output_stationary", batch=batch)
+        tn = dc.replace(tn, hbm_bytes=cost["hbm_bytes"],
+                        vmem_bytes=cost["vmem_bytes"],
+                        predicted_s=predict_seconds(cost))
+    prov = getattr(lp, "provenance", ()) + (
+        f"{rung} ({note})" if note else rung,)
+    return dc.replace(new, tuning=tn, provenance=prov)
+
+
+def probe_layer_plan(lp, *, batch: int = 1,
+                     interpret: bool | None = None
+                     ) -> BaseException | None:
+    """Capability probe: compile + run one layer forward on zeros.
+
+    Returns None when the layer's chosen variant executes, else the
+    exception it died with (for the hardening loop to attach to the
+    demotion provenance).  In interpret mode this exercises the full
+    trace/lower/execute path of the variant; on real TPU it is where a
+    Mosaic lowering failure or VMEM overflow surfaces — once, at plan
+    time, instead of mid-inference.
+    """
+    x = jnp.zeros((batch, lp.layer.c_in, lp.layer.h_in, lp.layer.w_in),
+                  jnp.float32)
+    try:
+        y = execute_planned_layer(x, lp, interpret=interpret)
+        jnp.asarray(y).block_until_ready()
+        return None
+    except BaseException as e:           # noqa: BLE001 — probe boundary
+        if isinstance(e, (KeyboardInterrupt, SystemExit)):
+            raise
+        return e
+
+
+def harden_network_plan(plan, *, vmem_budget: int = df.TPU_VMEM_BYTES,
+                        hw_safe: bool = True,
+                        interpret: bool | None = None,
+                        probe: bool = True):
+    """Walk every layer down the demotion ladder until it validates AND
+    its capability probe passes.
+
+    A healthy plan comes back unchanged (same layer objects).  A layer
+    whose chosen variant fails validation (error severity or VMEM
+    over-budget) or fails to compile/execute is demoted one rung at a
+    time — ``halo -> windowed``, ``scheduled -> dense``, ``fused ->
+    staged -> einsum`` — re-probing after each rung.  The terminal
+    einsum rung always executes; if even it fails, the original
+    exception is re-raised wrapped in ``KernelLoweringError``.
+
+    Returns a new ``NetworkPlan``; inspect ``health_report()`` (or each
+    layer's ``provenance``) for what was demoted and why.
+    """
+    import dataclasses as dc
+
+    new_layers = []
+    for lp in plan.layers:
+        for _ in range(len(DEMOTION_LADDER) + 1):
+            issue: BaseException | None = None
+            if getattr(lp, "backend", "fused") == "fused":
+                diags = validate_layer_plan(
+                    lp, batch=plan.batch, vmem_budget=vmem_budget,
+                    hw_safe=hw_safe)
+                bad = [d for d in diags
+                       if d.severity == "error" or d.check == "vmem-budget"]
+                if bad:
+                    issue = PlanValidationError(
+                        f"layer {lp.layer.name} failed validation",
+                        layer=lp.layer.name, site="harden",
+                        diagnostics=bad)
+            if issue is None and probe:
+                issue = probe_layer_plan(lp, batch=plan.batch,
+                                         interpret=interpret)
+            if issue is None:
+                break
+            demoted = demote_layer(lp, batch=plan.batch, reason=issue)
+            if demoted is None:
+                raise KernelLoweringError(
+                    f"layer {lp.layer.name} failed on the terminal "
+                    f"einsum rung: {_summarize(issue)}",
+                    layer=lp.layer.name, site="harden") from issue
+            lp = demoted
+        new_layers.append(lp)
+    return dc.replace(plan, layers=tuple(new_layers))
+
+
+# ---------------------------------------------------------------------------
+# (3) Runtime numeric guards
+# ---------------------------------------------------------------------------
+
+GUARD_POLICIES = ("raise", "demote", "warn")
+
+
+@dataclasses.dataclass
+class NumericGuards:
+    """Opt-in per-layer runtime checks for ``forward_spectral``.
+
+    nan_scan:  scan every layer output for NaN/Inf.
+    parity:    sampled self-check against the einsum oracle — recompute
+               ``parity_channels`` evenly-spaced output channels on the
+               first ``parity_batch`` images through
+               ``spectral_conv2d_pretransformed`` and compare to
+               ``parity_tol``.  Catches corrupted kernel operands /
+               tables that are numerically valid but *wrong*.
+    policy:    what a tripped guard does —
+               'raise'  raise ``NumericGuardError`` (default);
+               'demote' recompute the offending layer through the
+                        einsum oracle and continue (the run's answer
+                        stays parity-bounded);
+               'warn'   emit a warning and keep the suspect output.
+    events:    every trip is appended here as a dict, whatever the
+               policy — the run's numeric-health audit trail.
+    """
+
+    nan_scan: bool = True
+    parity: bool = False
+    parity_tol: float = 1e-4
+    parity_channels: int = 4
+    parity_batch: int = 1
+    policy: str = "raise"
+    events: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.policy not in GUARD_POLICIES:
+            raise ValueError(f"policy must be one of {GUARD_POLICIES}, "
+                             f"got {self.policy!r}")
+
+
+def _oracle_layer(x, lp):
+    y = spec.spectral_conv2d_pretransformed(x, lp.kernels, lp.geo)
+    return _spatial_epilogue(y, lp)
+
+
+def _sampled_parity_err(x, y, lp, guards: NumericGuards) -> float:
+    sk = lp.kernels
+    n = sk.n_out
+    sel = np.unique(np.linspace(
+        0, n - 1, max(1, min(guards.parity_channels, n))).astype(int))
+    sub = sp.SparseSpectralKernels(
+        values=sk.values[sel], mask=sk.mask[sel],
+        indices=sk.indices[sel], alpha=sk.alpha,
+        active_bins=sk.active_bins)
+    nb = max(1, min(guards.parity_batch, x.shape[0]))
+    ref = spec.spectral_conv2d_pretransformed(x[:nb], sub, lp.geo)
+    if lp.epilogue.bias:
+        ref = ref + lp.bias[0][sel][None, :, None, None]
+    if lp.epilogue.relu:
+        ref = jnp.maximum(ref, 0.0)
+    got = y[:nb, np.asarray(sel)]
+    return float(jnp.abs(got - ref).max())
+
+
+def apply_guards(x, y, lp, guards: NumericGuards):
+    """Run the enabled guards on one layer's output.
+
+    ``x`` is the layer input (needed for the parity oracle and the
+    demote fallback), ``y`` its computed output.  Returns the output to
+    carry forward — ``y`` itself, or the oracle recompute under the
+    'demote' policy.
+    """
+    name = lp.layer.name
+
+    def trip(check: str, message: str):
+        guards.events.append({"layer": name, "check": check,
+                              "message": message,
+                              "policy": guards.policy})
+        if guards.policy == "raise":
+            raise NumericGuardError(message, layer=name, site=check)
+        if guards.policy == "warn":
+            warnings.warn(f"[numeric-guard] {message}", RuntimeWarning,
+                          stacklevel=3)
+            return y
+        return _oracle_layer(x, lp)      # demote: oracle recompute
+
+    if guards.nan_scan and not bool(jnp.isfinite(y).all()):
+        return trip("nan_scan",
+                    f"non-finite values in {name} output "
+                    f"(backend={getattr(lp, 'backend', 'fused')}, "
+                    f"hadamard={lp.hadamard}, "
+                    f"input_mode={lp.input_mode})")
+    if guards.parity and getattr(lp, "backend", "fused") != "einsum":
+        err = _sampled_parity_err(x, y, lp, guards)
+        if not err <= guards.parity_tol:
+            return trip(
+                "parity",
+                f"sampled parity vs einsum oracle failed on {name}: "
+                f"max abs err {err:.3e} > tol {guards.parity_tol:.1e} "
+                f"({guards.parity_channels} channels, "
+                f"{guards.parity_batch} image(s))")
+    return y

@@ -30,6 +30,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import resilience as res
+
 
 @dataclasses.dataclass
 class Schedule:
@@ -209,15 +211,26 @@ SCHEDULERS = {
 
 def verify_schedule(sched: Schedule, index_matrix: np.ndarray,
                     k2: int) -> None:
-    """Assert C1, C2 and exact cover (every non-zero served exactly once)."""
+    """Check C1, C2 and exact cover (every non-zero served exactly once);
+    raises ``resilience.PlanValidationError`` on violation."""
     seen = np.zeros((sched.n_kernels, k2), dtype=int)
-    for ks, fs in sched.cycles:
-        assert len(np.unique(ks)) == len(ks), "C1: duplicate kernel in cycle"
-        assert len(np.unique(fs)) <= sched.r, "C2: > r distinct indices"
+    for ti, (ks, fs) in enumerate(sched.cycles):
+        if len(np.unique(ks)) != len(ks):
+            raise res.PlanValidationError(
+                f"C1 violated: duplicate kernel in cycle {ti}",
+                site="verify_schedule")
+        if len(np.unique(fs)) > sched.r:
+            raise res.PlanValidationError(
+                f"C2 violated: cycle {ti} touches {len(np.unique(fs))} "
+                f"distinct indices > r={sched.r} replicas",
+                site="verify_schedule")
         seen[ks, fs] += 1
     want = _edges_from_matrix(index_matrix, k2).astype(int)
     if not np.array_equal(seen, want):
-        raise AssertionError("schedule is not an exact cover of the kernels")
+        raise res.PlanValidationError(
+            "schedule is not an exact cover of the kernels "
+            "(some non-zero served zero or multiple times)",
+            site="verify_schedule")
 
 
 def simulate_layer_utilization(indices: np.ndarray, k2: int, r: int,
@@ -452,6 +465,10 @@ def compile_layer_tables(indices: np.ndarray, values: np.ndarray,
             vr[g, m, :t, :ng] = v.real
             vi[g, m, :t, :ng] = v.imag
     mu = total_ops / max(1, total_slots)
+    # Deterministic corruption sites for the fault-injection harness
+    # (no-ops unless repro.testing.faults installed a matching fault).
+    idx = res.fault_corrupt("oob_index", idx)
+    vr = res.fault_corrupt("corrupt_value", vr)
     return LayerTables(idx, sel, vr, vi, total_cycles, mu)
 
 

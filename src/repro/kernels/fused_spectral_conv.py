@@ -131,6 +131,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
+from repro.core import resilience as res
 from repro.core import sparse as sp
 from repro.core.dataflow import FLOWS, INPUT_MODES
 from repro.core.spectral import (HaloGeometry, SpectralGeometry,
@@ -573,19 +574,21 @@ def _sched_kernel_scratch(flow: str, gm: int, relu: bool, fa: int,
 def _check_hw_safe(flow: str, gn: int, gp: int, interpret: bool) -> None:
     """Pallas TPU keeps an output window only across CONSECUTIVE grid
     steps; the RMW flows accumulate into y across the m axis, so on
-    hardware the revisit must be consecutive (see module docstring)."""
+    hardware the revisit must be consecutive (see module docstring).
+    Raises ``resilience.KernelLoweringError`` (a ``NotImplementedError``
+    subclass) so the degradation ladder can catch it structurally."""
     if interpret:
         return
     if flow == "weight_stationary" and gp > 1:
-        raise NotImplementedError(
+        raise res.KernelLoweringError(
             "weight_stationary on TPU hardware needs block_p >= P "
             f"(got {gp} p blocks); use output_stationary or a "
-            "hardware-safe autotune plan")
+            "hardware-safe autotune plan", site="hw-safe")
     if flow == "input_stationary" and gn > 1:
-        raise NotImplementedError(
+        raise res.KernelLoweringError(
             "input_stationary on TPU hardware needs block_n >= N "
             f"(got {gn} n blocks); use output_stationary or a "
-            "hardware-safe autotune plan")
+            "hardware-safe autotune plan", site="hw-safe")
 
 
 @functools.partial(
@@ -1193,19 +1196,30 @@ def execute_layer_plan(x: Array, lp, *, interpret: bool | None = None
         interpret = jax.default_backend() != "tpu"
     tn = lp.tuning
     halo = getattr(lp, "input_mode", "windowed") == "halo"
+    # Fault-injection sites (no-ops without an installed fault).  They
+    # live HERE — outside the jitted pipelines — so a warm jit cache can
+    # never bypass them; this is also where a real Mosaic lowering
+    # failure or VMEM RESOURCE_EXHAUSTED would surface on hardware.
+    ctx = dict(layer=lp.layer.name, backend="fused", flow=tn.flow,
+               hadamard=getattr(lp, "hadamard", None),
+               input_mode=getattr(lp, "input_mode", "windowed"))
+    res.fault_check("lowering", **ctx)
+    res.fault_check("vmem_overflow", **ctx)
     bias = lp.bias if lp.epilogue.bias else jnp.zeros_like(lp.bias)
     if getattr(lp, "hadamard", None) == "scheduled":
         tb = lp.tables
         conv = _fused_conv_scheduled_halo if halo else _fused_conv_scheduled
-        return conv(
+        y = conv(
             x, tb.idx, tb.sel, tb.vr, tb.vi,
             lp.dfr, lp.dfi, lp.dvr, lp.dvi, bias, geo=lp.geo,
             n_out=lp.layer.c_out, flow=tn.flow, block_m=tn.block_m,
             block_p=tn.block_p, relu=lp.epilogue.relu,
             interpret=interpret)
+        return res.fault_corrupt("nan_activations", y, **ctx)
     conv = _fused_conv_halo if halo else _fused_conv
-    return conv(x, lp.wr, lp.wi, lp.dfr, lp.dfi, lp.dvr, lp.dvi,
-                bias, geo=lp.geo, flow=tn.flow,
-                block_n=tn.block_n, block_m=tn.block_m,
-                block_p=tn.block_p, relu=lp.epilogue.relu,
-                interpret=interpret)
+    y = conv(x, lp.wr, lp.wi, lp.dfr, lp.dfi, lp.dvr, lp.dvi,
+             bias, geo=lp.geo, flow=tn.flow,
+             block_n=tn.block_n, block_m=tn.block_m,
+             block_p=tn.block_p, relu=lp.epilogue.relu,
+             interpret=interpret)
+    return res.fault_corrupt("nan_activations", y, **ctx)

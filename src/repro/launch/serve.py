@@ -7,13 +7,20 @@ A miniature production server loop:
   * finished requests retire and free their slots for queued requests
     (continuous batching);
   * per-tick latency statistics are reported (the paper's metric of
-    merit is single-stream latency — Table 3).
+    merit is single-stream latency — Table 3);
+  * per-request failures are ISOLATED: a malformed request (empty
+    prompt, out-of-vocab tokens, prompt longer than the cache) or a
+    prefill/decode exception retires that request with a structured
+    ``Request.error`` record and a log line — it never kills the serve
+    loop or the other requests in flight — and an optional per-request
+    timeout (``request_timeout_s``) retires stragglers the same way.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import logging
 import time
 
 import jax
@@ -23,6 +30,8 @@ import numpy as np
 from repro import configs
 from repro.models import api
 
+_LOG = logging.getLogger("repro.serve")
+
 
 @dataclasses.dataclass
 class Request:
@@ -31,6 +40,14 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # failure response: {'code': ..., 'message': ...} when the request
+    # was retired unsuccessfully, None on success/in-flight
+    error: dict | None = None
+    admitted_at: float | None = None   # wall time of slot admission
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -41,7 +58,8 @@ class Server:
     """Fixed-slot continuous-batching decoder."""
 
     def __init__(self, arch: str, slots: int = 4, max_len: int = 256,
-                 config_set: str = "smoke", seed: int = 0):
+                 config_set: str = "smoke", seed: int = 0,
+                 request_timeout_s: float | None = None):
         self.cfg = (configs.get_smoke_config(arch)
                     if config_set == "smoke" else configs.get_config(arch))
         # continuous batching with per-slot positions needs position-
@@ -51,6 +69,10 @@ class Server:
             "continuous-batching server supports KV-cache families"
         self.slots = slots
         self.max_len = max_len
+        # wall-clock budget per admitted request (None = unlimited);
+        # exceeded -> the request retires with a 'timeout' failure
+        # response instead of occupying its slot forever
+        self.request_timeout_s = request_timeout_s
         self.params = api.init(jax.random.PRNGKey(seed), self.cfg)
         self.cache = api.init_cache(self.cfg, slots, max_len)
         self.active: list[Request | None] = [None] * slots
@@ -63,27 +85,82 @@ class Server:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def _fail(self, req: Request, code: str, message: str,
+              slot: int | None = None) -> None:
+        """Retire one request with a structured failure response; the
+        serve loop and the other in-flight requests are untouched."""
+        req.error = {"code": code, "message": message}
+        req.done = True
+        if slot is not None and self.active[slot] is req:
+            self.active[slot] = None
+        _LOG.error("[serve] request %s failed code=%s: %s",
+                   req.rid, code, message)
+
+    def _validate(self, req: Request) -> None:
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(f"prompt must be a non-empty 1-D token "
+                             f"array, got shape {prompt.shape}")
+        if req.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {req.max_new}")
+        if prompt.size >= self.max_len:
+            raise ValueError(f"prompt length {prompt.size} >= server "
+                             f"max_len {self.max_len}")
+        lo, hi = int(prompt.min()), int(prompt.max())
+        if lo < 0 or hi >= self.cfg.vocab:
+            # the embedding lookup would silently clamp these — a
+            # silent wrong answer, the one failure mode never allowed
+            raise ValueError(f"token ids outside [0, {self.cfg.vocab}): "
+                             f"min={lo} max={hi}")
+
     def _admit(self) -> None:
         """Fill free slots; prefill runs as decode steps on the new slot
         (other slots re-write their current position, which the next real
-        tick overwrites before it is ever read)."""
+        tick overwrites before it is ever read).  A request that fails
+        validation or prefill retires with a failure response and its
+        slot is offered to the next queued request."""
         for i in range(self.slots):
-            if self.active[i] is None and self.queue:
+            while self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
-                self.active[i] = req
-                # positions 0..L-2; the final prompt token is fed by the
-                # next tick so its logits become the first sampled token
-                for t, tok in enumerate(req.prompt[:-1]):
-                    token = jnp.zeros((self.slots, 1), jnp.int32
-                                      ).at[i, 0].set(int(tok))
-                    pos = jnp.asarray(self.pos).at[i].set(t)
-                    _, self.cache = self._decode(
-                        self.params, self.cache, token, pos)
-                self.pos[i] = len(req.prompt) - 1
+                try:
+                    self._validate(req)
+                    self.active[i] = req
+                    req.admitted_at = time.time()
+                    # positions 0..L-2; the final prompt token is fed by
+                    # the next tick so its logits become the first
+                    # sampled token
+                    for t, tok in enumerate(req.prompt[:-1]):
+                        token = jnp.zeros((self.slots, 1), jnp.int32
+                                          ).at[i, 0].set(int(tok))
+                        pos = jnp.asarray(self.pos).at[i].set(t)
+                        _, self.cache = self._decode(
+                            self.params, self.cache, token, pos)
+                    self.pos[i] = len(req.prompt) - 1
+                except Exception as e:  # noqa: BLE001 — isolation edge
+                    # slot state is safe to reuse: the next occupant
+                    # overwrites its positions before they are read
+                    self._fail(req, "bad_request"
+                               if isinstance(e, ValueError)
+                               else "prefill_error",
+                               f"{type(e).__name__}: {e}", slot=i)
+
+    def _expire(self) -> None:
+        if self.request_timeout_s is None:
+            return
+        now = time.time()
+        for i in range(self.slots):
+            req = self.active[i]
+            if req is not None and req.admitted_at is not None \
+                    and now - req.admitted_at > self.request_timeout_s:
+                self._fail(req, "timeout",
+                           f"exceeded request_timeout_s="
+                           f"{self.request_timeout_s} after "
+                           f"{len(req.out)} tokens", slot=i)
 
     def tick(self) -> int:
         """One decode step across all active slots; returns #active."""
         self._admit()
+        self._expire()
         act = [i for i in range(self.slots) if self.active[i] is not None]
         if not act:
             return 0
@@ -92,10 +169,18 @@ class Server:
             req = self.active[i]
             tokens[i, 0] = (req.prompt[-1] if not req.out else req.out[-1])
         t0 = time.time()
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens),
-                                          jnp.asarray(self.pos))
-        nxt = np.asarray(greedy(logits))
+        try:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens),
+                                              jnp.asarray(self.pos))
+            nxt = np.asarray(greedy(logits))
+        except Exception as e:  # noqa: BLE001 — isolation edge
+            # a decode-step failure cannot be attributed to one request;
+            # fail the batch in flight, keep the loop (and queue) alive
+            for i in act:
+                self._fail(self.active[i], "decode_error",
+                           f"{type(e).__name__}: {e}", slot=i)
+            return 0
         self.tick_times.append(time.time() - t0)
         for i in act:
             req = self.active[i]
@@ -109,12 +194,28 @@ class Server:
 
     def run_until_drained(self, max_ticks: int = 10_000) -> dict:
         ticks = 0
+        seen: dict[int, Request] = {}
+
+        def _track(req: Request | None):
+            if req is not None:
+                seen.setdefault(id(req), req)
+
+        for r in list(self.queue):
+            _track(r)
         while (any(self.active) or self.queue) and ticks < max_ticks:
+            for r in list(self.queue):
+                _track(r)
+            for r in self.active:
+                _track(r)
             self.tick()
             ticks += 1
+        completed = sum(r.done and not r.failed for r in seen.values())
+        failed = sum(r.failed for r in seen.values())
         times = np.asarray(self.tick_times[1:] or [0.0])
         return {
             "ticks": ticks,
+            "completed": completed,
+            "failed": failed,
             "mean_tick_ms": float(times.mean() * 1e3),
             "p95_tick_ms": float(np.percentile(times, 95) * 1e3),
         }

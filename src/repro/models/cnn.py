@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dataflow as df
+from repro.core import resilience as res
 from repro.core import sparse as sp
 from repro.core import spectral as spec
 from repro.models import layers as L
@@ -104,7 +105,8 @@ def _epilogue_spatial(x: Array, lp) -> Array:
 
 def forward_spectral(params: dict, plan, x: Array, *,
                      backend: str = "einsum",
-                     interpret: bool | None = None) -> Array:
+                     interpret: bool | None = None,
+                     guards: res.NumericGuards | None = None) -> Array:
     """Inference by executing a precompiled ``core.plan.NetworkPlan``.
 
     Args:
@@ -130,6 +132,18 @@ def forward_spectral(params: dict, plan, x: Array, *,
                         granularly (``execute_layer_plan`` dispatches).
       interpret: force Pallas interpret mode (None = auto: interpret
         everywhere except real TPU).
+      guards: optional ``core.resilience.NumericGuards`` enabling the
+        opt-in per-layer runtime checks (NaN/Inf scan, sampled parity
+        vs the einsum oracle) on the Pallas backends, with policy
+        'raise' | 'demote' | 'warn'.  Every trip is appended to
+        ``guards.events``.
+
+    Under the 'pallas_fused' backend each layer runs the execution path
+    its plan records (``LayerPlan.backend`` — 'fused' as built, or
+    'staged'/'einsum' after ``resilience.harden_network_plan`` demoted
+    it), and any unexpected per-layer failure is re-raised as a
+    structured ``resilience.KernelLoweringError`` naming the layer and
+    its modes — never a raw Pallas traceback.
 
     Returns [B, n_classes] logits.  Everything layer-specific was
     derived at plan-build time; nothing (geometry, schedules, pruning,
@@ -165,12 +179,27 @@ def forward_spectral(params: dict, plan, x: Array, *,
             x = _epilogue_spatial(x, lp)
         elif backend == "pallas_staged":
             from repro.kernels import ops
-            x = ops.spectral_conv2d_pallas(x, lp.kernels.values, lp.geo,
+            y = ops.spectral_conv2d_pallas(x, lp.kernels.values, lp.geo,
                                            interpret=interpret)
-            x = _epilogue_spatial(x, lp)
+            y = _epilogue_spatial(y, lp)
+            if guards is not None:
+                y = res.apply_guards(x, y, lp, guards)
+            x = y
         else:
-            from repro.kernels.fused_spectral_conv import execute_layer_plan
-            x = execute_layer_plan(x, lp, interpret=interpret)
+            try:
+                y = res.execute_planned_layer(x, lp, interpret=interpret)
+            except res.ResilienceError:
+                raise
+            except Exception as e:
+                raise res.KernelLoweringError(
+                    f"layer {lp.layer.name} failed under backend="
+                    f"{getattr(lp, 'backend', 'fused')!r} (flow="
+                    f"{lp.tuning.flow}, hadamard={lp.hadamard}, "
+                    f"input_mode={lp.input_mode}): {e}",
+                    layer=lp.layer.name, site="forward") from e
+            if guards is not None:
+                y = res.apply_guards(x, y, lp, guards)
+            x = y
         if lp.epilogue.pool:
             x = _pool(x)
     x = x.reshape(x.shape[0], -1)

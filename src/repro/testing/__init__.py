@@ -1,0 +1,1 @@
+"""Test-support tooling shipped with the library (fault injection)."""

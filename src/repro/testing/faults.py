@@ -1,0 +1,161 @@
+"""Deterministic fault injection for the resilience layer.
+
+The degradation ladder (``core.resilience``) exists for failures we
+cannot reproduce off-hardware: Mosaic lowering errors, VMEM
+RESOURCE_EXHAUSTED, silently corrupted Alg-2 tables.  This module makes
+those failures *reproducible*: ``inject(site, ...)`` installs a fault at
+one of the named sites production code consults
+(``resilience.fault_check`` / ``fault_corrupt``), so tests drive every
+edge of the ladder with plain CPU runs.
+
+Sites (``FAULT_SITES``):
+
+  'lowering'        raise at kernel dispatch — simulates a Mosaic
+                    lowering/compile failure of the chosen variant.
+                    Match kwargs (e.g. ``input_mode='halo'``,
+                    ``hadamard='scheduled'``, ``backend='fused'``)
+                    restrict which variants fail, selecting WHICH rung
+                    of the ladder the probe exercises.
+  'vmem_overflow'   raise at kernel dispatch with a RESOURCE_EXHAUSTED-
+                    style RuntimeError — simulates the VMEM OOM real
+                    hardware produces for over-budget blocks.
+  'oob_index'       corrupt the Alg-2 INDEX table during
+                    ``scheduler.compile_layer_tables`` (an entry pushed
+                    far out of the active-bin range) — must be caught
+                    by plan validation at BUILD time.
+  'corrupt_value'   corrupt the Alg-2 VALUE plane (finite but wrong) —
+                    invisible to static validation, caught by the
+                    runtime parity guard.
+  'nan_activations' corrupt a fused layer's output with a NaN — caught
+                    by the runtime NaN/Inf scan.
+
+Usage::
+
+    from repro.testing import faults
+
+    with faults.inject("lowering", input_mode="halo") as fault:
+        plan = resilience.harden_network_plan(plan)   # halo -> windowed
+    assert fault.fires > 0
+
+Faults are matched on the call-site context and removed when the
+context manager exits; nesting composes (all active faults are
+consulted).  Everything is deterministic — no randomness, no wall
+clock.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Iterator
+
+import numpy as np
+
+from repro.core import resilience as res
+
+FAULT_SITES = res.FAULT_SITES
+
+# A value far outside any active-bin range (K^2 <= 64 in this repo).
+OOB_INDEX = 1_000_000
+# Finite perturbation of one VALUE entry: large enough that the sampled
+# parity guard (default tol 1e-4) trips on channel 0, small enough to
+# stay finite through the whole net.
+VALUE_DELTA = 32.0
+
+
+def _default_exc(site: str, match: dict) -> Callable[[], Exception]:
+    """Raw, un-taxonomized errors — like the real failures they mimic.
+    The resilience layer must translate them into structured ones."""
+    if site == "vmem_overflow":
+        return lambda: RuntimeError(
+            "RESOURCE_EXHAUSTED: Ran out of memory in memory space "
+            f"vmem (injected fault, match={match})")
+    return lambda: RuntimeError(
+        f"Mosaic lowering failed (injected fault at {site!r}, "
+        f"match={match})")
+
+
+def _corrupt_oob_index(idx):
+    out = np.array(idx, copy=True)
+    out.flat[0] = OOB_INDEX
+    return out
+
+
+def _corrupt_value(vr):
+    out = np.array(vr, copy=True)
+    out.flat[0] += VALUE_DELTA
+    return out
+
+
+def _corrupt_nan(y):
+    import jax.numpy as jnp
+    return y.at[(0,) * y.ndim].set(jnp.nan)
+
+
+_DEFAULT_CORRUPT = {
+    "oob_index": _corrupt_oob_index,
+    "corrupt_value": _corrupt_value,
+    "nan_activations": _corrupt_nan,
+}
+
+
+@contextlib.contextmanager
+def inject(site: str, *, exc: Callable[[], Exception] | None = None,
+           corrupt: Callable | None = None,
+           **match) -> Iterator[res.InjectedFault]:
+    """Install one deterministic fault at ``site`` for the duration of
+    the ``with`` block.
+
+    ``match`` kwargs restrict the fault to call sites whose context
+    carries every key with an equal value (see module doc).  ``exc``
+    overrides the raised exception factory for raise-sites;
+    ``corrupt`` overrides the value transform for corruption-sites.
+    Yields the ``InjectedFault`` so tests can assert ``fault.fires``.
+    """
+    if site in ("lowering", "vmem_overflow"):
+        fault = res.InjectedFault(site=site, match=dict(match),
+                                  exc=exc or _default_exc(site, match))
+    elif site in _DEFAULT_CORRUPT:
+        fault = res.InjectedFault(site=site, match=dict(match),
+                                  corrupt=corrupt or _DEFAULT_CORRUPT[site])
+    else:
+        raise ValueError(f"unknown fault site {site!r}; must be one of "
+                         f"{FAULT_SITES}")
+    res.install_fault(fault)
+    try:
+        yield fault
+    finally:
+        res.remove_fault(fault)
+
+
+def corrupt_plan_tables(plan, *, layer: str | None = None,
+                        kind: str = "oob_index"):
+    """Return a copy of ``plan`` with one scheduled layer's Alg-2 tables
+    mutated (``kind`` in 'oob_index' | 'corrupt_value') — for direct
+    tests that a corrupted built plan is rejected by ``validate_plan``.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.plan import PlanTables
+
+    mutate = _DEFAULT_CORRUPT[kind]
+    new_layers = []
+    done = False
+    for lp in plan.layers:
+        eligible = (lp.tables is not None
+                    and (layer is None or lp.layer.name == layer))
+        if eligible and not done:
+            tb = lp.tables
+            if kind == "oob_index":
+                tb = PlanTables(jnp.asarray(mutate(tb.idx)), tb.sel,
+                                tb.vr, tb.vi)
+            else:
+                tb = PlanTables(tb.idx, tb.sel,
+                                jnp.asarray(mutate(tb.vr)), tb.vi)
+            lp = dataclasses.replace(lp, tables=tb)
+            done = True
+        new_layers.append(lp)
+    if not done:
+        raise ValueError(f"no scheduled layer matching {layer!r} in plan")
+    return dataclasses.replace(plan, layers=tuple(new_layers))

@@ -1,0 +1,243 @@
+"""Fault-injection ladder walk: every demotion rung under injected faults.
+
+Acceptance (ISSUE 6): under any single injected fault,
+``forward_spectral`` either returns a parity-bounded result (<= 1e-5 vs
+the einsum oracle) through a demoted plan, or raises a structured
+``ResilienceError`` naming the layer and site — never a silent wrong
+answer, never a raw Pallas traceback.
+
+Each test drives one edge:
+
+  lowering @ input_mode=halo   -> rung 1  (halo -> windowed)
+  lowering @ hadamard=scheduled-> rung 2  (scheduled -> dense plane)
+  lowering @ backend=fused     -> rung 3  (fused -> staged)
+  lowering unmatched (all)     -> rung 4  (terminal einsum)
+  vmem_overflow                -> ladder walk to staged
+  oob_index                    -> rejected at plan BUILD
+  corrupt_value                -> runtime parity guard (policies)
+  nan_activations              -> runtime NaN scan (policies)
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dataflow as df
+from repro.core import resilience as res
+from repro.models import cnn
+from repro.testing import faults
+
+LAYERS = (
+    df.ConvLayer("c1", 3, 8, 32, 32),
+    df.ConvLayer("c2", 8, 8, 16, 16),
+    df.ConvLayer("c3", 8, 8, 8, 8),
+    df.ConvLayer("c4", 8, 8, 4, 4),
+    df.ConvLayer("c5", 8, 8, 2, 2),
+)
+CFG = cnn.SpectralCNNConfig(
+    name="mini-faults", layers=LAYERS, alpha=4.0, n_classes=4,
+    image_size=32, fc_dim=8,
+    pool_after=frozenset({"c1", "c2", "c3", "c4", "c5"}))
+TOL = 1e-5
+
+
+@pytest.fixture(scope="module")
+def params():
+    return cnn.init(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def plan(params):
+    """Most aggressive datapath: scheduled Hadamard + halo input."""
+    return cnn.build_plan(params, CFG, batch=1, hadamard="scheduled",
+                          input_mode="halo")
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jax.random.normal(jax.random.PRNGKey(1), (1, 3, 32, 32),
+                             jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def ref(params, plan, x):
+    """The einsum oracle every demoted output must stay within TOL of."""
+    return cnn.forward_spectral(params, plan, x, backend="einsum")
+
+
+def _modes(p):
+    return [(lp.input_mode, lp.hadamard, lp.backend) for lp in p.layers]
+
+
+def _parity(params, hard, x, ref):
+    out = cnn.forward_spectral(params, hard, x, backend="pallas_fused")
+    return float(jnp.abs(out - ref).max())
+
+
+def test_no_fault_leaks_between_tests(plan):
+    """inject() must uninstall on exit — a leaked fault would poison
+    every later test in the session."""
+    with faults.inject("lowering") as f:
+        assert res._FAULTS
+    assert f not in res._FAULTS and not res._FAULTS
+
+
+def test_rung1_halo_demotes_to_windowed(params, plan, x, ref):
+    with faults.inject("lowering", input_mode="halo") as f:
+        hard = res.harden_network_plan(plan)
+    assert f.fires > 0
+    for lp in hard.layers:
+        assert lp.input_mode == "windowed"
+        assert lp.backend == "fused"            # only ONE rung taken
+        assert any("halo->windowed" in p for p in lp.provenance)
+    assert _parity(params, hard, x, ref) <= TOL
+
+
+def test_rung2_scheduled_demotes_to_plane(params, plan, x, ref):
+    with faults.inject("lowering", hadamard="scheduled") as f:
+        hard = res.harden_network_plan(plan)
+    assert f.fires > 0
+    for lp in hard.layers:
+        assert lp.hadamard in ("dense", "bin")
+        assert lp.tables is None
+        assert lp.backend == "fused"
+        assert any("hadamard scheduled->" in p for p in lp.provenance)
+    assert _parity(params, hard, x, ref) <= TOL
+
+
+def test_rung3_fused_demotes_to_staged(params, plan, x, ref):
+    with faults.inject("lowering", backend="fused") as f:
+        hard = res.harden_network_plan(plan)
+    assert f.fires > 0
+    for lp in hard.layers:
+        assert lp.backend == "staged"
+        assert any("fused->staged" in p for p in lp.provenance)
+    assert _parity(params, hard, x, ref) <= TOL
+
+
+def test_rung4_terminal_einsum_always_executes(params, plan, x, ref):
+    """An unmatched lowering fault fails halo, windowed, plane, fused
+    AND staged variants; the ladder must land every layer on einsum and
+    the output must be exact (einsum IS the oracle)."""
+    with faults.inject("lowering") as f:
+        hard = res.harden_network_plan(plan)
+    assert f.fires > 0
+    for lp in hard.layers:
+        assert lp.backend == "einsum"
+        assert len(lp.provenance) == len(res.DEMOTION_LADDER)
+    assert _parity(params, hard, x, ref) == 0.0
+    hr = hard.health_report()
+    assert hr["healthy"] is False
+    assert hr["demoted_layers"] == [lp.layer.name for lp in hard.layers]
+
+
+def test_vmem_overflow_walks_ladder(params, plan, x, ref):
+    """RESOURCE_EXHAUSTED-style failures at the fused dispatch demote
+    through the fused rungs and settle on staged."""
+    with faults.inject("vmem_overflow") as f:
+        hard = res.harden_network_plan(plan)
+    assert f.fires > 0
+    for lp in hard.layers:
+        assert lp.backend == "staged"
+        # provenance records the raw error the rung translated
+        assert any("RESOURCE_EXHAUSTED" in p for p in lp.provenance)
+    assert _parity(params, hard, x, ref) <= TOL
+
+
+def test_oob_index_rejected_at_build(params):
+    """A corrupted INDEX table produced during schedule compilation is
+    caught by build-time validation, not at kernel launch."""
+    with pytest.raises(res.PlanValidationError) as ei:
+        with faults.inject("oob_index") as f:
+            cnn.build_plan(params, CFG, batch=1, hadamard="scheduled")
+    assert f.fires > 0
+    assert any(d.check == "tables/idx-bounds" for d in
+               ei.value.diagnostics)
+
+
+def test_corrupt_value_caught_by_parity_guard(params, plan, x, ref):
+    """A finite-but-wrong VALUE plane sails through static validation;
+    the sampled parity guard catches it and (policy=demote) recomputes
+    the layer through the oracle so the answer stays parity-bounded."""
+    with faults.inject("corrupt_value") as f:
+        bad_plan = cnn.build_plan(params, CFG, batch=1,
+                                  hadamard="scheduled")
+    assert f.fires > 0
+    guards = res.NumericGuards(parity=True, policy="demote")
+    out = cnn.forward_spectral(params, bad_plan, x,
+                               backend="pallas_fused", guards=guards)
+    assert guards.events and guards.events[0]["check"] == "parity"
+    assert float(jnp.abs(out - ref).max()) <= TOL
+    # without guards the corruption WOULD be a silent wrong answer —
+    # that is exactly the hole the parity guard plugs
+    raw = cnn.forward_spectral(params, bad_plan, x,
+                               backend="pallas_fused")
+    assert float(jnp.abs(raw - ref).max()) > TOL
+
+
+def test_nan_activations_guard_policies(params, plan, x, ref):
+    """The NaN scan names the poisoned layer; each policy behaves as
+    documented."""
+    # raise
+    g = res.NumericGuards(policy="raise")
+    with faults.inject("nan_activations", layer="c2"):
+        with pytest.raises(res.NumericGuardError) as ei:
+            cnn.forward_spectral(params, plan, x,
+                                 backend="pallas_fused", guards=g)
+    assert ei.value.layer == "c2" and ei.value.site == "nan_scan"
+    assert g.events and g.events[0]["layer"] == "c2"
+
+    # demote: oracle recompute of the poisoned layer, bounded answer
+    g2 = res.NumericGuards(policy="demote")
+    with faults.inject("nan_activations", layer="c2"):
+        out = cnn.forward_spectral(params, plan, x,
+                                   backend="pallas_fused", guards=g2)
+    assert g2.events
+    assert bool(jnp.isfinite(out).all())
+    assert float(jnp.abs(out - ref).max()) <= TOL
+
+    # warn: suspect output kept, warning emitted, event recorded
+    g3 = res.NumericGuards(policy="warn")
+    with faults.inject("nan_activations", layer="c2"):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out3 = cnn.forward_spectral(params, plan, x,
+                                        backend="pallas_fused",
+                                        guards=g3)
+    assert any("numeric-guard" in str(wi.message) for wi in w)
+    assert g3.events
+    assert not bool(jnp.isfinite(out3).all())
+
+
+def test_unhardened_fused_failure_is_structured(params, plan, x):
+    """Skipping harden_network_plan must still never surface a raw
+    backend traceback: forward_spectral wraps the failure in
+    KernelLoweringError naming the layer."""
+    with faults.inject("lowering", backend="fused"):
+        with pytest.raises(res.KernelLoweringError) as ei:
+            cnn.forward_spectral(params, plan, x,
+                                 backend="pallas_fused")
+    assert ei.value.layer == "c1" and ei.value.site == "forward"
+    assert "backend=" in str(ei.value)
+
+
+def test_demotion_repriced_costs_stay_honest(plan):
+    """Each rung re-prices the tuning through the cost model; the
+    recorded numbers change with the variant instead of going stale."""
+    lp = plan.layers[0]
+    demoted = res.demote_layer(lp, reason="test")
+    assert demoted.input_mode == "windowed"
+    assert demoted.tuning.input_mode == "windowed"
+    assert demoted.tuning.hbm_bytes != lp.tuning.hbm_bytes
+    assert demoted.provenance[-1].startswith("input_mode halo->windowed")
+    # terminal rung: nothing below einsum
+    lp_e = demoted
+    for _ in range(len(res.DEMOTION_LADDER)):
+        nxt = res.demote_layer(lp_e, reason="test")
+        if nxt is None:
+            break
+        lp_e = nxt
+    assert lp_e.backend == "einsum"
+    assert res.demote_layer(lp_e, reason="test") is None

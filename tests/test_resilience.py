@@ -1,0 +1,256 @@
+"""Resilient execution layer: plan validation, taxonomy, health report.
+
+The companion fault-injection ladder walk lives in test_faults.py; this
+module covers the STATIC half — ``validate_plan`` invariants, the error
+taxonomy's back-compat contract, corrupted Alg-2 tables rejected at plan
+BUILD time (not kernel launch), the hypothesis property that the Alg-2
+compiler's own output always validates, and ``health_report``.
+"""
+
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dataflow as df
+from repro.core import resilience as res
+from repro.core import scheduler as sch
+from repro.core import sparse as sp
+from repro.models import cnn
+from repro.testing import faults
+
+MINI_LAYERS = (
+    df.ConvLayer("c1", 3, 8, 32, 32),
+    df.ConvLayer("c2", 8, 8, 16, 16),
+    df.ConvLayer("c3", 8, 8, 8, 8),
+)
+MINI = cnn.SpectralCNNConfig(
+    name="mini-res", layers=MINI_LAYERS, alpha=4.0, n_classes=4,
+    image_size=32, fc_dim=8, pool_after=frozenset({"c1", "c2", "c3"}))
+
+
+@pytest.fixture(scope="module")
+def mini_params():
+    return cnn.init(jax.random.PRNGKey(0), MINI)
+
+
+@pytest.fixture(scope="module")
+def mini_plan(mini_params):
+    return cnn.build_plan(mini_params, MINI, batch=1,
+                          hadamard="scheduled", input_mode="halo")
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+
+def test_taxonomy_backcompat_subclassing():
+    """Structured errors must keep pre-taxonomy except clauses working:
+    validation errors are ValueErrors, lowering errors are
+    NotImplementedErrors (the old _check_hw_safe contract)."""
+    assert issubclass(res.PlanValidationError, ValueError)
+    assert issubclass(res.KernelLoweringError, NotImplementedError)
+    assert issubclass(res.NumericGuardError, ValueError)
+    for klass in (res.PlanValidationError, res.KernelLoweringError,
+                  res.NumericGuardError):
+        assert issubclass(klass, res.ResilienceError)
+
+
+def test_error_carries_structure():
+    diags = [res.Diagnostic("c1", "tables/idx-bounds", "boom"),
+             res.Diagnostic("c2", "vmem-budget", "big", "warn")]
+    err = res.PlanValidationError("plan failed", layer="c1",
+                                  site="validate_plan", diagnostics=diags)
+    assert err.layer == "c1" and err.site == "validate_plan"
+    assert len(err.diagnostics) == 2
+    msg = str(err)
+    assert "tables/idx-bounds" in msg and "[c2] vmem-budget" in msg
+
+
+def test_check_hw_safe_is_structured():
+    """The kernel's hardware-safety gate raises the taxonomy error, and
+    it still satisfies pytest.raises(NotImplementedError) callers."""
+    from repro.kernels.fused_spectral_conv import _check_hw_safe
+    with pytest.raises(res.KernelLoweringError) as ei:
+        _check_hw_safe("weight_stationary", gn=1, gp=2, interpret=False)
+    assert ei.value.site == "hw-safe"
+    with pytest.raises(NotImplementedError):
+        _check_hw_safe("input_stationary", gn=2, gp=1, interpret=False)
+    _check_hw_safe("weight_stationary", gn=1, gp=2, interpret=True)
+
+
+def test_guard_policy_validated():
+    with pytest.raises(ValueError):
+        res.NumericGuards(policy="explode")
+
+
+# ---------------------------------------------------------------------------
+# Plan validation
+# ---------------------------------------------------------------------------
+
+def test_validate_plan_healthy(mini_plan):
+    """A freshly built plan has no error-severity diagnostics on the
+    scheduled+halo datapath (the most aggressive variant)."""
+    diags = res.validate_plan(mini_plan)
+    assert not [d for d in diags if d.severity == "error"]
+
+
+def test_build_plan_validates_by_default(mini_params):
+    """build_network_plan runs validate_plan unless told not to."""
+    plan = cnn.build_plan(mini_params, MINI, batch=1, validate=False)
+    assert res.validate_plan(plan, raise_on_error=False) is not None
+    # default path already validated mini_plan without raising
+
+
+def test_oob_index_rejected_at_plan_build_not_launch(mini_plan):
+    """A mutated OOB INDEX table is rejected by static validation —
+    before any kernel launch could gather against the bad address."""
+    bad = faults.corrupt_plan_tables(mini_plan, kind="oob_index")
+    with pytest.raises(res.PlanValidationError) as ei:
+        res.validate_plan(bad)
+    err = ei.value
+    assert err.site == "validate_plan"
+    checks = {d.check for d in err.diagnostics}
+    assert "tables/idx-bounds" in checks
+    assert str(faults.OOB_INDEX) in str(err)
+    # the failing layer is named — no traceback archaeology needed
+    assert err.layer in {lp.layer.name for lp in mini_plan.layers}
+
+
+def test_corrupt_value_is_invisible_to_static_validation(mini_plan):
+    """A finite-but-wrong VALUE plane passes the static validator —
+    catching it is the runtime parity guard's job (test_faults.py)."""
+    bad = faults.corrupt_plan_tables(mini_plan, kind="corrupt_value")
+    diags = res.validate_plan(bad)
+    assert not [d for d in diags if d.severity == "error"]
+
+
+def test_validate_layer_plan_flags_bad_modes(mini_plan):
+    lp = dataclasses.replace(mini_plan.layers[0], input_mode="telepathy")
+    diags = res.validate_layer_plan(lp)
+    assert any(d.check == "modes/input" for d in diags)
+    lp2 = dataclasses.replace(mini_plan.layers[0], backend="quantum")
+    diags2 = res.validate_layer_plan(lp2)
+    assert any(d.check == "modes/backend" for d in diags2)
+
+
+def test_validate_layer_plan_flags_bad_bias(mini_plan):
+    lp = mini_plan.layers[0]
+    bad_bias = jnp.asarray(np.full((1, lp.layer.c_out), np.nan,
+                                   np.float32))
+    lp = dataclasses.replace(lp, bias=bad_bias)
+    diags = res.validate_layer_plan(lp)
+    assert any(d.check == "epilogue/bias-finite" for d in diags)
+
+
+def test_vmem_budget_is_warn_severity(mini_plan):
+    """An over-budget working set is advisory (the autotuner's
+    documented smallest-footprint fallback), not a hard error — but it
+    must be reported."""
+    diags = res.validate_plan(mini_plan, vmem_budget=1)
+    vmem = [d for d in diags if d.check == "vmem-budget"]
+    assert vmem and all(d.severity == "warn" for d in vmem)
+
+
+# ---------------------------------------------------------------------------
+# Property: the Alg-2 compiler's own output always validates
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_kernels=st.sampled_from([4, 8, 16]),
+    m_ch=st.sampled_from([3, 4, 8]),
+    alpha=st.sampled_from([2.0, 4.0]),
+    block_m=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compiled_tables_always_validate(n_kernels, m_ch, alpha,
+                                         block_m, seed):
+    """Property: for any random sparsity pattern, the tables
+    ``scheduler.compile_layer_tables`` emits pass ``validate_tables``
+    clean — bounds, dtypes, shape alignment, padding.  The validator
+    rejects only *corrupted* tables, never fresh ones."""
+    k = 8
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((n_kernels, m_ch, k, k))
+         + 1j * rng.standard_normal((n_kernels, m_ch, k, k))
+         ).astype(np.complex64)
+    sk = sp.prune_random(w, alpha, seed=seed)
+    active = sp.compacted_active_bins(sk)
+    n_bins = len(active) if active is not None else k * k
+    bm = min(block_m, m_ch)
+    tables = sch.compile_layer_tables(
+        np.asarray(sk.indices), np.asarray(sk.values).reshape(
+            n_kernels, m_ch, k * k),
+        k * k, df.SCHEDULE_R, n_par=min(8, n_kernels),
+        active=active, m_pad_to=bm)
+    diags = res.validate_tables(
+        tables, n_bins=n_bins, r=df.SCHEDULE_R, c_out=n_kernels,
+        c_in=m_ch, block_m=block_m, layer="prop")
+    assert not diags, [str(d) for d in diags]
+
+
+def test_validate_tables_catches_all_corruptions(mini_plan):
+    """Each corruption class maps to its named check."""
+    lp = next(l for l in mini_plan.layers if l.tables is not None)
+    kw = dict(n_bins=lp.n_active_bins, r=df.SCHEDULE_R,
+              c_out=lp.layer.c_out, c_in=lp.layer.c_in,
+              block_m=lp.tuning.block_m, layer=lp.layer.name)
+    tb = lp.tables
+
+    def checks(**overrides):
+        fields = {"idx": tb.idx, "sel": tb.sel, "vr": tb.vr,
+                  "vi": tb.vi}
+        fields.update(overrides)
+        mut = types.SimpleNamespace(**fields)
+        return {d.check for d in res.validate_tables(mut, **kw)}
+
+    assert not checks()                                   # pristine
+    bad_idx = np.array(tb.idx, copy=True)
+    bad_idx.flat[0] = -3
+    assert "tables/idx-bounds" in checks(idx=bad_idx)
+    bad_sel = np.array(tb.sel, copy=True)
+    bad_sel.flat[0] = 10**6
+    assert "tables/sel-bounds" in checks(sel=bad_sel)
+    bad_vr = np.array(tb.vr, copy=True)
+    bad_vr.flat[0] = np.inf
+    assert "tables/value-finite" in checks(vr=bad_vr)
+    assert "tables/idx-dtype" in checks(
+        idx=np.asarray(tb.idx, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Health report + harden on a healthy plan
+# ---------------------------------------------------------------------------
+
+def test_health_report_healthy(mini_plan):
+    hr = mini_plan.health_report()
+    assert hr["healthy"] is True
+    assert hr["demoted_layers"] == []
+    assert hr["issues"]["error"] == 0
+    assert len(hr["layers"]) == len(mini_plan.layers)
+    row = hr["layers"][0]
+    for key in ("layer", "backend", "flow", "hadamard", "input_mode",
+                "demotions"):
+        assert key in row
+    assert row["backend"] == "fused" and row["demotions"] == []
+
+
+def test_harden_is_noop_on_healthy_plan(mini_plan):
+    """No fault installed: every layer keeps its chosen variant and no
+    provenance is recorded."""
+    hard = res.harden_network_plan(mini_plan)
+    assert all(not lp.provenance for lp in hard.layers)
+    assert [(lp.input_mode, lp.hadamard, lp.backend)
+            for lp in hard.layers] == \
+           [(lp.input_mode, lp.hadamard, lp.backend)
+            for lp in mini_plan.layers]
+
+
+def test_stats_surface_backend_and_demotions(mini_plan):
+    s = mini_plan.layers[0].stats()
+    assert s["backend"] == "fused" and s["demotions"] == 0

@@ -45,6 +45,75 @@ def test_batched_matches_sequential():
         assert r.out == expect, (r.rid, r.out, expect)
 
 
+def test_bad_request_isolated():
+    """A malformed request among good ones retires with a structured
+    failure response; the good requests complete correctly and the
+    serve loop survives."""
+    srv = Server("smollm-135m", slots=2, max_len=64)
+    rng = np.random.default_rng(2)
+    good = [rng.integers(1, srv.cfg.vocab, size=5).astype(np.int32)
+            for _ in range(2)]
+    bad_empty = Request(10, np.asarray([], np.int32), 4)
+    bad_vocab = Request(11, np.asarray([0, srv.cfg.vocab + 7], np.int32), 4)
+    reqs = [Request(0, good[0], 4), bad_empty, bad_vocab,
+            Request(1, good[1], 4)]
+    for r in reqs:
+        srv.submit(r)
+    stats = srv.run_until_drained()
+    assert stats["completed"] == 2 and stats["failed"] == 2
+    assert bad_empty.failed and bad_empty.error["code"] == "bad_request"
+    assert bad_vocab.failed and bad_vocab.error["code"] == "bad_request"
+    for r, p in zip([reqs[0], reqs[3]], good):
+        assert not r.failed
+        expect = _sequential_greedy(srv.cfg, srv.params, p, 4)
+        assert r.out == expect, (r.rid, r.out, expect)
+
+
+def test_prefill_failure_isolated():
+    """An exception inside prefill (not just validation) retires only
+    the offending request; the slot serves the next one."""
+    srv = Server("smollm-135m", slots=1, max_len=64)
+    rng = np.random.default_rng(3)
+    p_ok = rng.integers(1, srv.cfg.vocab, size=4).astype(np.int32)
+    p_bad = rng.integers(1, srv.cfg.vocab, size=4).astype(np.int32)
+
+    real_decode = srv._decode
+    calls = {"n": 0}
+
+    def flaky(params, cache, token, pos):
+        calls["n"] += 1
+        if calls["n"] == 1:      # first call == bad's first prefill step
+            raise RuntimeError("injected prefill failure")
+        return real_decode(params, cache, token, pos)
+
+    srv._decode = flaky
+    bad = Request(0, p_bad, 4)
+    ok = Request(1, p_ok, 4)
+    srv.submit(bad)
+    srv.submit(ok)
+    stats = srv.run_until_drained()
+    assert bad.failed and bad.error["code"] == "prefill_error"
+    assert stats["failed"] == 1 and stats["completed"] == 1
+    expect = _sequential_greedy(srv.cfg, srv.params, p_ok, 4)
+    assert ok.out == expect
+
+
+def test_request_timeout():
+    """request_timeout_s retires a straggler with a 'timeout' failure
+    response and the loop drains."""
+    srv = Server("smollm-135m", slots=1, max_len=64,
+                 request_timeout_s=0.0)
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(1, srv.cfg.vocab, size=4).astype(np.int32)
+    req = Request(0, prompt, 1000)
+    srv.submit(req)
+    stats = srv.run_until_drained(max_ticks=50)
+    assert req.done and req.failed
+    assert req.error["code"] == "timeout"
+    assert stats["failed"] == 1
+    assert stats["ticks"] < 50          # drained, not tick-starved
+
+
 def test_slot_reuse_after_retire():
     """More requests than slots: retired slots must serve new requests
     without contamination from the previous occupant."""
