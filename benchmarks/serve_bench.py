@@ -1,0 +1,281 @@
+"""Serving benchmark for ``launch.spectral_serve`` — throughput, tail
+latency and resilience counters under a 4x-capacity burst, plus the
+chaos soak as a CI gate.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--quick] [--chaos]
+      [--json BENCH_serve.json] [--merge-into BENCH_e2e.json]
+
+Two sections:
+
+  load   real-clock load benchmark: warm the plan cache + jit, run two
+         steady waves, then slam a 4x-``queue_limit`` burst into the
+         bounded queue and drain it.  Reports throughput (img/s) and
+         p50/p95/p99 latency alongside the shed/demotion counters —
+         the tail numbers the paper's single-stream latency claim has
+         to survive.
+  chaos  (``--chaos``) ``testing.faults.chaos_soak``: the deterministic
+         fault-injected burst on a virtual clock (kernel faults,
+         plan-cache corruption, slow-service windows, tight deadlines).
+         Its gates — zero loop deaths, zero silent wrong answers,
+         demotion AND promotion observed — fail this process nonzero.
+
+BENCH_serve.json schema
+-----------------------
+  bench / backend / interpret_mode / model / quick     run metadata.
+  load.requests / load.queue_limit / load.buckets      offered load.
+  load.warm_s
+      startup cost: plan builds for every bucket + one jit warm
+      forward per bucket.  Paid once, BEFORE serving — the
+      ``plan_cache_warm_only`` gate asserts no request ever triggered
+      a plan build.
+  load.stats
+      the server's drained-run stats: terminal-outcome counters,
+      throughput_img_s, latency_ms {mean, p50, p95, p99}, demotions /
+      promotions, served_by_rung, loop_deaths.
+  load.health
+      final ``health_report()`` — ladder transitions with the pressure
+      that drove them, breaker snapshots, plan-cache counters.
+  chaos
+      the full ``chaos_soak`` report (present with ``--chaos``).
+  known_gaps[]
+      tracked, NON-gating regressions.  Currently: smoke batch-8
+      fused latency trails the einsum oracle (BENCH_e2e.json
+      latency.smoke.batch8) — the baseline for ROADMAP item 1's
+      batch-aware autotune work.
+  gates / failed_gates
+      pass/fail booleans; any False exits nonzero AFTER the report is
+      written (CI blocks, artifact stays inspectable).
+
+``--merge-into BENCH_e2e.json`` additionally folds a summary (load
+stats + gate status + known_gaps) into the e2e report under a
+``serve`` key, atomically, so the serving columns live next to the
+latency/traffic ones.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import jax
+
+# fallback to the committed full-run numbers if BENCH_e2e.json is absent
+_BATCH8_FUSED_MS_FALLBACK = 92.9
+_BATCH8_EINSUM_MS_FALLBACK = 81.3
+
+
+def load_bench(*, queue_limit: int = 16, seed: int = 0,
+               quick: bool = False) -> dict:
+    """Real-clock serving benchmark: steady waves, then a 4x-capacity
+    burst into the bounded queue."""
+    from repro.configs import vgg16_spectral
+    from repro.launch import spectral_serve as ss
+
+    cfg = vgg16_spectral.SMOKE
+    t0 = time.perf_counter()
+    srv = ss.SpectralServer(cfg, queue_limit=queue_limit, seed=seed,
+                            warm_forward=True)
+    warm_s = time.perf_counter() - t0
+    print(f"      warm: {len(srv.buckets)} bucket plans + jit in "
+          f"{warm_s:.1f}s")
+
+    reqs: list = []
+
+    def burst(n: int) -> None:
+        wave = ss.synthetic_requests(n, cfg, seed=seed + len(reqs),
+                                     rid0=len(reqs))
+        for r in wave:
+            srv.submit(r)
+        reqs.extend(wave)
+
+    steady = max(2, queue_limit // (4 if quick else 2))
+    for _ in range(1 if quick else 2):
+        burst(steady)
+        srv.run_until_drained()
+    burst(4 * queue_limit)
+    srv.run_until_drained()
+
+    stats = srv.stats()
+    health = srv.health_report()
+    cache = srv.plans.stats()
+    gates = {
+        "all_terminal": all(r.terminal for r in reqs),
+        "zero_loop_deaths": stats["loop_deaths"] == 0,
+        "shed_nonzero": stats["counters"]["overloaded"] > 0,
+        "demotion_and_promotion": (stats["demotions"] >= 1
+                                   and stats["promotions"] >= 1),
+        "latency_reported": ("latency_ms" in stats
+                             and "throughput_img_s" in stats),
+        # every plan build happened during warm(), never on a request
+        "plan_cache_warm_only": cache["builds"] == len(srv.buckets),
+    }
+    return {
+        "requests": len(reqs),
+        "queue_limit": queue_limit,
+        "buckets": list(srv.buckets),
+        "warm_s": warm_s,
+        "stats": stats,
+        "health": health,
+        "gates": gates,
+        "failed_gates": sorted(k for k, v in gates.items() if not v),
+    }
+
+
+def known_gaps(e2e_path: str = "BENCH_e2e.json") -> list[dict]:
+    """Tracked non-gating regressions, with live numbers when the e2e
+    report is on disk."""
+    fused_ms, einsum_ms = (_BATCH8_FUSED_MS_FALLBACK,
+                           _BATCH8_EINSUM_MS_FALLBACK)
+    source = "fallback (committed full-run values)"
+    try:
+        with open(e2e_path) as f:
+            row = json.load(f)["latency"]["smoke"]["batch8"]
+        fused_ms = row["pallas_fused_ms"]
+        einsum_ms = row["einsum_ms"]
+        source = f"{e2e_path}:latency.smoke.batch8"
+    except (OSError, KeyError, ValueError):
+        pass
+    return [{
+        "id": "batch8-fused-slower-than-einsum",
+        "gating": False,
+        "fused_ms": fused_ms,
+        "einsum_ms": einsum_ms,
+        "source": source,
+        "detail": "smoke batch-8 fused latency trails the einsum "
+                  "oracle — the Alg-1 cost model tunes blocks per "
+                  "layer but not per batch, so large-batch buckets "
+                  "inherit batch-1 block choices.  Tracked baseline "
+                  "for ROADMAP item 1 (batch-aware autotune); the "
+                  "serving ladder sidesteps it today by demoting to "
+                  "einsum under pressure.",
+    }]
+
+
+def _write_report_atomic(report: dict, path: str) -> None:
+    """tmp + os.replace, same contract as benchmarks.e2e_latency."""
+    dirname = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=dirname, prefix=".bench_serve_",
+                               suffix=".json.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _merge_into_e2e(report: dict, path: str) -> None:
+    """Fold the serve summary into BENCH_e2e.json under ``serve``."""
+    with open(path) as f:
+        e2e = json.load(f)
+    load = report["load"]
+    e2e["serve"] = {
+        "requests": load["requests"],
+        "queue_limit": load["queue_limit"],
+        "buckets": load["buckets"],
+        "warm_s": load["warm_s"],
+        "throughput_img_s": load["stats"].get("throughput_img_s"),
+        "latency_ms": load["stats"].get("latency_ms"),
+        "counters": load["stats"]["counters"],
+        "demotions": load["stats"]["demotions"],
+        "promotions": load["stats"]["promotions"],
+        "loop_deaths": load["stats"]["loop_deaths"],
+        "chaos_failed_gates": report.get("chaos", {}).get(
+            "failed_gates"),
+        "failed_gates": report["failed_gates"],
+        "known_gaps": report["known_gaps"],
+    }
+    _write_report_atomic(e2e, path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="output path for the JSON report")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke path: smaller steady phase")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also run the fault-injected chaos soak "
+                    "(virtual clock, deterministic) and gate on it")
+    ap.add_argument("--queue-limit", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--merge-into", default=None, metavar="E2E_JSON",
+                    help="also fold a serve summary into this "
+                    "BENCH_e2e.json (atomic rewrite)")
+    args = ap.parse_args()
+
+    n_steps = 2 + bool(args.chaos)
+    report: dict = {
+        "bench": "serve_bench",
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "model": "vgg16-spectral-smoke",
+        "quick": bool(args.quick),
+        "seed": args.seed,
+    }
+
+    print(f"[1/{n_steps}] load bench: steady waves + 4x-capacity burst "
+          f"(queue_limit={args.queue_limit})")
+    report["load"] = load_bench(queue_limit=args.queue_limit,
+                                seed=args.seed, quick=args.quick)
+    st = report["load"]["stats"]
+    lm = st.get("latency_ms", {})
+    print(f"      {report['load']['requests']} requests: "
+          f"{st['counters']['ok']} ok / {st['counters']['overloaded']} "
+          f"shed / {st['counters']['failed']} failed; "
+          f"{st.get('throughput_img_s', float('nan')):.1f} img/s; "
+          f"latency ms p50 {lm.get('p50', float('nan')):.1f} / p95 "
+          f"{lm.get('p95', float('nan')):.1f} / p99 "
+          f"{lm.get('p99', float('nan')):.1f}; "
+          f"{st['demotions']} demotions, {st['promotions']} promotions,"
+          f" {st['loop_deaths']} loop deaths")
+
+    if args.chaos:
+        print(f"[2/{n_steps}] chaos soak: fault-injected burst on a "
+              "virtual clock")
+        from repro.testing import faults
+        report["chaos"] = faults.chaos_soak(
+            queue_limit=args.queue_limit, seed=args.seed,
+            log=lambda m: print(f"      {m}"))
+
+    print(f"[{n_steps}/{n_steps}] known gaps (non-gating)")
+    report["known_gaps"] = known_gaps()
+    for gap in report["known_gaps"]:
+        print(f"      {gap['id']}: fused {gap['fused_ms']:.1f} ms vs "
+              f"einsum {gap['einsum_ms']:.1f} ms ({gap['source']})")
+
+    failed = [f"load.{g}" for g in report["load"]["failed_gates"]]
+    if "chaos" in report:
+        failed += [f"chaos.{g}" for g in report["chaos"]["failed_gates"]]
+    report["gates"] = {
+        "load": report["load"]["gates"],
+        **({"chaos": report["chaos"]["gates"]} if "chaos" in report
+           else {}),
+    }
+    report["failed_gates"] = failed
+
+    _write_report_atomic(report, args.json)
+    print(f"wrote {args.json}")
+    if args.merge_into:
+        _merge_into_e2e(report, args.merge_into)
+        print(f"merged serve summary into {args.merge_into}")
+
+    if failed:
+        print("[gates] FAILED:", file=sys.stderr)
+        for name in failed:
+            print(f"  - {name}", file=sys.stderr)
+        sys.exit(1)
+    print("[gates] all serving gates pass")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,10 +4,16 @@ Continuous-batching greedy decoding on CPU — the 'serve a small model
 with batched requests' end-to-end deliverable.  Reports per-tick decode
 latency (the paper's figure of merit is single-stream latency).
 
-  PYTHONPATH=src python examples/serve_lm.py [--smoke]
+  PYTHONPATH=src python examples/serve_lm.py [--smoke] [--seed N]
+      [--json OUT]
+
+``--seed`` drives model init and the synthetic prompts; ``--json``
+emits the drained-run stats ('-' for stdout) so CI can gate on them
+deterministically.
 """
 
 import argparse
+import json
 
 import numpy as np
 
@@ -21,16 +27,21 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds model init + synthetic prompts")
+    ap.add_argument("--json", default=None,
+                    help="write drained-run stats JSON ('-' = stdout)")
     args = ap.parse_args()
 
     srv = Server("smollm-135m", slots=args.slots, max_len=128,
-                 config_set="smoke" if args.smoke else "full")
+                 config_set="smoke" if args.smoke else "full",
+                 seed=args.seed)
     n_params = sum(x.size for x in
                    __import__("jax").tree.leaves(srv.params))
     print(f"[serve] model {srv.cfg.name} ({n_params/1e6:.0f}M params), "
           f"{args.slots} slots, {args.requests} requests")
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     done = []
     for rid in range(args.requests):
         prompt = rng.integers(1, srv.cfg.vocab, size=6).astype(np.int32)
@@ -45,6 +56,15 @@ def main() -> None:
           f"latency mean {stats['mean_tick_ms']:.1f} ms, "
           f"p95 {stats['p95_tick_ms']:.1f} ms")
     assert all(len(r.out) == args.new_tokens for r in done)
+    if args.json:
+        payload = json.dumps({"seed": args.seed,
+                              "requests": args.requests, **stats},
+                             indent=2)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as f:
+                f.write(payload + "\n")
 
 
 if __name__ == "__main__":

@@ -43,7 +43,7 @@ geometry work ever runs inside (or between) jitted steps.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Sequence
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -441,3 +441,99 @@ def _operators(geo: spec.SpectralGeometry, active: np.ndarray | None):
     from repro.kernels.fused_spectral_conv import overlap_save_operators
     key = tuple(int(a) for a in active) if active is not None else None
     return overlap_save_operators(geo.fft_size, geo.ksize, key)
+
+
+# ---------------------------------------------------------------------------
+# Keyed plan cache (serving front end)
+# ---------------------------------------------------------------------------
+
+def plan_cache_key(cfg, batch: int, **build_kwargs) -> tuple:
+    """Cache key for one compiled ``NetworkPlan``: (config name,
+    fft_size, per-layer alpha, batch bucket, build options).
+
+    Everything else a plan depends on (layer geometry, pool placement)
+    is a function of the named config; alpha is normalized so a scalar
+    and the equivalent per-layer sequence key identically.  Build
+    kwargs (forced hadamard/input_mode, vmem budget, ...) are folded in
+    by repr so plans built with different options never collide.
+    """
+    alphas = sp.per_layer_alphas(cfg.alpha, len(list(cfg.layers)))
+    return (getattr(cfg, "name", "spectral-cnn"), int(cfg.fft_size),
+            tuple(float(a) for a in alphas), int(batch),
+            tuple(sorted((k, repr(v)) for k, v in build_kwargs.items())))
+
+
+@dataclasses.dataclass
+class PlanCache:
+    """Keyed, warmable cache of compile-once NetworkPlans.
+
+    ``build_network_plan`` is the expensive offline step (~2 minutes on
+    full VGG16: prune + Alg-2 tables + compaction + autotune — see
+    ``plan_build_s`` in BENCH_e2e.json); a serving front end cannot
+    afford it on the request path.  The cache keys plans by
+    ``plan_cache_key(cfg, batch)`` and is *warmed* at server startup
+    for every batch bucket, so no request ever pays a plan build.
+
+    ``invalidate(key)`` drops one entry (e.g. after the serving layer
+    detected a corrupted plan) so the next ``get`` rebuilds it; the
+    hit/miss/build/invalidation counters and cumulative build seconds
+    are surfaced via ``stats()`` for the serve-level health report.
+
+    ``builder`` is injectable for tests (defaults to
+    ``build_network_plan``); extra ``get`` kwargs are forwarded to it.
+    """
+
+    builder: Callable | None = None
+    _plans: dict = dataclasses.field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+    builds: int = 0
+    invalidations: int = 0
+    build_s: float = 0.0
+
+    def warm(self, params: dict, cfg, batches: Sequence[int],
+             **build_kwargs) -> dict:
+        """Build (or confirm) one plan per batch bucket; returns
+        {bucket: key} for the entries warmed."""
+        return {int(b): self.key_of(params, cfg, int(b), **build_kwargs)
+                for b in batches}
+
+    def key_of(self, params: dict, cfg, batch: int, **build_kwargs
+               ) -> tuple:
+        """``get`` that returns the cache key instead of the plan."""
+        self.get(params, cfg, batch, **build_kwargs)
+        return plan_cache_key(cfg, batch, **build_kwargs)
+
+    def get(self, params: dict, cfg, batch: int, **build_kwargs
+            ) -> NetworkPlan:
+        key = plan_cache_key(cfg, batch, **build_kwargs)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.hits += 1
+            return plan
+        self.misses += 1
+        import time as _time
+        t0 = _time.perf_counter()
+        builder = self.builder or build_network_plan
+        plan = builder(params, cfg, batch=batch, **build_kwargs)
+        self.build_s += _time.perf_counter() - t0
+        self.builds += 1
+        self._plans[key] = plan
+        return plan
+
+    def invalidate(self, key: tuple) -> bool:
+        """Drop one entry; the next ``get`` for its key rebuilds."""
+        if key in self._plans:
+            del self._plans[key]
+            self.invalidations += 1
+            return True
+        return False
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._plans), "hits": self.hits,
+                "misses": self.misses, "builds": self.builds,
+                "invalidations": self.invalidations,
+                "build_s": self.build_s}

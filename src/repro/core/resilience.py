@@ -35,6 +35,12 @@ layer needs a principled failure model:
      einsum are the standing oracles), so a demoted plan stays inside
      the existing parity gates.
 
+     The backend axis is also exposed in isolation
+     (``BACKEND_RUNGS`` / ``demote_layer_backend`` /
+     ``plan_at_backend_rung``) together with a per-backend
+     ``CircuitBreaker`` — the rungs the serving front end
+     (``launch.spectral_serve``) trades under load rather than faults.
+
   3. **Runtime numeric guards** (opt-in).  ``NumericGuards`` adds a
      per-layer NaN/Inf scan and a sampled-channel parity self-check
      against the einsum oracle to ``models.cnn.forward_spectral``, with
@@ -58,6 +64,7 @@ lazily.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Any, Callable, Sequence
 
@@ -131,9 +138,13 @@ class Diagnostic:
 # ---------------------------------------------------------------------------
 
 # Named sites production code consults.  Keep in sync with
-# ``repro.testing.faults.FAULT_SITES``.
+# ``repro.testing.faults.FAULT_SITES``.  The ``serve_*`` sites live in
+# the serving front end (``launch.spectral_serve``): a kernel fault
+# mid-request, a corrupted plan fetched from the keyed plan cache, and
+# injected per-batch slowness (deadline pressure).
 FAULT_SITES = ("lowering", "vmem_overflow", "oob_index", "corrupt_value",
-               "nan_activations")
+               "nan_activations", "serve_kernel", "serve_plan_cache",
+               "serve_slow")
 
 
 @dataclasses.dataclass
@@ -487,6 +498,30 @@ def _summarize(err: BaseException) -> str:
     return f"{type(err).__name__}: {first[0] if first else ''}"
 
 
+def _reprice_tuning(lp, batch: int):
+    """Re-price one (possibly demoted) layer's tuning through the cost
+    model so the recorded bytes/seconds stay honest for its current
+    backend/modes."""
+    import dataclasses as dc
+
+    from repro.core.autotune import predict_seconds
+
+    tn = lp.tuning
+    if getattr(lp, "backend", "fused") == "fused":
+        cost = _layer_cost(lp, batch)
+        return dc.replace(tn, hbm_bytes=cost["hbm_bytes"],
+                          vmem_bytes=cost["vmem_bytes"],
+                          predicted_s=predict_seconds(cost),
+                          hadamard=lp.hadamard,
+                          input_mode=lp.input_mode)
+    cost = df.tpu_flow_cost(lp.layer, lp.geo.fft_size, lp.alpha,
+                            tn.block_n, tn.block_p, tn.block_m,
+                            "output_stationary", batch=batch)
+    return dc.replace(tn, hbm_bytes=cost["hbm_bytes"],
+                      vmem_bytes=cost["vmem_bytes"],
+                      predicted_s=predict_seconds(cost))
+
+
 def demote_layer(lp, *, batch: int = 1, reason: BaseException | str = ""):
     """Demote one layer ONE rung down ``DEMOTION_LADDER``.
 
@@ -517,26 +552,73 @@ def demote_layer(lp, *, batch: int = 1, reason: BaseException | str = ""):
     else:
         return None
 
-    from repro.core.autotune import predict_seconds
-
-    tn = new.tuning
-    if getattr(new, "backend", "fused") == "fused":
-        cost = _layer_cost(new, batch)
-        tn = dc.replace(tn, hbm_bytes=cost["hbm_bytes"],
-                        vmem_bytes=cost["vmem_bytes"],
-                        predicted_s=predict_seconds(cost),
-                        hadamard=new.hadamard,
-                        input_mode=new.input_mode)
-    else:
-        cost = df.tpu_flow_cost(new.layer, new.geo.fft_size, new.alpha,
-                                tn.block_n, tn.block_p, tn.block_m,
-                                "output_stationary", batch=batch)
-        tn = dc.replace(tn, hbm_bytes=cost["hbm_bytes"],
-                        vmem_bytes=cost["vmem_bytes"],
-                        predicted_s=predict_seconds(cost))
+    tn = _reprice_tuning(new, batch)
     prov = getattr(lp, "provenance", ()) + (
         f"{rung} ({note})" if note else rung,)
     return dc.replace(new, tuning=tn, provenance=prov)
+
+
+# The backend axis of the ladder in isolation — the rungs the serving
+# front end (``launch.spectral_serve``) trades under load: each step
+# swaps the whole execution path for a cheaper-to-trust one instead of
+# a kernel variant (the input_mode/hadamard rungs stay with fault-driven
+# hardening, where the *variant* is what failed).
+BACKEND_RUNGS = ("fused", "staged", "einsum")
+
+
+def demote_layer_backend(lp, *, batch: int = 1,
+                         reason: BaseException | str = ""):
+    """Demote one layer ONE rung along the backend axis only
+    (fused -> staged -> einsum), skipping the input_mode/hadamard rungs.
+
+    Used by the load-triggered ladder of ``launch.spectral_serve``:
+    under queue/deadline pressure the server trades the whole execution
+    path one rung at a time rather than individual kernel variants.
+    Returns the demoted ``LayerPlan`` (re-priced, provenance-stamped
+    like ``demote_layer``), or None on the terminal einsum rung.
+    """
+    import dataclasses as dc
+
+    note = _summarize(reason) if isinstance(reason, BaseException) \
+        else str(reason)
+    backend = getattr(lp, "backend", "fused")
+    nxt = {"fused": "staged", "staged": "einsum"}.get(backend)
+    if nxt is None:
+        return None
+    new = dc.replace(lp, backend=nxt)
+    tn = _reprice_tuning(new, batch)
+    rung = f"backend {backend}->{nxt}"
+    prov = getattr(lp, "provenance", ()) + (
+        f"{rung} ({note})" if note else rung,)
+    return dc.replace(new, tuning=tn, provenance=prov)
+
+
+def plan_at_backend_rung(plan, backend: str, *, reason: str = ""):
+    """Return a copy of ``plan`` with every layer demoted to AT LEAST
+    the given backend rung ('fused' | 'staged' | 'einsum').
+
+    Layers already at (or below) the rung are untouched; the others are
+    walked down ``demote_layer_backend`` one rung at a time so each
+    transition is re-priced and recorded in provenance —
+    ``health_report()`` on the result shows exactly what the load
+    ladder traded.  ``backend='fused'`` returns the plan unchanged.
+    """
+    import dataclasses as dc
+
+    if backend not in BACKEND_RUNGS:
+        raise ValueError(f"backend must be one of {BACKEND_RUNGS}, "
+                         f"got {backend!r}")
+    target = BACKEND_RUNGS.index(backend)
+    new_layers = []
+    changed = False
+    for lp in plan.layers:
+        while BACKEND_RUNGS.index(getattr(lp, "backend", "fused")) < target:
+            lp = demote_layer_backend(lp, batch=plan.batch, reason=reason)
+            changed = True
+        new_layers.append(lp)
+    if not changed:
+        return plan
+    return dc.replace(plan, layers=tuple(new_layers))
 
 
 def probe_layer_plan(lp, *, batch: int = 1,
@@ -612,6 +694,102 @@ def harden_network_plan(plan, *, vmem_budget: int = df.TPU_VMEM_BYTES,
             lp = demoted
         new_layers.append(lp)
     return dc.replace(plan, layers=tuple(new_layers))
+
+
+# ---------------------------------------------------------------------------
+# (2b) Per-backend circuit breaker (serving front end)
+# ---------------------------------------------------------------------------
+
+BREAKER_STATES = ("closed", "open", "half_open")
+
+
+@dataclasses.dataclass
+class CircuitBreaker:
+    """Consecutive-failure circuit breaker for one execution backend.
+
+    The serving front end (``launch.spectral_serve``) keeps one breaker
+    per ladder rung ('fused' / 'staged'; einsum is terminal and never
+    gated).  State machine:
+
+      closed     healthy: every request allowed.  ``failure_threshold``
+                 CONSECUTIVE failures open the breaker (one success
+                 resets the count).
+      open       the rung is skipped entirely — requests start one rung
+                 down — until ``cooldown_s`` elapses, when the breaker
+                 moves to half_open.
+      half_open  recovery probing: traffic is allowed through again;
+                 ``recovery_successes`` consecutive successes close the
+                 breaker, a single failure re-opens it (cooldown
+                 restarts).
+
+    ``clock`` is injectable for deterministic tests (any zero-arg
+    callable returning seconds).  Every state change is appended to
+    ``transitions`` and surfaced by ``snapshot()`` — the serve-level
+    ``health_report()`` includes one snapshot per rung.
+    """
+
+    name: str = ""
+    failure_threshold: int = 3
+    cooldown_s: float = 1.0
+    recovery_successes: int = 1
+    clock: Callable[[], float] = time.monotonic
+    state: str = "closed"
+    failures: int = 0                 # consecutive failures
+    successes: int = 0                # consecutive successes (half_open)
+    opened_at: float | None = None
+    n_opens: int = 0
+    transitions: list = dataclasses.field(default_factory=list)
+
+    def _to(self, state: str, why: str) -> None:
+        self.transitions.append({"t": self.clock(), "from": self.state,
+                                 "to": state, "why": why})
+        self.state = state
+
+    def allow(self) -> bool:
+        """May a request be attempted on this backend right now?"""
+        if self.state == "open":
+            if self.clock() - self.opened_at >= self.cooldown_s:
+                self.successes = 0
+                self._to("half_open",
+                         f"cooldown {self.cooldown_s}s elapsed")
+                return True
+            return False
+        return True                   # closed or half_open (probing)
+
+    def record_success(self) -> None:
+        if self.state == "half_open":
+            self.successes += 1
+            if self.successes >= self.recovery_successes:
+                self._to("closed", f"{self.successes} recovery "
+                                   f"probe(s) succeeded")
+                self.failures = 0
+        else:
+            self.failures = 0
+
+    def record_failure(self, reason: str = "") -> None:
+        self.successes = 0
+        if self.state == "half_open":
+            self.opened_at = self.clock()
+            self.n_opens += 1
+            self._to("open", f"recovery probe failed ({reason})"
+                     if reason else "recovery probe failed")
+        elif self.state == "closed":
+            self.failures += 1
+            if self.failures >= self.failure_threshold:
+                self.opened_at = self.clock()
+                self.n_opens += 1
+                self._to("open",
+                         f"{self.failures} consecutive failure(s)"
+                         + (f" ({reason})" if reason else ""))
+
+    def snapshot(self) -> dict:
+        return {
+            "name": self.name,
+            "state": self.state,
+            "consecutive_failures": self.failures,
+            "n_opens": self.n_opens,
+            "transitions": list(self.transitions),
+        }
 
 
 # ---------------------------------------------------------------------------

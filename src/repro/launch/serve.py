@@ -19,7 +19,9 @@ A miniature production server loop:
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
+import json
 import logging
 import time
 
@@ -59,7 +61,9 @@ class Server:
 
     def __init__(self, arch: str, slots: int = 4, max_len: int = 256,
                  config_set: str = "smoke", seed: int = 0,
-                 request_timeout_s: float | None = None):
+                 request_timeout_s: float | None = None,
+                 tick_window: int = 1024,
+                 clock=time.time):
         self.cfg = (configs.get_smoke_config(arch)
                     if config_set == "smoke" else configs.get_config(arch))
         # continuous batching with per-slot positions needs position-
@@ -80,7 +84,12 @@ class Server:
         self.queue: list[Request] = []
         self._decode = jax.jit(
             lambda p, c, t, pos: api.decode(p, self.cfg, t, c, pos))
-        self.tick_times: list[float] = []
+        # injectable time source (tests drive timeouts deterministically)
+        self.clock = clock
+        # bounded: a long-running server must not grow per-tick history
+        # without limit; stats are computed over the trailing window
+        self.tick_times: collections.deque[float] = collections.deque(
+            maxlen=tick_window)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -125,7 +134,7 @@ class Server:
                 try:
                     self._validate(req)
                     self.active[i] = req
-                    req.admitted_at = time.time()
+                    req.admitted_at = self.clock()
                     # positions 0..L-2; the final prompt token is fed by
                     # the next tick so its logits become the first
                     # sampled token
@@ -147,7 +156,7 @@ class Server:
     def _expire(self) -> None:
         if self.request_timeout_s is None:
             return
-        now = time.time()
+        now = self.clock()
         for i in range(self.slots):
             req = self.active[i]
             if req is not None and req.admitted_at is not None \
@@ -168,7 +177,7 @@ class Server:
         for i in act:
             req = self.active[i]
             tokens[i, 0] = (req.prompt[-1] if not req.out else req.out[-1])
-        t0 = time.time()
+        t0 = self.clock()
         try:
             logits, self.cache = self._decode(self.params, self.cache,
                                               jnp.asarray(tokens),
@@ -181,7 +190,7 @@ class Server:
                 self._fail(self.active[i], "decode_error",
                            f"{type(e).__name__}: {e}", slot=i)
             return 0
-        self.tick_times.append(time.time() - t0)
+        self.tick_times.append(self.clock() - t0)
         for i in act:
             req = self.active[i]
             req.out.append(int(nxt[i]))
@@ -194,11 +203,13 @@ class Server:
 
     def run_until_drained(self, max_ticks: int = 10_000) -> dict:
         ticks = 0
+        # keyed by rid: object ids can be reused after GC, so two
+        # distinct requests could collide under id(req) on a long run
         seen: dict[int, Request] = {}
 
         def _track(req: Request | None):
             if req is not None:
-                seen.setdefault(id(req), req)
+                seen.setdefault(req.rid, req)
 
         for r in list(self.queue):
             _track(r)
@@ -211,7 +222,7 @@ class Server:
             ticks += 1
         completed = sum(r.done and not r.failed for r in seen.values())
         failed = sum(r.failed for r in seen.values())
-        times = np.asarray(self.tick_times[1:] or [0.0])
+        times = np.asarray(list(self.tick_times)[1:] or [0.0])
         return {
             "ticks": ticks,
             "completed": completed,
@@ -227,9 +238,15 @@ def main() -> None:
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--new-tokens", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0,
+                   help="seeds both model init and the synthetic "
+                   "prompts, so drained-run stats are reproducible")
+    p.add_argument("--json", default=None,
+                   help="write drained-run stats JSON to this path "
+                   "('-' for stdout) for deterministic CI gating")
     args = p.parse_args()
-    srv = Server(args.arch, slots=args.slots)
-    rng = np.random.default_rng(0)
+    srv = Server(args.arch, slots=args.slots, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         prompt = rng.integers(1, srv.cfg.vocab, size=8).astype(np.int32)
         srv.submit(Request(rid, prompt, args.new_tokens))
@@ -237,6 +254,15 @@ def main() -> None:
     print(f"[serve] {args.requests} requests drained in {stats['ticks']} "
           f"ticks; mean {stats['mean_tick_ms']:.1f} ms "
           f"p95 {stats['p95_tick_ms']:.1f} ms")
+    if args.json:
+        payload = json.dumps({"arch": args.arch, "seed": args.seed,
+                              "requests": args.requests, **stats},
+                             indent=2)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as f:
+                f.write(payload + "\n")
 
 
 if __name__ == "__main__":

@@ -254,3 +254,142 @@ def test_harden_is_noop_on_healthy_plan(mini_plan):
 def test_stats_surface_backend_and_demotions(mini_plan):
     s = mini_plan.layers[0].stats()
     assert s["backend"] == "fused" and s["demotions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Backend-axis rungs (serving ladder)
+# ---------------------------------------------------------------------------
+
+def test_demote_layer_backend_walks_rungs(mini_plan):
+    lp = mini_plan.layers[0]
+    assert lp.backend == "fused"
+    staged = res.demote_layer_backend(lp, reason="test")
+    assert staged.backend == "staged"
+    assert any("fused->staged" in p for p in staged.provenance)
+    einsum = res.demote_layer_backend(staged, reason="test")
+    assert einsum.backend == "einsum"
+    # einsum is terminal: no further rung
+    assert res.demote_layer_backend(einsum) is None
+    # hadamard / input_mode untouched (backend axis only)
+    assert (einsum.hadamard, einsum.input_mode) == \
+        (lp.hadamard, lp.input_mode)
+
+
+def test_plan_at_backend_rung(mini_plan):
+    # already at the top rung: the very same object comes back
+    assert res.plan_at_backend_rung(mini_plan, "fused") is mini_plan
+    down = res.plan_at_backend_rung(mini_plan, "einsum",
+                                    reason="load ladder")
+    assert all(lp.backend == "einsum" for lp in down.layers)
+    assert all(any("load ladder" in p for p in lp.provenance)
+               for lp in down.layers)
+    # idempotent: demoting an already-demoted plan is a no-op
+    assert res.plan_at_backend_rung(down, "staged") is down
+    with pytest.raises(ValueError):
+        res.plan_at_backend_rung(mini_plan, "nonsense")
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_breaker_opens_after_consecutive_failures():
+    clock = _Clock()
+    brk = res.CircuitBreaker(name="fused", failure_threshold=3,
+                             cooldown_s=1.0, clock=clock)
+    assert brk.state == "closed" and brk.allow()
+    brk.record_failure("boom")
+    brk.record_failure("boom")
+    assert brk.state == "closed"        # under threshold
+    brk.record_failure("boom")
+    assert brk.state == "open" and brk.n_opens == 1
+    assert not brk.allow()              # cooldown not elapsed
+
+
+def test_breaker_success_resets_failure_streak():
+    brk = res.CircuitBreaker(name="fused", failure_threshold=2,
+                             clock=_Clock())
+    brk.record_failure("a")
+    brk.record_success()                # streak broken
+    brk.record_failure("b")
+    assert brk.state == "closed"        # failures must be CONSECUTIVE
+    brk.record_failure("c")
+    assert brk.state == "open"
+
+
+def test_breaker_half_open_to_closed_recovery():
+    """The ISSUE-7 satellite: open -> (cooldown) -> half_open probe ->
+    closed, with every transition recorded."""
+    clock = _Clock()
+    brk = res.CircuitBreaker(name="staged", failure_threshold=1,
+                             cooldown_s=2.0, recovery_successes=1,
+                             clock=clock)
+    brk.record_failure("boom")
+    assert brk.state == "open"
+    assert not brk.allow()              # still cooling down
+    clock.t = 5.0
+    assert brk.allow()                  # cooldown elapsed: probe allowed
+    assert brk.state == "half_open"
+    brk.record_success()
+    assert brk.state == "closed" and brk.failures == 0
+    assert [t["to"] for t in brk.transitions] == \
+        ["open", "half_open", "closed"]
+    snap = brk.snapshot()
+    assert snap["state"] == "closed" and snap["n_opens"] == 1
+
+
+def test_breaker_half_open_failure_reopens():
+    clock = _Clock()
+    brk = res.CircuitBreaker(name="staged", failure_threshold=1,
+                             cooldown_s=1.0, clock=clock)
+    brk.record_failure("boom")
+    clock.t = 2.0
+    assert brk.allow() and brk.state == "half_open"
+    brk.record_failure("still broken")
+    assert brk.state == "open" and brk.n_opens == 2
+    assert not brk.allow()              # fresh cooldown from reopen
+    clock.t = 4.0
+    assert brk.allow() and brk.state == "half_open"
+
+
+# ---------------------------------------------------------------------------
+# Plan cache (serving front end)
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_warm_get_invalidate(mini_params):
+    from repro.core.plan import PlanCache, plan_cache_key
+
+    built = []
+
+    def builder(params, cfg, *, batch, **kw):
+        built.append((batch, tuple(sorted(kw))))
+        return types.SimpleNamespace(batch=batch)
+
+    cache = PlanCache(builder=builder)
+    keys = cache.warm(mini_params, MINI, (1, 2))
+    assert set(keys) == {1, 2} and len(cache) == 2
+    assert cache.builds == 2 and cache.build_s >= 0.0
+    # hits never touch the builder
+    p1 = cache.get(mini_params, MINI, 1)
+    assert p1.batch == 1 and cache.hits == 1 and cache.builds == 2
+    # different build kwargs -> different entry, never a collision
+    cache.get(mini_params, MINI, 1, hadamard="scheduled")
+    assert cache.builds == 3 and len(cache) == 3
+    # invalidation forces exactly one rebuild
+    assert cache.invalidate(keys[1])
+    assert not cache.invalidate(keys[1])        # already gone
+    cache.get(mini_params, MINI, 1)
+    assert cache.builds == 4 and cache.invalidations == 1
+    st = cache.stats()
+    assert st["entries"] == 3 and st["builds"] == 4
+    # scalar vs per-layer alpha normalize to the same key
+    seq = dataclasses.replace(MINI, alpha=(4.0,) * len(MINI.layers))
+    assert plan_cache_key(MINI, 1) == plan_cache_key(seq, 1)

@@ -128,3 +128,88 @@ def test_slot_reuse_after_retire():
     for r, p in zip(reqs, prompts):
         expect = _sequential_greedy(srv.cfg, srv.params, p, 4)
         assert r.out == expect
+
+
+class _Clock:
+    """Deterministic time source for the injectable ``clock`` knob."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_timeout_during_multi_slot_drain():
+    """A timeout firing mid-drain retires only the straggler; the
+    other slot's request keeps decoding and finishes correctly."""
+    clock = _Clock()
+    srv = Server("smollm-135m", slots=2, max_len=64,
+                 request_timeout_s=10.0, clock=clock)
+    rng = np.random.default_rng(5)
+    p_fast = rng.integers(1, srv.cfg.vocab, size=4).astype(np.int32)
+    p_slow = rng.integers(1, srv.cfg.vocab, size=4).astype(np.int32)
+    fast = Request(0, p_fast, 3)
+    slow = Request(1, p_slow, 1000)     # cannot finish before timeout
+    srv.submit(fast)
+    srv.submit(slow)
+    for _ in range(3):                  # fast completes within budget
+        srv.tick()
+    assert fast.done and not fast.failed
+    clock.t = 100.0                     # past the straggler's budget
+    stats = srv.run_until_drained(max_ticks=20)
+    assert slow.failed and slow.error["code"] == "timeout"
+    assert stats["ticks"] < 20          # drained, not tick-starved
+    expect = _sequential_greedy(srv.cfg, srv.params, p_fast, 3)
+    assert fast.out == expect
+
+
+def test_slot_reuse_after_expired_request():
+    """A slot freed by a timeout must serve the next queued request
+    without contamination from the expired occupant."""
+    clock = _Clock()
+    srv = Server("smollm-135m", slots=1, max_len=64,
+                 request_timeout_s=5.0, clock=clock)
+    rng = np.random.default_rng(6)
+    p_stuck = rng.integers(1, srv.cfg.vocab, size=4).astype(np.int32)
+    p_next = rng.integers(1, srv.cfg.vocab, size=4).astype(np.int32)
+    stuck = Request(0, p_stuck, 1000)
+    nxt = Request(1, p_next, 4)
+    srv.submit(stuck)
+    srv.submit(nxt)
+    srv.tick()                          # stuck occupies the only slot
+    clock.t = 10.0                      # expire it
+    srv.run_until_drained(max_ticks=50)
+    assert stuck.failed and stuck.error["code"] == "timeout"
+    assert not nxt.failed
+    expect = _sequential_greedy(srv.cfg, srv.params, p_next, 4)
+    assert nxt.out == expect
+
+
+def test_all_invalid_queue_does_not_starve():
+    """When every queued request fails validation, the admit loop must
+    retire them all and drain immediately — not spin forever offering
+    the slot to an always-failing queue."""
+    srv = Server("smollm-135m", slots=2, max_len=64)
+    reqs = [Request(i, np.asarray([], np.int32), 4) for i in range(5)]
+    for r in reqs:
+        srv.submit(r)
+    stats = srv.run_until_drained(max_ticks=10)
+    assert stats["failed"] == 5 and stats["completed"] == 0
+    assert stats["ticks"] <= 2          # no starvation / spin
+    assert all(r.error["code"] == "bad_request" for r in reqs)
+    assert not srv.queue and not any(srv.active)
+
+
+def test_tick_times_bounded():
+    """tick_times is a fixed-size window: a long-running server must
+    not accumulate unbounded per-tick history."""
+    srv = Server("smollm-135m", slots=1, max_len=64, tick_window=4)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, srv.cfg.vocab, size=3).astype(np.int32)
+    req = Request(0, prompt, 12)        # 12 decode ticks > window
+    srv.submit(req)
+    stats = srv.run_until_drained()
+    assert req.done and not req.failed
+    assert len(srv.tick_times) == 4     # trailing window only
+    assert np.isfinite(stats["mean_tick_ms"])

@@ -1,0 +1,281 @@
+"""Overload-resilient spectral serving: admission control, deadlines,
+batch bucketing over the warmed plan cache, the load-triggered
+degradation ladder, per-backend circuit breakers, serve-level fault
+sites and the chaos soak."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg16_spectral
+from repro.core import resilience as res
+from repro.core.plan import PlanCache
+from repro.launch import spectral_serve as ss
+from repro.models import cnn
+from repro.testing import faults
+
+CFG = vgg16_spectral.SMOKE
+BUCKETS = (1, 2)
+PLAN_KW = {"hadamard": "scheduled"}   # gives serve_plan_cache a table
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    """One PlanCache for the whole module — plan builds are the
+    expensive part, and every server here uses the same (cfg, buckets,
+    build kwargs), so they can share compiled plans."""
+    return PlanCache()
+
+
+def make_server(shared_cache, **kw):
+    clock = ss.ManualClock()
+    kw.setdefault("buckets", BUCKETS)
+    kw.setdefault("queue_limit", 4)
+    kw.setdefault("plan_kwargs", dict(PLAN_KW))
+    srv = ss.SpectralServer(CFG, clock=clock, plan_cache=shared_cache,
+                            **kw)
+    return srv, clock
+
+
+def oracle(srv, images):
+    """Einsum-oracle logits for a stack of [C,H,W] images."""
+    b = len(images)
+    plan = srv.plans.get(srv.params, CFG, srv._bucket_for(b),
+                         **srv.plan_kwargs)
+    x = np.zeros((srv._bucket_for(b),) + srv.image_shape, np.float32)
+    for i, img in enumerate(images):
+        x[i] = img
+    y = cnn.forward_spectral(srv.params, plan, jnp.asarray(x),
+                             backend="einsum")
+    return np.asarray(y)[:b]
+
+
+def test_admission_control_and_shedding(shared_cache):
+    """Queue is bounded: excess requests shed immediately with a
+    structured 'overloaded' response; malformed images fail
+    structurally; nothing queues unboundedly."""
+    srv, _ = make_server(shared_cache, queue_limit=2)
+    reqs = ss.synthetic_requests(5, CFG, seed=0)
+    bad = ss.InferenceRequest(rid=99, image=np.zeros((1, 4, 4),
+                                                     np.float32))
+    for r in reqs:
+        srv.submit(r)
+    srv.submit(bad)
+    assert [r.code for r in reqs] == [None, None, "overloaded",
+                                      "overloaded", "overloaded"]
+    assert all("queue full" in r.error for r in reqs[2:])
+    assert bad.code == "failed" and "bad_request" in bad.error
+    assert len(srv.queue) == 2
+    stats = srv.run_until_drained()
+    assert all(r.terminal for r in reqs)
+    assert stats["counters"]["ok"] == 2
+    assert stats["counters"]["overloaded"] == 3
+    assert stats["loop_deaths"] == 0
+
+
+def test_deadline_expiry_before_execution(shared_cache):
+    """A queued request whose deadline passes retires with
+    'deadline_exceeded' and never touches a kernel; requests with
+    slack execute normally."""
+    srv, clock = make_server(shared_cache)
+    tight = ss.synthetic_requests(2, CFG, seed=1, deadline_s=1.0)
+    loose = ss.synthetic_requests(1, CFG, seed=7, rid0=10)[0]
+    for r in tight:
+        srv.submit(r)
+    srv.submit(loose)
+    clock.advance(2.0)          # past the tight deadlines, pre-exec
+    srv.run_until_drained()
+    assert [r.code for r in tight] == ["deadline_exceeded"] * 2
+    assert all(r.logits is None for r in tight)
+    assert loose.code == "ok"
+    ref = oracle(srv, [loose.image])
+    assert float(np.abs(ref[0] - loose.logits).max()) <= 1e-5
+
+
+def test_bucketing_parity_and_warm_cache(shared_cache):
+    """Requests are padded into the smallest fitting bucket and the
+    answers match the einsum oracle; serving never triggers a plan
+    build (the cache was warmed at startup)."""
+    srv, _ = make_server(shared_cache, queue_limit=8)
+    builds_before = srv.plans.builds
+    reqs = ss.synthetic_requests(3, CFG, seed=2)
+    for r in reqs:
+        srv.submit(r)
+    stats = srv.run_until_drained()
+    assert stats["counters"]["ok"] == 3
+    # 3 requests over buckets (1, 2): one batch of 2, one of 1
+    assert stats["batches"] == 2
+    assert all(r.rung == "fused" for r in reqs)
+    ref = oracle(srv, [r.image for r in reqs[:2]])
+    for r, y in zip(reqs[:2], ref):
+        assert float(np.abs(y - r.logits).max()) <= 1e-5
+    assert srv.plans.builds == builds_before   # zero request-path builds
+
+
+def test_load_ladder_demotes_and_promotes(shared_cache):
+    """Queue pressure >= demote_pressure demotes the serving rung one
+    step; pressure clearing promotes back, and every transition (with
+    the pressure that drove it) is in health_report()."""
+    srv, _ = make_server(shared_cache, queue_limit=4,
+                         demote_patience=1, promote_patience=1)
+    reqs = ss.synthetic_requests(4, CFG, seed=3)
+    for r in reqs:
+        srv.submit(r)
+    stats = srv.run_until_drained()
+    health = srv.health_report()
+    assert stats["demotions"] >= 1 and stats["promotions"] >= 1
+    dirs = [t["direction"] for t in health["transitions"]]
+    assert "demote" in dirs and "promote" in dirs
+    assert all({"tick", "t", "from", "to", "reason", "pressure"}
+               <= set(t) for t in health["transitions"])
+    # first transition: full queue -> one rung down
+    first = health["transitions"][0]
+    assert (first["direction"], first["from"], first["to"]) == \
+        ("demote", "fused", "staged")
+    assert first["pressure"] >= srv.demote_pressure
+    # pressure cleared -> back on the fast path
+    assert health["rung"] == "fused"
+    assert all(r.code == "ok" for r in reqs)
+
+
+def test_serve_kernel_fault_retries_down_and_breaker_recovers(
+        shared_cache):
+    """A kernel fault mid-request fails onto the next rung within the
+    same tick (no dropped request), opens the backend's breaker, and
+    the breaker walks open -> half_open -> closed once the fault
+    clears and the cooldown elapses."""
+    srv, clock = make_server(shared_cache, breaker_failures=1,
+                             breaker_cooldown_s=1.0)
+    r1 = ss.synthetic_requests(1, CFG, seed=4)[0]
+    with faults.inject("serve_kernel", backend="fused") as fault:
+        srv.submit(r1)
+        srv.run_until_drained(cooldown_ticks=0)
+    assert fault.fires == 1
+    assert r1.code == "ok" and r1.rung == "staged"
+    ref = oracle(srv, [r1.image])
+    assert float(np.abs(ref[0] - r1.logits).max()) <= 1e-5
+    brk = srv.breakers["fused"]
+    assert brk.state == "open" and brk.n_opens == 1
+
+    # still inside the cooldown: fused is skipped without an attempt
+    r2 = ss.synthetic_requests(1, CFG, seed=5, rid0=1)[0]
+    srv.submit(r2)
+    srv.run_until_drained(cooldown_ticks=0)
+    assert r2.code == "ok" and r2.rung == "staged"
+    assert brk.state == "open"
+
+    # cooldown elapsed: half-open probe succeeds and closes the breaker
+    clock.advance(2.0)
+    r3 = ss.synthetic_requests(1, CFG, seed=6, rid0=2)[0]
+    srv.submit(r3)
+    srv.run_until_drained(cooldown_ticks=0)
+    assert r3.code == "ok" and r3.rung == "fused"
+    assert brk.state == "closed"
+    states = [t["to"] for t in brk.transitions]
+    assert states == ["open", "half_open", "closed"]
+
+
+def test_all_rungs_failing_is_a_structured_failure(shared_cache):
+    """Even when every rung (einsum included) faults, the request gets
+    a terminal 'failed' response and the loop survives."""
+    srv, _ = make_server(shared_cache)
+    req = ss.synthetic_requests(1, CFG, seed=8)[0]
+    with faults.inject("serve_kernel"):        # no match: all backends
+        srv.submit(req)
+        stats = srv.run_until_drained(cooldown_ticks=0)
+    assert req.code == "failed"
+    assert "einsum" in req.error
+    assert stats["loop_deaths"] == 0
+    # and the server still works afterwards
+    ok = ss.synthetic_requests(1, CFG, seed=9, rid0=1)[0]
+    srv.submit(ok)
+    srv.run_until_drained(cooldown_ticks=0)
+    assert ok.code == "ok"
+
+
+def test_plan_cache_corruption_served_by_einsum(shared_cache):
+    """A corrupted plan coming out of the cache is caught by
+    validate_plan on fetch and the batch is served via the einsum
+    terminal rung (which never reads the tables) — exact answers, no
+    silent execution of a bad plan."""
+    srv, _ = make_server(shared_cache)
+    req = ss.synthetic_requests(1, CFG, seed=10)[0]
+    with faults.inject("serve_plan_cache") as fault:
+        srv.submit(req)
+        srv.run_until_drained(cooldown_ticks=0)
+        assert 1 in srv.health_report()["plan_cache"]["corrupt_buckets"]
+    assert fault.fires >= 1
+    assert req.code == "ok" and req.rung == "einsum"
+    ref = oracle(srv, [req.image])
+    assert float(np.abs(ref[0] - req.logits).max()) == 0.0
+    assert srv.counters["plan_cache_corruptions"] >= 1
+    # corruption cleared: next fetch validates pristine and recovers
+    ok = ss.synthetic_requests(1, CFG, seed=11, rid0=1)[0]
+    srv.submit(ok)
+    srv.run_until_drained(cooldown_ticks=0)
+    assert ok.code == "ok" and ok.rung == "fused"
+    assert srv.health_report()["plan_cache"]["corrupt_buckets"] == []
+
+
+def test_slow_injection_advances_clock_and_counts(shared_cache):
+    """serve_slow adds service seconds on the virtual clock (deadline
+    pressure without wall-clock sleeps) and is counted."""
+    srv, clock = make_server(shared_cache)
+    req = ss.synthetic_requests(1, CFG, seed=12)[0]
+    t0 = clock()
+    with faults.inject("serve_slow"):
+        srv.submit(req)
+        srv.run_until_drained(cooldown_ticks=0)
+    assert req.code == "ok"
+    assert clock() - t0 == pytest.approx(faults.SLOW_EXTRA_S)
+    assert srv.counters["slow_injections"] == 1
+    assert req.latency_s >= faults.SLOW_EXTRA_S
+
+
+def test_loop_death_is_contained(shared_cache, monkeypatch):
+    """A tick-level exception (outside per-request isolation) is
+    counted as a loop death, fails at most the queue head, and the
+    drain continues for everyone else."""
+    srv, _ = make_server(shared_cache, queue_limit=8)
+    reqs = ss.synthetic_requests(4, CFG, seed=13)
+    for r in reqs:
+        srv.submit(r)
+    real = srv._take_batch
+    calls = {"n": 0}
+
+    def explode_once(now):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected tick explosion")
+        return real(now)
+
+    monkeypatch.setattr(srv, "_take_batch", explode_once)
+    stats = srv.run_until_drained()
+    assert stats["loop_deaths"] == 1
+    assert all(r.terminal for r in reqs)
+    assert sum(r.code == "failed" for r in reqs) == 1
+    assert sum(r.code == "ok" for r in reqs) == 3
+
+
+def test_chaos_soak_drains_with_all_gates(shared_cache):
+    """ISSUE 7 acceptance: the deterministic 4x-capacity fault-injected
+    burst drains with zero loop deaths, every request terminal, excess
+    shed, >= 1 load demotion AND promotion, every fault site exercised
+    and every completed answer within 1e-5 of the einsum oracle."""
+    rep = faults.chaos_soak(queue_limit=8, seed=0)
+    assert rep["failed_gates"] == [], rep["gates"]
+    assert rep["requests"] >= 4 * rep["queue_limit"]
+    assert rep["stats"]["loop_deaths"] == 0
+    assert rep["oracle_max_abs_err"] <= 1e-5
+    health = rep["health"]
+    dirs = [t["direction"] for t in health["transitions"]]
+    assert "demote" in dirs and "promote" in dirs
+
+
+def test_synthetic_requests_deterministic():
+    a = ss.synthetic_requests(3, CFG, seed=42)
+    b = ss.synthetic_requests(3, CFG, seed=42)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.image, rb.image)
+    c = ss.synthetic_requests(1, CFG, seed=43)
+    assert float(np.abs(a[0].image - c[0].image).max()) > 0
