@@ -37,17 +37,22 @@ BENCH_serve.json schema
       that drove them, breaker snapshots, plan-cache counters.
   chaos
       the full ``chaos_soak`` report (present with ``--chaos``).
-  known_gaps[]
-      tracked, NON-gating regressions.  Currently: smoke batch-8
-      fused latency trails the einsum oracle (BENCH_e2e.json
-      latency.smoke.batch8) — the baseline for ROADMAP item 1's
-      batch-aware autotune work.
+  batch_sweep
+      the per-bucket serving table: one plan per bucket, tuned AT that
+      batch (``dataflow.INTERPRET_STEP_S`` priced in — calibrated to
+      zero, see its comment), fused vs einsum wall clock at
+      every bucket, and the GATING acceptance boolean
+      ``fused_le_einsum_all_buckets``.  This graduated from the old
+      ``known_gaps`` batch-8 entry (fused 92.9 ms vs einsum 81.3 ms
+      when batch-8 buckets inherited batch-1 block choices — ROADMAP
+      items 1+2, fixed by the batch-aware autotune + manual-DMA
+      accumulators).
   gates / failed_gates
       pass/fail booleans; any False exits nonzero AFTER the report is
       written (CI blocks, artifact stays inspectable).
 
 ``--merge-into BENCH_e2e.json`` additionally folds a summary (load
-stats + gate status + known_gaps) into the e2e report under a
+stats + gate status + batch_sweep) into the e2e report under a
 ``serve`` key, atomically, so the serving columns live next to the
 latency/traffic ones.
 """
@@ -62,10 +67,6 @@ import tempfile
 import time
 
 import jax
-
-# fallback to the committed full-run numbers if BENCH_e2e.json is absent
-_BATCH8_FUSED_MS_FALLBACK = 92.9
-_BATCH8_EINSUM_MS_FALLBACK = 81.3
 
 
 def load_bench(*, queue_limit: int = 16, seed: int = 0,
@@ -125,34 +126,61 @@ def load_bench(*, queue_limit: int = 16, seed: int = 0,
     }
 
 
-def known_gaps(e2e_path: str = "BENCH_e2e.json") -> list[dict]:
-    """Tracked non-gating regressions, with live numbers when the e2e
-    report is on disk."""
-    fused_ms, einsum_ms = (_BATCH8_FUSED_MS_FALLBACK,
-                           _BATCH8_EINSUM_MS_FALLBACK)
-    source = "fallback (committed full-run values)"
-    try:
-        with open(e2e_path) as f:
-            row = json.load(f)["latency"]["smoke"]["batch8"]
-        fused_ms = row["pallas_fused_ms"]
-        einsum_ms = row["einsum_ms"]
-        source = f"{e2e_path}:latency.smoke.batch8"
-    except (OSError, KeyError, ValueError):
-        pass
-    return [{
-        "id": "batch8-fused-slower-than-einsum",
-        "gating": False,
-        "fused_ms": fused_ms,
-        "einsum_ms": einsum_ms,
-        "source": source,
-        "detail": "smoke batch-8 fused latency trails the einsum "
-                  "oracle — the Alg-1 cost model tunes blocks per "
-                  "layer but not per batch, so large-batch buckets "
-                  "inherit batch-1 block choices.  Tracked baseline "
-                  "for ROADMAP item 1 (batch-aware autotune); the "
-                  "serving ladder sidesteps it today by demoting to "
-                  "einsum under pressure.",
-    }]
+def batch_sweep(*, buckets=(1, 2, 4, 8), seed: int = 0, iters: int = 3,
+                quick: bool = False) -> dict:
+    """GATING per-bucket sweep: one plan per serving bucket, tuned AT
+    that batch (step overhead priced for the interpret backend), fused
+    vs einsum wall clock.  The fused rung must beat or match the
+    oracle it degrades to at EVERY bucket — otherwise the serving
+    ladder's best rung would be slower than its own fallback."""
+    from repro.configs import vgg16_spectral
+    from repro.core import dataflow as df
+    from repro.core.plan import build_network_plan
+    from repro.models import cnn
+    import jax.numpy as jnp
+
+    cfg = vgg16_spectral.SMOKE
+    key = jax.random.PRNGKey(seed)
+    params = cnn.init(key, cfg)
+    step_s = (df.INTERPRET_STEP_S if jax.default_backend() != "tpu"
+              else 0.0)
+    iters = 1 if quick else iters
+    per_bucket = {}
+    for b in buckets:
+        plan = build_network_plan(params, cfg, batch=b,
+                                  step_overhead_s=step_s)
+        x = jax.random.normal(key, (b, 3, cfg.image_size,
+                                    cfg.image_size), jnp.float32)
+
+        def timed(backend):
+            fn = lambda: cnn.forward_spectral(params, plan, x,
+                                              backend=backend)
+            jax.block_until_ready(fn())          # compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn()
+            jax.block_until_ready(out)
+            return 1e3 * (time.perf_counter() - t0) / iters
+
+        fused_ms = timed("pallas_fused")
+        einsum_ms = timed("einsum")
+        per_bucket[f"batch{b}"] = {
+            "fused_ms": fused_ms,
+            "einsum_ms": einsum_ms,
+            "fused_le_einsum": bool(fused_ms <= einsum_ms),
+            "tuned_flows": sorted({lp.tuning.flow
+                                   for lp in plan.layers}),
+            "tuned_input_modes": sorted({lp.input_mode
+                                         for lp in plan.layers}),
+        }
+    return {
+        "buckets": list(buckets),
+        "iters": iters,
+        "step_overhead_s": step_s,
+        "per_bucket": per_bucket,
+        "fused_le_einsum_all_buckets": all(
+            r["fused_le_einsum"] for r in per_bucket.values()),
+    }
 
 
 def _write_report_atomic(report: dict, path: str) -> None:
@@ -192,7 +220,7 @@ def _merge_into_e2e(report: dict, path: str) -> None:
         "chaos_failed_gates": report.get("chaos", {}).get(
             "failed_gates"),
         "failed_gates": report["failed_gates"],
-        "known_gaps": report["known_gaps"],
+        "batch_sweep": report["batch_sweep"],
     }
     _write_report_atomic(e2e, path)
 
@@ -247,19 +275,28 @@ def main() -> None:
             queue_limit=args.queue_limit, seed=args.seed,
             log=lambda m: print(f"      {m}"))
 
-    print(f"[{n_steps}/{n_steps}] known gaps (non-gating)")
-    report["known_gaps"] = known_gaps()
-    for gap in report["known_gaps"]:
-        print(f"      {gap['id']}: fused {gap['fused_ms']:.1f} ms vs "
-              f"einsum {gap['einsum_ms']:.1f} ms ({gap['source']})")
+    print(f"[{n_steps}/{n_steps}] batch sweep: per-bucket fused vs "
+          f"einsum, batch-tuned plans (GATING)")
+    report["batch_sweep"] = batch_sweep(seed=args.seed, quick=args.quick)
+    for name, row in sorted(report["batch_sweep"]["per_bucket"].items()):
+        mark = "<=" if row["fused_le_einsum"] else "> !!"
+        print(f"      {name}: fused {row['fused_ms']:.1f} ms {mark} "
+              f"einsum {row['einsum_ms']:.1f} ms "
+              f"(flows {','.join(row['tuned_flows'])}; input "
+              f"{','.join(row['tuned_input_modes'])})")
 
     failed = [f"load.{g}" for g in report["load"]["failed_gates"]]
     if "chaos" in report:
         failed += [f"chaos.{g}" for g in report["chaos"]["failed_gates"]]
+    if not report["batch_sweep"]["fused_le_einsum_all_buckets"]:
+        failed.append("batch_sweep.fused_le_einsum_all_buckets")
     report["gates"] = {
         "load": report["load"]["gates"],
         **({"chaos": report["chaos"]["gates"]} if "chaos" in report
            else {}),
+        "batch_sweep": {
+            "fused_le_einsum_all_buckets":
+                report["batch_sweep"]["fused_le_einsum_all_buckets"]},
     }
     report["failed_gates"] = failed
 

@@ -49,8 +49,12 @@ def predict_seconds(c: dict) -> float:
     ``tpu_flow_cost`` rows have none).  Public because the degradation
     ladder (``core.resilience.demote_layer``) re-prices demoted
     configurations through the same formula, keeping
-    ``FusedTuning.predicted_s`` honest after a demotion."""
-    return c.get("serial_s", 0.0) + max(c["hbm_s"], c["compute_s"])
+    ``FusedTuning.predicted_s`` honest after a demotion.  'step_s' is
+    the per-grid-step dispatch overhead term (zero unless the caller
+    priced the model with ``step_overhead_s`` — the interpret-mode
+    serving stack does, see ``dataflow.INTERPRET_STEP_S``)."""
+    return (c.get("serial_s", 0.0) + c.get("step_s", 0.0)
+            + max(c["hbm_s"], c["compute_s"]))
 
 
 _predict = predict_seconds
@@ -75,10 +79,11 @@ class FusedTuning:
     block_p: int
     hbm_bytes: float
     vmem_bytes: float
-    predicted_s: float           # serial_s + max(hbm_s, compute_s)
+    predicted_s: float           # serial_s + step_s + max(hbm_s, compute_s)
     measured_s: float | None = None
     hadamard: str | None = None
     input_mode: str | None = None
+    grid_steps: float | None = None   # gn*gm*gp of the priced grid
 
     def kwargs(self) -> dict:
         """Keyword arguments for ``fused_spectral_conv2d`` — includes
@@ -95,20 +100,25 @@ def _layer_candidates(layer: df.ConvLayer, fft_size: int, batch: int,
                       blocks: Sequence[int], hw_safe: bool,
                       flows: Sequence[str] = FLOWS
                       ) -> Iterable[tuple[str, int, int, int]]:
+    # ``hw_safe`` is accepted for API compatibility but no longer prunes:
+    # the RMW flows accumulate through manually DMA'd tiles (PR 8), so a
+    # non-consecutive output revisit is legal on hardware for every
+    # (flow, block) combination.
+    del hw_safe
     t = layer.tiles(fft_size) * batch
-    bns = sorted({min(b, layer.c_out) for b in blocks})
-    bms = sorted({min(b, layer.c_in) for b in blocks})
-    bps = sorted({min(b, t) for b in blocks})
+    # Full-dimension blocks join the power-of-two candidates so that the
+    # configuration space at batch B strictly contains the batch-1 space
+    # (per-image tiles stay a candidate at every batch — this is what
+    # makes the per-image predicted cost non-increasing in batch along
+    # the doubling chain; see tests/test_batch_amortized.py).
+    bns = sorted({min(b, layer.c_out) for b in blocks} | {layer.c_out})
+    bms = sorted({min(b, layer.c_in) for b in blocks} | {layer.c_in})
+    t_img = layer.tiles(fft_size)
+    doubling = {t_img * (1 << i)
+                for i in range(max(1, batch).bit_length())}
+    bps = sorted({min(b, t) for b in blocks} | {t}
+                 | {d for d in doubling if d <= t})
     for flow, bn, bm, bp in itertools.product(flows, bns, bms, bps):
-        if hw_safe:
-            # RMW flows accumulate into an output window revisited across
-            # the m grid axis; on TPU hardware the revisit must be
-            # consecutive, i.e. a single p (ws) / n (is) block (see
-            # kernels.fused_spectral_conv docstring).
-            if flow == "weight_stationary" and bp < t:
-                continue
-            if flow == "input_stationary" and bn < layer.c_out:
-                continue
         yield flow, bn, bm, bp
 
 
@@ -123,6 +133,7 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
                    input_modes: Sequence[str] | None = None,
                    schedule_r: int = df.SCHEDULE_R,
                    schedule_mu: float = df.SCHEDULE_MU,
+                   step_overhead_s: float = 0.0,
                    cost_fn: Callable | None = None,
                    measure_fn: Callable[[FusedTuning], float] | None = None,
                    measure_top_k: int = 3) -> FusedTuning:
@@ -148,18 +159,24 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
     ``df.INPUT_MODES`` ranking the host-materialized window stream
     against the in-kernel halo gather per candidate; the winner lands
     in ``FusedTuning.input_mode``.  None keeps the legacy windowed
-    costing and ``input_mode=None`` on the result.  A 'halo'
-    weight-stationary candidate is only hardware-safe at batch 1 (the
-    halo p axis cannot merge images into one block, so the consecutive-
-    revisit requirement caps the grid at one image) — ``hw_safe``
-    drops it otherwise.
+    costing and ``input_mode=None`` on the result.
+
+    ``step_overhead_s`` prices a fixed cost per grid step (gn*gm*gp),
+    landing in the cost rows' 'step_s'.  The default 0.0 keeps the
+    pure byte/flop roofline; the interpret-mode serving stack and the
+    benchmarks pass ``dataflow.INTERPRET_STEP_S`` so per-bucket plans
+    minimize the wall clock of the backend that actually runs.
+
+    ``hw_safe`` is accepted for API compatibility but is a no-op since
+    PR 8: the fused kernel accumulates through manually DMA'd tiles,
+    so every (flow, block, input_mode, batch) combination is legal on
+    hardware — including halo + weight-stationary at batch > 1.
 
     Measured pass (optional): re-rank the ``measure_top_k`` best
-    analytic candidates by ``measure_fn`` wall time.  ``hw_safe``
-    (default) keeps only configurations the fused kernel accepts on
-    real TPU.  ``cost_fn`` defaults to the fused kernel's model; pass
-    ``dataflow.tpu_flow_cost`` (with hw_safe=False) to tune the staged
-    Hadamard under the same selection policy.
+    analytic candidates by ``measure_fn`` wall time.  ``cost_fn``
+    defaults to the fused kernel's model; pass
+    ``dataflow.tpu_flow_cost`` to tune the staged Hadamard under the
+    same selection policy.
     """
     if cost_fn is None:
         cost_fn = df.tpu_fused_flow_cost
@@ -173,6 +190,8 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
                                       "mu": schedule_mu}
         if imode is not None:
             kw["input_mode"] = imode
+        if step_overhead_s:
+            kw["step_overhead_s"] = step_overhead_s
         return cost_fn(layer, fft_size, alpha, bn, bp, bm, flow,
                        batch=batch, active_bins=active_bins, **kw)
 
@@ -181,16 +200,14 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
                                               blocks, hw_safe, flows):
         for mode in modes:
             for imode in imodes:
-                if (hw_safe and imode == "halo" and batch > 1
-                        and flow == "weight_stationary"):
-                    continue
                 c = cost(bn, bp, bm, flow, mode, imode)
                 if c["vmem_bytes"] > vmem_budget:
                     continue
                 scored.append(FusedTuning(
                     layer.name, flow, bn, bm, bp, c["hbm_bytes"],
                     c["vmem_bytes"], _predict(c),
-                    hadamard=mode, input_mode=imode))
+                    hadamard=mode, input_mode=imode,
+                    grid_steps=c.get("grid_steps")))
     if not scored:
         # Nothing fits the budget: return the smallest-footprint config
         # anyway.  Interpret mode runs it regardless; on real TPU an
@@ -199,18 +216,15 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
         # shrink blocks/batch before hitting that opaque error.
         flow = flows[0]
         bn = bm = bp = min(blocks)
-        if hw_safe:
-            # keep the fallback accepted by the kernel on hardware: the
-            # RMW flows need a single p (ws) / n (is) block (see above)
-            if flow == "weight_stationary":
-                bp = layer.tiles(fft_size) * batch
-            elif flow == "input_stationary":
-                bn = layer.c_out
         c = cost(bn, bp, bm, flow, modes[0], imodes[0])
         return FusedTuning(layer.name, flow, bn, bm, bp, c["hbm_bytes"],
                            c["vmem_bytes"], _predict(c),
-                           hadamard=modes[0], input_mode=imodes[0])
-    scored.sort(key=lambda tn: (tn.predicted_s, tn.hbm_bytes))
+                           hadamard=modes[0], input_mode=imodes[0],
+                           grid_steps=c.get("grid_steps"))
+    scored.sort(key=lambda tn: (tn.predicted_s,
+                                tn.grid_steps if tn.grid_steps is not None
+                                else 0.0,
+                                tn.hbm_bytes))
     if measure_fn is None:
         return scored[0]
     best, best_t = None, float("inf")
@@ -233,6 +247,7 @@ def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
                      input_modes: Sequence[str] | None = None,
                      schedule_r: int = df.SCHEDULE_R,
                      schedule_mu: float = df.SCHEDULE_MU,
+                     step_overhead_s: float = 0.0,
                      measure: bool = False,
                      interpret: bool | None = None
                      ) -> dict[str, FusedTuning]:
@@ -250,8 +265,9 @@ def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
         exceeds it are dropped.
       blocks: candidate block sizes for each of block_n/block_m/block_p
         (clamped to the layer dims).
-      hw_safe: only emit configurations the fused kernel accepts on
-        real TPU (RMW flows need a consecutive accumulation revisit).
+      hw_safe: accepted for API compatibility; a no-op since PR 8
+        (manual-DMA accumulators make every configuration legal on
+        hardware).
       active_bins: optional {layer name: Fa} — the compacted bin count
         realized by that layer's pruned kernels, so the cost model sees
         the kernel Alg 2 compressed.
@@ -265,6 +281,9 @@ def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
       schedule_r / schedule_mu: Alg-2 replica count and estimated Eq-14
         utilization used to cost 'scheduled' candidates — keep them in
         sync with what the tables will actually be compiled with.
+      step_overhead_s: fixed cost per grid step added to predictions
+        (``dataflow.INTERPRET_STEP_S`` for interpret-mode serving;
+        default 0.0 keeps the pure roofline).
       measure: re-rank top analytic candidates by wall time on
         synthetic layer data (``interpret`` as in the kernels).
 
@@ -286,6 +305,7 @@ def autotune_network(layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS,
             active_bins=(active_bins or {}).get(layer.name),
             hadamard_modes=hadamard_modes, input_modes=input_modes,
             schedule_r=schedule_r, schedule_mu=schedule_mu,
+            step_overhead_s=step_overhead_s,
             measure_fn=measure_fn)
     return plan
 

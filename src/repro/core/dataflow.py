@@ -257,6 +257,29 @@ TPU_PEAK_FLOPS = 197e12
 TPU_VMEM_BYTES = 16 * 2 ** 20   # ~16 MiB usable kernel working set
 TPU_ICI_GBPS = 50e9
 
+# Double-buffered VMEM accumulator slots the fused kernel's manual-DMA
+# output path cycles through (PR 8): slot = linearized_grid_step %
+# DMA_SLOTS, so an inbound psum prefetch for one step never collides
+# with the previous step's write-back semaphore.  Shared by
+# kernels.fused_spectral_conv (scratch allocation) and
+# core.resilience.validate_plan (slot-budget invariant); lives here
+# because both may not import each other.
+DMA_SLOTS = 2
+
+# Per-grid-step overhead priced into INTERPRET-mode plans, passed as
+# ``tpu_fused_flow_cost(step_overhead_s=...)`` by the serving stack and
+# the benchmarks.  Calibrated to ZERO: measured bucket sweeps
+# (benchmarks/e2e_latency.py batch sweep on SMOKE) show interpret wall
+# clock tracks the byte model's ranking — the serial windowed relayout
+# dominates long before step count does — and because the predicted
+# roofline times are microsecond-scale, ANY materially nonzero per-step
+# price overturns byte preferences toward fewer-step windowed configs
+# that are 2-3x slower on the wall clock.  Exact byte ties still
+# resolve toward fewer dispatches structurally: autotune sorts on
+# (predicted_s, grid_steps, hbm_bytes).  The step axis stays available
+# through ``step_overhead_s`` for calibration on real hardware.
+INTERPRET_STEP_S = 0.0
+
 # The paper's three reuse choices as Pallas grid iteration orders —
 # canonical name list shared by the kernels, the cost models below and
 # the autotuner (core.autotune).
@@ -365,7 +388,8 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                         hadamard: str | None = None,
                         r: int = SCHEDULE_R,
                         mu: float = SCHEDULE_MU,
-                        input_mode: str | None = None) -> dict[str, float]:
+                        input_mode: str | None = None,
+                        step_overhead_s: float = 0.0) -> dict[str, float]:
     """HBM traffic + VMEM working set of ONE fused pallas_call
     (``kernels.fused_spectral_conv``): FFT + Hadamard + IFFT (+ fused
     bias/ReLU epilogue) in a single kernel, so HBM only ever sees
@@ -421,14 +445,35 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                        per the same flow factor, plus the one-hot
                        gather selectors once; no materialization pass
                        exists at all.
+      step_overhead_s: fixed cost per GRID STEP (dispatch + pipeline
+        prologue + per-step DMA issue), added to the predicted latency
+        as ``grid_steps * step_overhead_s`` (the ``step_s`` field).
+        Default 0.0 keeps the pure byte/flop roofline; serving and the
+        interpret-mode benchmarks pass ``INTERPRET_STEP_S`` (itself
+        calibrated to zero — see its comment — but kept as the single
+        knob for real-hardware calibration).  At larger batch the step
+        count per image shrinks with bigger p blocks, which is exactly
+        the kernel-amortization axis of the paper's reuse tradeoff.
+
+    Batch amortization note: ``batch`` scales the tile count
+    P = T * batch, so every per-whole-call byte term that does NOT
+    scale with P — kernel planes / Alg-2 tables (ws streams them ONCE
+    per call, i.e. once per batch, not once per image) and the one-off
+    selector/materialization bytes — is amortized over the batch in the
+    returned ``per_image_*`` fields.  That is SPEC2's kernel-reuse
+    prediction: per-image fused cost is non-increasing in batch (along
+    the doubling bucket chain; see ``tests/test_batch_amortized.py``).
 
     Returns a dict with ``hbm_bytes``, ``kernel_hbm_bytes`` (the
     W-operand share of hbm_bytes, re-read factors included),
     ``input_hbm_bytes`` (the X-operand share: stream * re-read factor
     + the one-off materialization / gather-selector bytes),
     ``had_flops`` (Hadamard stage only), ``flops``, ``vmem_bytes``,
-    ``hbm_s``/``compute_s`` roofline times, ``serial_s`` and
-    ``fits_vmem``.  ``serial_s`` is the windowed path's materialization
+    ``hbm_s``/``compute_s`` roofline times, ``serial_s``,
+    ``fits_vmem``, plus (PR 8) ``batch``, ``grid_steps`` (= gn*gm*gp,
+    the pallas grid size — the tuner's dispatch-overhead tie-break),
+    ``step_s`` and the batch-normalized ``per_image_hbm_bytes`` /
+    ``per_image_kernel_hbm_bytes`` / ``per_image_s``.  ``serial_s`` is the windowed path's materialization
     pass: an XLA relayout op that runs BEFORE the pallas_call and
     cannot overlap it, so its time adds to the roofline max instead of
     hiding under it (``serial_s + max(hbm_s, compute_s)`` is the
@@ -563,8 +608,8 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     else:
         x_block = s * bm * bp
     vmem = (2 * (x_block                          # X block (windows/raw)
-                 + w_block
-                 + s2 * bn * bp)                  # Y output block
+                 + w_block)
+            + DMA_SLOTS * s2 * bn * bp            # manual-DMA Y staging
             + cplx * fa * bm * bp                 # X~ in flight
             + 2 * cplx * fa * bn * bp             # Y~ psum / Karatsuba
             + flight
@@ -585,6 +630,12 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     ifft_flops = 2 * 2 * s2 * fa * layer.c_out * t * ifft_passes
     flops = had_flops + fft_flops + ifft_flops
     serial = 0 if halo else x_once      # windowed relayout pass: serial
+    grid_steps = gn * gm * gp
+    step_s = float(grid_steps) * float(step_overhead_s)
+    hbm_s = float(hbm - serial) / TPU_HBM_GBPS
+    serial_s = float(serial) / TPU_HBM_GBPS
+    compute_s = float(flops) / TPU_PEAK_FLOPS
+    total_s = serial_s + step_s + max(hbm_s, compute_s)
     return {
         "hbm_bytes": float(hbm),
         "kernel_hbm_bytes": float(w_hbm),
@@ -593,8 +644,15 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
         "had_flops": float(had_flops),
         "vmem_bytes": float(vmem),
         "flops": float(flops),
-        "hbm_s": float(hbm - serial) / TPU_HBM_GBPS,
-        "serial_s": float(serial) / TPU_HBM_GBPS,
-        "compute_s": float(flops) / TPU_PEAK_FLOPS,
+        "hbm_s": hbm_s,
+        "serial_s": serial_s,
+        "compute_s": compute_s,
         "fits_vmem": vmem <= TPU_VMEM_BYTES,
+        # --- batch-as-an-Alg-1-axis fields (PR 8) ---------------------
+        "batch": int(batch),
+        "grid_steps": float(grid_steps),
+        "step_s": step_s,
+        "per_image_hbm_bytes": float(hbm) / batch,
+        "per_image_kernel_hbm_bytes": float(w_hbm) / batch,
+        "per_image_s": total_s / batch,
     }

@@ -303,6 +303,7 @@ def build_network_plan(params: dict, cfg, *,
                        hadamard: str = "auto",
                        input_mode: str = "auto",
                        schedule_mu: float = df.SCHEDULE_MU,
+                       step_overhead_s: float = 0.0,
                        measure: bool = False,
                        interpret: bool | None = None,
                        validate: bool = True) -> NetworkPlan:
@@ -319,8 +320,10 @@ def build_network_plan(params: dict, cfg, *,
       batch: images per forward call the autotuner assumes; the plan
         records it and the fused backend enforces it for RMW flows.
       prune: 'magnitude' (SPEC2-like) or 'random' (Fig-10 robustness).
-      vmem_budget / blocks / hw_safe: Alg-1 search space, see
-        ``autotune.autotune_layer``.
+      vmem_budget / blocks: Alg-1 search space, see
+        ``autotune.autotune_layer``.  ``hw_safe`` is accepted for API
+        compatibility and is a no-op since PR 8 (manual-DMA
+        accumulators make every configuration hardware-legal).
       schedule: run Alg 2 at all (False skips schedule stats AND
         disables the scheduled datapath).
       schedule_r: r, the BRAM-replica analogue (paper S6.3: 10).
@@ -338,6 +341,11 @@ def build_network_plan(params: dict, cfg, *,
         'windowed' / 'halo' (windowed is the fallback/oracle path).
       schedule_mu: estimated Eq-14 utilization used by the cost model
         to size scheduled tables before the schedules exist.
+      step_overhead_s: fixed per-grid-step cost added to Alg 1's
+        predictions (``dataflow.INTERPRET_STEP_S`` when the plan will
+        execute in interpret mode — the serving stack's default — so
+        per-bucket tunings minimize the wall clock of the backend that
+        actually runs; 0.0 keeps the pure hardware roofline).
       measure: re-rank top analytic candidates by wall time
         (``autotune``); ``interpret`` selects the kernel execution mode
         for that measurement.
@@ -398,7 +406,8 @@ def build_network_plan(params: dict, cfg, *,
             active_bins=len(active) if active is not None else None,
             hadamard_modes=modes, input_modes=imodes,
             schedule_r=schedule_r,
-            schedule_mu=schedule_mu, measure_fn=measure_fn)
+            schedule_mu=schedule_mu, step_overhead_s=step_overhead_s,
+            measure_fn=measure_fn)
 
         tables = None
         if tuning.hadamard == "scheduled":

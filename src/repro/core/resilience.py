@@ -13,7 +13,8 @@ layer needs a principled failure model:
   1. **Plan validation** (build time).  ``validate_plan`` runs structured
      invariant checks over a ``core.plan.NetworkPlan`` — VMEM budget vs
      the chosen blocks, Alg-2 INDEX/VALUE table bounds and dtypes, halo
-     block starts within the raw image, psum-revisit hardware safety —
+     block starts within the raw image, manual-DMA accumulator
+     geometry (tile bounds / revisit order / slot budget) —
      and raises ``PlanValidationError`` with per-layer diagnostics
      instead of a bare ``ValueError`` or a kernel-launch-time assert.
 
@@ -110,8 +111,8 @@ class PlanValidationError(ResilienceError, ValueError):
 class KernelLoweringError(ResilienceError, NotImplementedError):
     """The chosen kernel variant cannot compile/lower/execute (VMEM
     overflow, Mosaic lowering failure, unsupported grid shape...).
-    Subclasses ``NotImplementedError`` for back-compat with the old
-    ``_check_hw_safe`` contract."""
+    Subclasses ``NotImplementedError`` for back-compat with the
+    pre-PR-8 hardware-safety guard, which raised that type."""
 
 
 class NumericGuardError(ResilienceError, ValueError):
@@ -393,23 +394,67 @@ def validate_layer_plan(lp, *, batch: int = 1,
             d("halo/geometry", f"halo geometry rejected block_p="
                                f"{tn.block_p}: {e}")
 
-    # --- psum-revisit hardware safety ---------------------------------
-    if hw_safe:
+    # --- manual-DMA accumulator geometry (PR 8) -----------------------
+    # The fused kernel streams psums through manually DMA'd VMEM tiles
+    # (``kernels.fused_spectral_conv``), so any (flow, blocks, batch)
+    # is legal on hardware; what a malformed batch-tuned plan can still
+    # break is the accumulator geometry itself: destination tiles must
+    # cover (and stay inside) the padded output, every destination must
+    # see >= 1 m-revisit ending in the epilogue flush, and the staging
+    # buffer must hold ``df.DMA_SLOTS`` slots.  ``hw_safe`` is accepted
+    # for API compatibility; the checks below always run.
+    del hw_safe
+    if tn.block_n < 1 or tn.block_m < 1 or tn.block_p < 1:
+        d("dma/tile-bounds",
+          f"non-positive block sizes (n={tn.block_n}, m={tn.block_m}, "
+          f"p={tn.block_p}) cannot address accumulator tiles")
+    else:
+        gn = -(-lp.layer.c_out // tn.block_n)
+        gm = -(-lp.layer.c_in // tn.block_m)
+        s2 = lp.geo.tile ** 2
         if lp.input_mode == "halo":
-            hg = spec.halo_block_geometry(lp.geo, tn.block_p)
-            gp = batch * hg.n_blocks
+            try:
+                hg = spec.halo_block_geometry(lp.geo, tn.block_p)
+            except Exception:
+                hg = None       # already diagnosed under halo/geometry
+            if hg is not None:
+                if (hg.nbh * hg.bth < lp.geo.n_tiles_h
+                        or hg.nbw * hg.btw < lp.geo.n_tiles_w):
+                    d("dma/tile-bounds",
+                      f"halo block grid {hg.nbh}x{hg.nbw} of "
+                      f"{hg.bth}x{hg.btw} tiles does not cover the "
+                      f"{lp.geo.n_tiles_h}x{lp.geo.n_tiles_w} tile "
+                      f"canvas — accumulator tiles would miss output")
+                stage_elems = tn.block_n * (hg.bth * lp.geo.tile) \
+                    * (hg.btw * lp.geo.tile)
+            else:
+                stage_elems = 0
         else:
-            gp = max(1, -(-t_total // tn.block_p))
-        gn = max(1, -(-lp.layer.c_out // tn.block_n))
-        if tn.flow == "weight_stationary" and gp > 1:
-            d("hw-safe/psum-revisit",
-              f"weight_stationary with {gp} p blocks: the psum revisit "
-              f"across the m axis is non-consecutive on hardware "
-              f"(needs block_p >= {t_total})")
-        if tn.flow == "input_stationary" and gn > 1:
-            d("hw-safe/psum-revisit",
-              f"input_stationary with {gn} n blocks: needs block_n >= "
-              f"{lp.layer.c_out}")
+            gp = -(-t_total // tn.block_p)
+            if gp * tn.block_p < t_total:
+                d("dma/tile-bounds",
+                  f"{gp} p blocks of {tn.block_p} cover only "
+                  f"{gp * tn.block_p} of {t_total} tile columns")
+            stage_elems = s2 * tn.block_n * tn.block_p
+        if gn * tn.block_n < lp.layer.c_out:
+            d("dma/tile-bounds",
+              f"{gn} n blocks of {tn.block_n} cover only "
+              f"{gn * tn.block_n} of {lp.layer.c_out} output channels")
+        if gm < 1:
+            d("dma/revisit-order",
+              f"m grid is empty ({gm} blocks of {tn.block_m} over "
+              f"c_in={lp.layer.c_in}): no revisit ever flushes the "
+              f"accumulator epilogue")
+        if df.DMA_SLOTS < 2:
+            d("dma/slot-count",
+              f"DMA_SLOTS={df.DMA_SLOTS}: double-buffered accumulator "
+              f"staging needs >= 2 slots")
+        stage_bytes = df.DMA_SLOTS * stage_elems * 4
+        if stage_bytes > vmem_budget:
+            d("dma/slot-count",
+              f"{df.DMA_SLOTS} accumulator slots stage "
+              f"{stage_bytes / 2**20:.1f} MiB > VMEM budget "
+              f"{vmem_budget / 2**20:.1f} MiB", "warn")
 
     if lp.pe_utilization is not None and not (
             0.0 < lp.pe_utilization <= 1.0):

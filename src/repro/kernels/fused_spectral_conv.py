@@ -74,8 +74,11 @@ Per grid step the kernel performs, entirely in VMEM:
         Y~[f, n, p] = sum_m W~[f, n, m] X~[f, m, p];
   3. IFFT + epilogue (flush) — Re(Dinv @ Y~) with Dinv restricted to the
      t^2 valid output rows and Fa active columns ([t^2, Fa]), then
-     y = relu(y + bias) (both optional), writing finished spatial
-     outputs for host-side relayout (``assemble_valid_tiles``).
+     y = relu(y + bias) (both optional).  The finished rectangle is
+     DMA'd to the output buffer by the kernel itself (PR 8): the halo
+     path re-lays its tiles into the spatial output canvas *in VMEM*
+     before the copy, so the host keeps only the final 'same'-crop
+     slice and ``assemble_valid_tiles`` is off the fused hot path.
 
 The contraction over input channels M runs across a grid dimension; the
 paper's three reuse choices map onto grid iteration orders exactly as in
@@ -98,19 +101,23 @@ consecutive grid steps):
     kernels re-stream per p block, same spatial-psum RMW + final-visit
     epilogue.
 
-Hardware caveat (Pallas TPU pipelining): reading an *output* window that
-was last written in a NON-consecutive grid step is undefined on real TPU
-(windows are only kept while the block index is unchanged between
-consecutive steps).  The RMW flows therefore require the accumulation
-revisit to be consecutive on hardware: ``weight_stationary`` needs a
-single p block (block_p >= P) and ``input_stationary`` a single n block
-(block_n >= N) — then the psum window simply stays resident in VMEM
-across the m loop and is flushed once.  The wrapper enforces this when
-``interpret=False``; interpret mode (CPU validation) emulates per-step
-window copies and runs any block shape.  ``core.autotune`` only emits
-hardware-safe configurations.  (Streaming psums through HBM with
-arbitrary blocks, as the FPGA does through DDR, needs a manual-DMA
-kernel — ROADMAP open item.)
+Output side (PR 8 — manual-DMA psum streaming): the kernels do NOT use
+a pipelined output BlockSpec.  The output buffer lives in ANY memory
+space (HBM) and every kernel moves its finished or partial rectangles
+itself with ``pltpu.make_async_copy`` through ``dataflow.DMA_SLOTS``
+double-buffered VMEM accumulator tiles + DMA semaphores.  The RMW flows
+(weight/input-stationary) prefetch the accumulator rectangle *before*
+the step's FFT/Hadamard/IFFT compute — the inbound DMA overlaps the MXU
+work — then add the step's partial spatial psum and copy it back; the
+first m visit is a pure write and the last applies the epilogue.  This
+is exactly the FPGA design's psum stream through DDR, and it removes
+the old hardware restriction that the accumulation revisit be
+CONSECUTIVE in the grid: any (block_n, block_m, block_p) is now valid
+on hardware for every flow, including halo + weight_stationary at
+batch > 1.  (The former ``_check_hw_safe`` guard and the autotuner's
+hw-safe candidate filters are gone; ``core.resilience.validate_plan``
+instead checks the DMA accumulator geometry — rectangle bounds, revisit
+count, slot budget — at plan-build time.)
 
 HBM traffic per flow is modeled by ``repro.core.dataflow.tpu_fused_flow_cost``
 (sparsity-aware since PR 3); flow/blocks are chosen per layer by
@@ -133,7 +140,7 @@ from repro.kernels._compat import CompilerParams
 
 from repro.core import resilience as res
 from repro.core import sparse as sp
-from repro.core.dataflow import FLOWS, INPUT_MODES
+from repro.core.dataflow import DMA_SLOTS, FLOWS, INPUT_MODES
 from repro.core.spectral import (HaloGeometry, SpectralGeometry,
                                  assemble_valid_tiles,
                                  extract_tiles_overlapping,
@@ -357,12 +364,154 @@ def _halo_kernel(body, *, bth: int, btw: int, fft_size: int):
     return kernel
 
 
+# ---------------------------------------------------------------------------
+# Manual-DMA output accumulators (PR 8)
+# ---------------------------------------------------------------------------
+#
+# The output operand of every fused kernel lives in ANY memory space
+# (HBM); the kernel moves rectangles itself with ``pltpu.make_async_copy``
+# through DMA_SLOTS double-buffered VMEM staging tiles.  A *sink* object
+# describes the output layout: where a (n-block, p-block) rectangle
+# lives in the buffer (``dst``), how a computed [S2, bn, bp] spatial
+# block is re-laid before staging (``stage``), and how bias/ReLU apply
+# in that layout (``epilogue``).  The same three flow bodies then serve
+# both output layouts — the windowed [S2, Np, Pp] tile stream and the
+# halo path's assembled spatial canvas.
+
+class _TileSink:
+    """Windowed output layout [S2, Np, Pp]: rectangle (n, p) is the
+    [S2, bn, bp] slab at (n*bn, p*bp); no in-VMEM relayout."""
+
+    def __init__(self, s2: int, bn: int, bp: int):
+        self.bn, self.bp = bn, bp
+        self.stage_shape = (s2, bn, bp)
+
+    def dst(self, y_hbm, n_idx, p_idx):
+        return y_hbm.at[:, pl.ds(n_idx * self.bn, self.bn),
+                        pl.ds(p_idx * self.bp, self.bp)]
+
+    def stage(self, y):
+        return y
+
+    def epilogue(self, y, b_ref, relu: bool):
+        return _epilogue(y, b_ref, relu)
+
+
+class _CanvasSink:
+    """Halo output layout [B, Np, nbh*bth*t, nbw*btw*t] — the spatial
+    output canvas of ``assemble_valid_tiles``, assembled IN-KERNEL.
+    The p grid axis enumerates (image, block-row, block-col); a computed
+    [S2=t^2, bn, bth*btw] block is re-laid in VMEM to its
+    [bn, bth*t, btw*t] canvas rectangle before the DMA, so tile (i, j)'s
+    t x t valid rows land at canvas (i*t, j*t) exactly as the host
+    relayout used to place them.  The host keeps only the final
+    'same'-crop slice (``_crop_canvas``)."""
+
+    def __init__(self, hg: HaloGeometry, tile: int, bn: int):
+        self.hg, self.t, self.bn = hg, tile, bn
+        self.stage_shape = (bn, hg.bth * tile, hg.btw * tile)
+
+    def dst(self, y_hbm, n_idx, p_idx):
+        hg, t = self.hg, self.t
+        nb = hg.n_blocks
+        b = p_idx // nb
+        ib = (p_idx % nb) // hg.nbw
+        jb = p_idx % hg.nbw
+        return y_hbm.at[b, pl.ds(n_idx * self.bn, self.bn),
+                        pl.ds(ib * hg.bth * t, hg.bth * t),
+                        pl.ds(jb * hg.btw * t, hg.btw * t)]
+
+    def stage(self, y):
+        hg, t, bn = self.hg, self.t, self.bn
+        # [t^2, bn, bth*btw] -> (u, v, n, ith, jtw) -> canvas rows
+        # ith*t + u, cols jtw*t + v (tile axis is bth-major, matching
+        # _halo_windows; s2 rows are u-major, matching the dv operator).
+        y = y.reshape(t, t, bn, hg.bth, hg.btw)
+        y = y.transpose(2, 3, 0, 4, 1)
+        return y.reshape(bn, hg.bth * t, hg.btw * t)
+
+    def epilogue(self, y, b_ref, relu: bool):
+        y = y + b_ref[0][:, None, None]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        return y
+
+
+def _dma_slot():
+    """Staging slot for this grid step: the linearized step index mod
+    DMA_SLOTS, alternating VMEM tiles/semaphores between consecutive
+    steps (double buffering)."""
+    step = ((pl.program_id(0) * pl.num_programs(1) + pl.program_id(1))
+            * pl.num_programs(2) + pl.program_id(2))
+    return step % DMA_SLOTS
+
+
+def _dma_rmw_start(dst, acc, sem, slot, gm):
+    """RMW prologue: start the inbound accumulator DMA for a revisit
+    step.  Called BEFORE the step's FFT/Hadamard/IFFT compute, which
+    does not depend on it — the copy-in overlaps the MXU work and
+    ``_dma_rmw_finish`` waits on it only at accumulation time."""
+    @pl.when(gm > 0)
+    def _prefetch():
+        pltpu.make_async_copy(dst, acc.at[slot], sem.at[slot]).start()
+
+
+def _dma_rmw_finish(sink, dst, acc, sem, y, b_ref, *, slot, gm,
+                    n_m_blocks: int, relu: bool):
+    """Spatial-psum RMW across the m grid axis through the manual-DMA
+    accumulator: first visit writes, middle visits add + write back,
+    the final visit applies the epilogue.  Write-backs complete before
+    the step ends, so a revisit (any number of grid steps later — the
+    revisit no longer needs to be consecutive) always reads finished
+    data."""
+    def write_back():
+        cp = pltpu.make_async_copy(acc.at[slot], dst, sem.at[slot])
+        cp.start()
+        cp.wait()
+
+    if n_m_blocks == 1:
+        acc[slot] = sink.epilogue(sink.stage(y), b_ref, relu)
+        write_back()
+        return
+    last = n_m_blocks - 1
+
+    @pl.when(gm == 0)
+    def _first():
+        acc[slot] = sink.stage(y)
+        write_back()
+
+    @pl.when((gm > 0) & (gm < last))
+    def _mid():
+        pltpu.make_async_copy(dst, acc.at[slot], sem.at[slot]).wait()
+        acc[slot] += sink.stage(y)
+        write_back()
+
+    @pl.when(gm == last)
+    def _last():
+        pltpu.make_async_copy(dst, acc.at[slot], sem.at[slot]).wait()
+        acc[slot] = sink.epilogue(acc[slot] + sink.stage(y), b_ref, relu)
+        write_back()
+
+
+def _dma_flush(sink, dst, acc, sem, y, b_ref, *, slot, relu: bool):
+    """Output-stationary flush: one staged + epilogued write per
+    rectangle, at the last m visit (psums accumulated in spectral
+    scratch, not through HBM)."""
+    acc[slot] = sink.epilogue(sink.stage(y), b_ref, relu)
+    cp = pltpu.make_async_copy(acc.at[slot], dst, sem.at[slot])
+    cp.start()
+    cp.wait()
+
+
 def _kernel_os(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
-               b_ref, y_ref, acc_r, acc_i, *, n_m_blocks: int, relu: bool):
-    """Output-stationary: psums live in VMEM scratch across the innermost
-    m grid dim; IFFT + epilogue + output write happen once, at the last
-    m block."""
+               b_ref, y_hbm, acc_r, acc_i, ydma, sem, *,
+               n_m_blocks: int, relu: bool, sink):
+    """Output-stationary, grid (n, p, m): psums live in VMEM scratch
+    across the innermost m grid dim; IFFT + epilogue + the single DMA
+    write happen once, at the last m block."""
     gm = pl.program_id(2)
+    slot = _dma_slot()
+    dst = sink.dst(y_hbm, pl.program_id(0), pl.program_id(1))
 
     @pl.when(gm == 0)
     def _init():
@@ -378,30 +527,40 @@ def _kernel_os(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
     def _flush():
         bn, bp = acc_r.shape[1], acc_r.shape[2]
         y = _ifft_real(acc_r[...], acc_i[...], dvr_ref, dvi_ref, bn, bp)
-        y_ref[...] = _epilogue(y, b_ref, relu)
+        _dma_flush(sink, dst, ydma, sem, y, b_ref, slot=slot, relu=relu)
 
 
 def _kernel_ws(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
-               b_ref, y_ref, *, n_m_blocks: int, relu: bool):
+               b_ref, y_hbm, ydma, sem, *, n_m_blocks: int, relu: bool,
+               sink):
     """Weight-stationary, grid (n, m, p): each m block's partial Y~ is
     IFFT'd eagerly (IFFT is linear) and the real spatial psum is read-
-    modify-written — spectral intermediates never reach HBM.  The
-    epilogue fires on the final m visit, after the last accumulation."""
+    modify-written through the manual-DMA accumulator — spectral
+    intermediates never reach HBM.  The epilogue fires on the final m
+    visit, after the last accumulation."""
     gm = pl.program_id(1)
+    slot = _dma_slot()
+    dst = sink.dst(y_hbm, pl.program_id(0), pl.program_id(2))
+    _dma_rmw_start(dst, ydma, sem, slot, gm)
     re, im = _hadamard(wr_ref, wi_ref,
                        *_tile_fft(x_ref, dfr_ref, dfi_ref))
     bn, bp = re.shape[1], re.shape[2]
     y = _ifft_real(re, im, dvr_ref, dvi_ref, bn, bp)
-    _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks, relu)
+    _dma_rmw_finish(sink, dst, ydma, sem, y, b_ref, slot=slot, gm=gm,
+                    n_m_blocks=n_m_blocks, relu=relu)
 
 
 def _kernel_is(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
-               b_ref, y_ref, xfr_s, xfi_s, *, n_m_blocks: int, relu: bool):
+               b_ref, y_hbm, xfr_s, xfi_s, ydma, sem, *,
+               n_m_blocks: int, relu: bool, sink):
     """Input-stationary, grid (p, m, n): the window block is constant
     across the inner n loop, so its FFT is computed once (n-block 0)
     into VMEM scratch and reused — the reuse the flow is named for."""
     gm = pl.program_id(1)
     gn = pl.program_id(2)
+    slot = _dma_slot()
+    dst = sink.dst(y_hbm, gn, pl.program_id(0))
+    _dma_rmw_start(dst, ydma, sem, slot, gm)
 
     @pl.when(gn == 0)
     def _fft_once():
@@ -412,36 +571,19 @@ def _kernel_is(x_ref, wr_ref, wi_ref, dfr_ref, dfi_ref, dvr_ref, dvi_ref,
     re, im = _hadamard(wr_ref, wi_ref, xfr_s[...], xfi_s[...])
     bn, bp = re.shape[1], re.shape[2]
     y = _ifft_real(re, im, dvr_ref, dvi_ref, bn, bp)
-    _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks, relu)
-
-
-def _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks: int,
-                              relu: bool):
-    """Spatial-psum RMW across the m grid axis, epilogue on final visit."""
-    if n_m_blocks == 1:
-        y_ref[...] = _epilogue(y, b_ref, relu)
-        return
-    last = n_m_blocks - 1
-
-    @pl.when(gm == 0)
-    def _first():
-        y_ref[...] = y
-
-    @pl.when((gm > 0) & (gm < last))
-    def _mid():
-        y_ref[...] += y
-
-    @pl.when(gm == last)
-    def _last():
-        y_ref[...] = _epilogue(y_ref[...] + y, b_ref, relu)
+    _dma_rmw_finish(sink, dst, ydma, sem, y, b_ref, slot=slot, gm=gm,
+                    n_m_blocks=n_m_blocks, relu=relu)
 
 
 def _kernel_os_sched(x_ref, idx_ref, sel_ref, vr_ref, vi_ref,
-                     dfr_ref, dfi_ref, dvr_ref, dvi_ref, b_ref, y_ref,
-                     acc_r, acc_i, *, n_m_blocks: int, relu: bool):
+                     dfr_ref, dfi_ref, dvr_ref, dvi_ref, b_ref, y_hbm,
+                     acc_r, acc_i, ydma, sem, *, n_m_blocks: int,
+                     relu: bool, sink):
     """Output-stationary, scheduled Hadamard: n-leading psums [N', Fa, bp]
     accumulate in VMEM scratch across the m grid dim."""
     gm = pl.program_id(2)
+    slot = _dma_slot()
+    dst = sink.dst(y_hbm, pl.program_id(0), pl.program_id(1))
 
     @pl.when(gm == 0)
     def _init():
@@ -456,30 +598,38 @@ def _kernel_os_sched(x_ref, idx_ref, sel_ref, vr_ref, vi_ref,
     @pl.when(gm == n_m_blocks - 1)
     def _flush():
         y = _ifft_real_nf(acc_r[...], acc_i[...], dvr_ref, dvi_ref)
-        y_ref[...] = _epilogue(y, b_ref, relu)
+        _dma_flush(sink, dst, ydma, sem, y, b_ref, slot=slot, relu=relu)
 
 
 def _kernel_ws_sched(x_ref, idx_ref, sel_ref, vr_ref, vi_ref,
-                     dfr_ref, dfi_ref, dvr_ref, dvi_ref, b_ref, y_ref,
-                     *, n_m_blocks: int, relu: bool):
+                     dfr_ref, dfi_ref, dvr_ref, dvi_ref, b_ref, y_hbm,
+                     ydma, sem, *, n_m_blocks: int, relu: bool, sink):
     """Weight-stationary, scheduled Hadamard: the table block (the
     'kernel' operand of this mode) is constant across the inner p loop;
     partial psums are IFFT'd eagerly and RMW'd as spatial rows."""
     gm = pl.program_id(1)
+    slot = _dma_slot()
+    dst = sink.dst(y_hbm, pl.program_id(0), pl.program_id(2))
+    _dma_rmw_start(dst, ydma, sem, slot, gm)
     re, im = _scheduled_hadamard(idx_ref, sel_ref, vr_ref, vi_ref,
                                  *_tile_fft(x_ref, dfr_ref, dfi_ref))
     y = _ifft_real_nf(re, im, dvr_ref, dvi_ref)
-    _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks, relu)
+    _dma_rmw_finish(sink, dst, ydma, sem, y, b_ref, slot=slot, gm=gm,
+                    n_m_blocks=n_m_blocks, relu=relu)
 
 
 def _kernel_is_sched(x_ref, idx_ref, sel_ref, vr_ref, vi_ref,
-                     dfr_ref, dfi_ref, dvr_ref, dvi_ref, b_ref, y_ref,
-                     xfr_s, xfi_s, *, n_m_blocks: int, relu: bool):
+                     dfr_ref, dfi_ref, dvr_ref, dvi_ref, b_ref, y_hbm,
+                     xfr_s, xfi_s, ydma, sem, *, n_m_blocks: int,
+                     relu: bool, sink):
     """Input-stationary, scheduled Hadamard: the window block's FFT is
     computed once (n-block 0) into VMEM scratch and reused while table
     blocks re-stream."""
     gm = pl.program_id(1)
     gn = pl.program_id(2)
+    slot = _dma_slot()
+    dst = sink.dst(y_hbm, gn, pl.program_id(0))
+    _dma_rmw_start(dst, ydma, sem, slot, gm)
 
     @pl.when(gn == 0)
     def _fft_once():
@@ -490,7 +640,8 @@ def _kernel_is_sched(x_ref, idx_ref, sel_ref, vr_ref, vi_ref,
     re, im = _scheduled_hadamard(idx_ref, sel_ref, vr_ref, vi_ref,
                                  xfr_s[...], xfi_s[...])
     y = _ifft_real_nf(re, im, dvr_ref, dvi_ref)
-    _accumulate_with_epilogue(y, b_ref, y_ref, gm, n_m_blocks, relu)
+    _dma_rmw_finish(sink, dst, ydma, sem, y, b_ref, slot=slot, gm=gm,
+                    n_m_blocks=n_m_blocks, relu=relu)
 
 
 # ---------------------------------------------------------------------------
@@ -534,15 +685,23 @@ def _const_spec(rows: int, cols: int) -> pl.BlockSpec:
     return pl.BlockSpec((rows, cols), lambda *_: (0, 0))
 
 
+def _dma_scratch(sink):
+    """The manual-DMA output scratch every fused kernel appends: the
+    DMA_SLOTS double-buffered staging tiles (in the sink's output
+    layout) and their DMA-completion semaphores."""
+    return [pltpu.VMEM((DMA_SLOTS,) + sink.stage_shape, jnp.float32),
+            pltpu.SemaphoreType.DMA((DMA_SLOTS,))]
+
+
 def _plane_kernel_scratch(flow: str, gm: int, relu: bool, fa: int,
-                          bn: int, bm: int, bp: int, wrap=None):
+                          bn: int, bm: int, bp: int, sink, wrap=None):
     """(kernel, scratch_shapes) of one flow's plane-Hadamard body —
     shared by the windowed and halo pipeline builders (``wrap`` is the
     halo gather applied around the body when given)."""
     body = {"output_stationary": _kernel_os,
             "weight_stationary": _kernel_ws,
             "input_stationary": _kernel_is}[flow]
-    kernel = functools.partial(body, n_m_blocks=gm, relu=relu)
+    kernel = functools.partial(body, n_m_blocks=gm, relu=relu, sink=sink)
     if wrap is not None:
         kernel = wrap(kernel)
     scratch = {"output_stationary": [pltpu.VMEM((fa, bn, bp),
@@ -550,17 +709,17 @@ def _plane_kernel_scratch(flow: str, gm: int, relu: bool, fa: int,
                "weight_stationary": [],
                "input_stationary": [pltpu.VMEM((fa, bm, bp),
                                                jnp.float32)] * 2}[flow]
-    return kernel, scratch
+    return kernel, scratch + _dma_scratch(sink)
 
 
 def _sched_kernel_scratch(flow: str, gm: int, relu: bool, fa: int,
-                          n_pe: int, bm: int, bp: int, wrap=None):
+                          n_pe: int, bm: int, bp: int, sink, wrap=None):
     """Scheduled-Hadamard sibling of ``_plane_kernel_scratch`` (the
     output-stationary psums are n-leading [N', Fa, bp])."""
     body = {"output_stationary": _kernel_os_sched,
             "weight_stationary": _kernel_ws_sched,
             "input_stationary": _kernel_is_sched}[flow]
-    kernel = functools.partial(body, n_m_blocks=gm, relu=relu)
+    kernel = functools.partial(body, n_m_blocks=gm, relu=relu, sink=sink)
     if wrap is not None:
         kernel = wrap(kernel)
     scratch = {"output_stationary": [pltpu.VMEM((n_pe, fa, bp),
@@ -568,27 +727,7 @@ def _sched_kernel_scratch(flow: str, gm: int, relu: bool, fa: int,
                "weight_stationary": [],
                "input_stationary": [pltpu.VMEM((fa, bm, bp),
                                                jnp.float32)] * 2}[flow]
-    return kernel, scratch
-
-
-def _check_hw_safe(flow: str, gn: int, gp: int, interpret: bool) -> None:
-    """Pallas TPU keeps an output window only across CONSECUTIVE grid
-    steps; the RMW flows accumulate into y across the m axis, so on
-    hardware the revisit must be consecutive (see module docstring).
-    Raises ``resilience.KernelLoweringError`` (a ``NotImplementedError``
-    subclass) so the degradation ladder can catch it structurally."""
-    if interpret:
-        return
-    if flow == "weight_stationary" and gp > 1:
-        raise res.KernelLoweringError(
-            "weight_stationary on TPU hardware needs block_p >= P "
-            f"(got {gp} p blocks); use output_stationary or a "
-            "hardware-safe autotune plan", site="hw-safe")
-    if flow == "input_stationary" and gn > 1:
-        raise res.KernelLoweringError(
-            "input_stationary on TPU hardware needs block_n >= N "
-            f"(got {gn} n blocks); use output_stationary or a "
-            "hardware-safe autotune plan", site="hw-safe")
+    return kernel, scratch + _dma_scratch(sink)
 
 
 @functools.partial(
@@ -629,18 +768,16 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
     bias_ = _pad_axis(bias, 1, bn)
     np_, mp_, pp_ = wr_.shape[1], wr_.shape[2], xt_.shape[2]
     gn, gm, gp = np_ // bn, mp_ // bm, pp_ // bp
-    _check_hw_safe(flow, gn, gp, interpret)
     grid, canon, semantics = _flow_layout(flow, gn, gm, gp)
+    sink = _TileSink(s2, bn, bp)
     kernel, scratch = _plane_kernel_scratch(flow, gm, relu, fa, bn, bm,
-                                            bp)
+                                            bp, sink)
 
     x_spec = pl.BlockSpec(
         (s, bm, bp), lambda *g: (0, canon(*g)[2], canon(*g)[1]))
     w_spec = pl.BlockSpec(
         (fa, bn, bm), lambda *g: (0, canon(*g)[0], canon(*g)[2]))
     b_spec = pl.BlockSpec((1, bn), lambda *g: (0, canon(*g)[0]))
-    y_spec = pl.BlockSpec(
-        (s2, bn, bp), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
 
     y = pl.pallas_call(
         kernel,
@@ -648,7 +785,7 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
         in_specs=[x_spec, w_spec, w_spec,
                   _const_spec(fa, s), _const_spec(fa, s),
                   _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
-        out_specs=y_spec,
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         out_shape=jax.ShapeDtypeStruct((s2, np_, pp_), jnp.float32),
         scratch_shapes=scratch,
         compiler_params=CompilerParams(
@@ -714,9 +851,12 @@ def fused_spectral_pipeline_halo(x: Array, wr: Array, wi: Array,
     geo/hg: tile + halo-block geometry (``halo_block_geometry``); the
         effective block_p is ``hg.block_tiles`` and the p grid axis is
         B * hg.n_blocks.
-    Returns [S2, N, B * nbh*nbw * bth*btw] finished spatial outputs in
-    block-major tile order (``_assemble_output_halo`` restores row-major
-    and crops the block-padding tiles).
+    Returns the assembled spatial output canvas
+    [B, Np, nbh*bth*t, nbw*btw*t] (Np = N padded to block_n): the
+    kernel's flush re-lays each finished tile rectangle into canvas
+    position in VMEM and DMAs it there directly, so the only host-side
+    work left is the 'same'-crop slice (``_crop_canvas``) —
+    ``assemble_valid_tiles`` never runs on this path.
     """
     if flow not in FLOWS:
         raise ValueError(f"flow must be one of {FLOWS}")
@@ -737,36 +877,35 @@ def fused_spectral_pipeline_halo(x: Array, wr: Array, wi: Array,
     bias_ = _pad_axis(bias, 1, bn)
     np_, mp_ = wr_.shape[1], wr_.shape[2]
     gn, gm, gp = np_ // bn, mp_ // bm, b * hg.n_blocks
-    _check_hw_safe(flow, gn, gp, interpret)
     grid, canon, semantics = _flow_layout(flow, gn, gm, gp)
     gr, gc = (jnp.asarray(a) for a in halo_gather_matrices(geo, hg))
     wrap = functools.partial(_halo_kernel, bth=hg.bth, btw=hg.btw,
                              fft_size=geo.fft_size)
+    sink = _CanvasSink(hg, geo.tile, bn)
     kernel, scratch = _plane_kernel_scratch(flow, gm, relu, fa, bn, bm,
-                                            bt, wrap=wrap)
+                                            bt, sink, wrap=wrap)
 
     x_spec, gr_spec, gc_spec = _halo_specs(geo, hg, bm, canon)
     w_spec = pl.BlockSpec(
         (fa, bn, bm), lambda *g: (0, canon(*g)[0], canon(*g)[2]))
     b_spec = pl.BlockSpec((1, bn), lambda *g: (0, canon(*g)[0]))
-    y_spec = pl.BlockSpec(
-        (s2, bn, bt), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
 
-    y = pl.pallas_call(
+    canvas = (b, np_, hg.nbh * hg.bth * geo.tile,
+              hg.nbw * hg.btw * geo.tile)
+    return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[x_spec, gr_spec, gc_spec, w_spec, w_spec,
                   _const_spec(fa, s), _const_spec(fa, s),
                   _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
-        out_specs=y_spec,
-        out_shape=jax.ShapeDtypeStruct((s2, np_, gp * bt), jnp.float32),
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct(canvas, jnp.float32),
         scratch_shapes=scratch,
         compiler_params=CompilerParams(
             dimension_semantics=semantics),
         interpret=interpret,
     )(x_.astype(jnp.float32), gr, gc, wr_, wi_, dfr, dfi, dvr, dvi,
       bias_)
-    return y[:, :n, :]
 
 
 @functools.partial(
@@ -783,7 +922,9 @@ def fused_spectral_pipeline_scheduled_halo(
     in-kernel window gather feeding the Alg-2 scheduled datapath.
     Operand contracts are the scheduled pipeline's (tables padded for
     ``m_pad_to == min(block_m, M)``, block_n implied == N'), except the
-    input is the raw [B, M, H, W] activation."""
+    input is the raw [B, M, H, W] activation and the output is the
+    assembled spatial canvas [B, GN*N', nbh*bth*t, nbw*btw*t] (see
+    ``fused_spectral_pipeline_halo``)."""
     b, m, h, w_px = x.shape
     assert (h, w_px) == (geo.h_in, geo.w_in), (x.shape, geo)
     gn, mp_t, t_cycles, r = idx.shape
@@ -807,38 +948,37 @@ def fused_spectral_pipeline_scheduled_halo(
          f"same block_m (= {bm})")
     np_ = gn * n_pe
     gm, gp = mp_ // bm, b * hg.n_blocks
-    _check_hw_safe(flow, gn, gp, interpret)
     grid, canon, semantics = _flow_layout(flow, gn, gm, gp)
     gr, gc = (jnp.asarray(a) for a in halo_gather_matrices(geo, hg))
     wrap = functools.partial(_halo_kernel, bth=hg.bth, btw=hg.btw,
                              fft_size=geo.fft_size)
+    sink = _CanvasSink(hg, geo.tile, n_pe)
     kernel, scratch = _sched_kernel_scratch(flow, gm, relu, fa, n_pe,
-                                            bm, bt, wrap=wrap)
+                                            bm, bt, sink, wrap=wrap)
 
     x_spec, gr_spec, gc_spec = _halo_specs(geo, hg, bm, canon)
     t_spec = lambda lanes: pl.BlockSpec(
         (1, bm, t_cycles, lanes),
         lambda *g: (canon(*g)[0], canon(*g)[2], 0, 0))
     b_spec = pl.BlockSpec((1, n_pe), lambda *g: (0, canon(*g)[0]))
-    y_spec = pl.BlockSpec(
-        (s2, n_pe, bt), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
 
-    y = pl.pallas_call(
+    canvas = (b, np_, hg.nbh * hg.bth * geo.tile,
+              hg.nbw * hg.btw * geo.tile)
+    return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[x_spec, gr_spec, gc_spec, t_spec(r), t_spec(n_pe),
                   t_spec(n_pe), t_spec(n_pe),
                   _const_spec(fa, s), _const_spec(fa, s),
                   _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
-        out_specs=y_spec,
-        out_shape=jax.ShapeDtypeStruct((s2, np_, gp * bt), jnp.float32),
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct(canvas, jnp.float32),
         scratch_shapes=scratch,
         compiler_params=CompilerParams(
             dimension_semantics=semantics),
         interpret=interpret,
     )(x_.astype(jnp.float32), gr, gc, idx, sel, vr, vi, dfr, dfi, dvr,
       dvi, bias_)
-    return y[:, :n_out, :]
 
 
 @functools.partial(
@@ -895,10 +1035,10 @@ def fused_spectral_pipeline_scheduled(xt: Array, idx: Array, sel: Array,
          f"block_m (= {bm})")
     np_ = gn * n_pe
     gm, gp = mp_ // bm, pp_ // bp
-    _check_hw_safe(flow, gn, gp, interpret)
     grid, canon, semantics = _flow_layout(flow, gn, gm, gp)
+    sink = _TileSink(s2, n_pe, bp)
     kernel, scratch = _sched_kernel_scratch(flow, gm, relu, fa, n_pe,
-                                            bm, bp)
+                                            bm, bp, sink)
 
     x_spec = pl.BlockSpec(
         (s, bm, bp), lambda *g: (0, canon(*g)[2], canon(*g)[1]))
@@ -906,8 +1046,6 @@ def fused_spectral_pipeline_scheduled(xt: Array, idx: Array, sel: Array,
         (1, bm, t_cycles, lanes),
         lambda *g: (canon(*g)[0], canon(*g)[2], 0, 0))
     b_spec = pl.BlockSpec((1, n_pe), lambda *g: (0, canon(*g)[0]))
-    y_spec = pl.BlockSpec(
-        (s2, n_pe, bp), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
 
     y = pl.pallas_call(
         kernel,
@@ -916,7 +1054,7 @@ def fused_spectral_pipeline_scheduled(xt: Array, idx: Array, sel: Array,
                   t_spec(n_pe),
                   _const_spec(fa, s), _const_spec(fa, s),
                   _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
-        out_specs=y_spec,
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         out_shape=jax.ShapeDtypeStruct((s2, np_, pp_), jnp.float32),
         scratch_shapes=scratch,
         compiler_params=CompilerParams(
@@ -995,20 +1133,17 @@ def _fused_conv_scheduled(x: Array, idx: Array, sel: Array, vr: Array,
     return _assemble_output(y, geo, b, n_out, t_cnt, x.dtype)
 
 
-def _assemble_output_halo(y: Array, geo: SpectralGeometry,
-                          hg: HaloGeometry, b: int, n: int, dtype
-                          ) -> Array:
-    """[t^2, N, B*nbh*nbw*bth*btw] halo-pipeline output (block-major tile
-    order) -> assembled [B, N, H, W]: restore row-major tiles, crop the
-    block-padding tiles past the (n_tiles_h, n_tiles_w) grid, then the
-    usual valid-tile relayout."""
-    s2 = geo.tile * geo.tile
-    yt = y.reshape(s2, n, b, hg.nbh, hg.nbw, hg.bth, hg.btw)
-    yt = yt.transpose(2, 1, 3, 5, 4, 6, 0)   # [B,N,nbh,bth,nbw,btw,s2]
-    yt = yt.reshape(b, n, hg.nbh * hg.bth, hg.nbw * hg.btw, s2)
-    yt = yt[:, :, :geo.n_tiles_h, :geo.n_tiles_w]
-    yt = yt.reshape(b, n, geo.n_tiles, geo.tile, geo.tile)
-    return assemble_valid_tiles(yt.astype(dtype), geo)
+def _crop_canvas(y: Array, geo: SpectralGeometry, n: int, dtype) -> Array:
+    """[B, Np, nbh*bth*t, nbw*btw*t] halo-pipeline canvas -> [B, N,
+    H_out, W_out]: the kernel already assembled tiles in canvas order
+    (tile (i, j) at (i*t, j*t)), so all that remains is the channel
+    crop and the 'same'-crop slice of ``assemble_valid_tiles`` — a pure
+    slice, zero relayout FLOPs or copies on the host."""
+    start = geo.ksize - 1 - geo.pad
+    h_out = geo.h_in + 2 * geo.pad - geo.ksize + 1
+    w_out = geo.w_in + 2 * geo.pad - geo.ksize + 1
+    return y[:, :n, start:start + h_out,
+             start:start + w_out].astype(dtype)
 
 
 @functools.partial(
@@ -1022,16 +1157,16 @@ def _fused_conv_halo(x: Array, wr: Array, wi: Array, dfr: Array,
                      relu: bool, interpret: bool) -> Array:
     """Jitted body of the halo-input fused conv: NO host-side window
     materialization — the raw activation goes straight into the
-    pallas_call (the in-kernel gather does the windowing), and only the
-    valid-tile relayout runs outside.  ``block_p`` is split into the
-    2-D halo block by ``halo_block_geometry``."""
-    b, m = x.shape[:2]
+    pallas_call (the in-kernel gather does the windowing) — and NO
+    host-side output relayout either: the kernel DMAs assembled canvas
+    rectangles and only the 'same'-crop slice runs outside.  ``block_p``
+    is split into the 2-D halo block by ``halo_block_geometry``."""
     n = wr.shape[1]
     hg = halo_block_geometry(geo, block_p)
     y = fused_spectral_pipeline_halo(
         x, wr, wi, dfr, dfi, dvr, dvi, bias, geo=geo, hg=hg, flow=flow,
         block_n=block_n, block_m=block_m, relu=relu, interpret=interpret)
-    return _assemble_output_halo(y, geo, hg, b, n, x.dtype)
+    return _crop_canvas(y, geo, n, x.dtype)
 
 
 @functools.partial(
@@ -1047,13 +1182,12 @@ def _fused_conv_scheduled_halo(x: Array, idx: Array, sel: Array,
                                interpret: bool) -> Array:
     """Jitted body of the halo-input scheduled fused conv (same contract
     as ``_fused_conv_scheduled``, raw activation in)."""
-    b = x.shape[0]
     hg = halo_block_geometry(geo, block_p)
     y = fused_spectral_pipeline_scheduled_halo(
         x, idx, sel, vr, vi, dfr, dfi, dvr, dvi, bias, geo=geo, hg=hg,
         n_out=n_out, flow=flow, block_m=block_m, relu=relu,
         interpret=interpret)
-    return _assemble_output_halo(y, geo, hg, b, n_out, x.dtype)
+    return _crop_canvas(y, geo, n_out, x.dtype)
 
 
 def fused_spectral_conv2d(x: Array, w_f, geo: SpectralGeometry, *,

@@ -23,31 +23,35 @@ def _doc_namespace() -> dict:
     assert m, "docs/DATAFLOW.md lost its ```python doc-formulas block"
     ns: dict = {}
     exec(compile(m.group(1), str(DOC), "exec"), ns)  # noqa: S102
-    for fn in ("input_bytes", "kernel_bytes", "output_bytes"):
+    for fn in ("input_bytes", "kernel_bytes", "output_bytes",
+               "per_image_bytes", "step_seconds"):
         assert fn in ns, f"doc-formulas block lost {fn}()"
     return ns
 
 
-CASES = [(layer, flow, mode, imode)
+CASES = [(layer, flow, mode, imode, batch)
          for layer in (df.VGG16_LAYERS[1], df.VGG16_LAYERS[5],
                        df.VGG16_LAYERS[-1])
          for flow in df.FLOWS
          for mode in df.HADAMARD_MODES
-         for imode in df.INPUT_MODES]
+         for imode in df.INPUT_MODES
+         for batch in (1, 8)]
 
 
 class TestDocFormulasMatchCode:
     ns = _doc_namespace()
 
-    @pytest.mark.parametrize("layer,flow,mode,imode", CASES,
-                             ids=[f"{l.name}-{f}-{m}-{i}"
-                                  for l, f, m, i in CASES])
-    def test_shares_and_total(self, layer, flow, mode, imode):
-        fft, alpha, batch = 8, 4.0, 1
+    @pytest.mark.parametrize("layer,flow,mode,imode,batch", CASES,
+                             ids=[f"{l.name}-{f}-{m}-{i}-b{b}"
+                                  for l, f, m, i, b in CASES])
+    def test_shares_and_total(self, layer, flow, mode, imode, batch):
+        fft, alpha = 8, 4.0
         block_n, block_p, block_m = 64, 128, 64
+        step_overhead_s = 1e-4
         c = df.tpu_fused_flow_cost(layer, fft, alpha, block_n, block_p,
                                    block_m, flow, batch=batch,
-                                   hadamard=mode, input_mode=imode)
+                                   hadamard=mode, input_mode=imode,
+                                   step_overhead_s=step_overhead_s)
         geo = spec.make_geometry(layer.h_in, layer.w_in, layer.ksize,
                                  fft, layer.pad)
         hg = spec.halo_block_geometry(geo, block_p)
@@ -75,6 +79,19 @@ class TestDocFormulasMatchCode:
         assert x == pytest.approx(c["input_hbm_bytes"]), "input share"
         assert w == pytest.approx(c["kernel_hbm_bytes"]), "kernel share"
         assert x + w + y == pytest.approx(c["hbm_bytes"]), "total"
+
+        # batch amortization (S1b): per-image shares divide by B
+        pt, pk = self.ns["per_image_bytes"](x + w + y, w, batch)
+        assert pt == pytest.approx(c["per_image_hbm_bytes"]), "per-image"
+        assert pk == pytest.approx(c["per_image_kernel_hbm_bytes"]), \
+            "per-image kernel"
+
+        # interpret-mode step pricing: step_s = gn*gm*gp * overhead
+        assert self.ns["step_seconds"](
+            gn, gm, gp, step_overhead_s) == pytest.approx(c["step_s"]), \
+            "step_s"
+        assert c["grid_steps"] == pytest.approx(gn * gm * gp), \
+            "grid_steps"
 
     def test_doc_is_linked(self):
         """README and ARCHITECTURE must point at the walkthrough."""

@@ -13,8 +13,8 @@ host-materialized [B, M, T, K, K] window tensor.  Covered here:
     (H, W, k, K, block_p) the plan can emit (hypothesis);
   * the repriced cost model (``tpu_fused_flow_cost(input_mode=...)``):
     halo input bytes < windowed on every VGG16 layer and flow;
-  * the autotune input-mode axis and its hardware-safety rule
-    (halo + weight_stationary only at batch 1);
+  * the autotune input-mode axis (halo + weight_stationary is legal at
+    any batch since the PR-8 manual-DMA accumulators);
   * plan-level integration: ``build_network_plan(input_mode=...)``
     threads the mode into ``LayerPlan`` and ``execute_layer_plan``.
 """
@@ -96,14 +96,17 @@ class TestHaloParity:
                                       block_p=block_p)
         np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
 
-    def test_hardware_guard_weight_stationary(self):
-        """halo weight_stationary at batch > 1 can never make the p grid
-        a single block, so the hardware guard must fire."""
+    def test_ws_halo_batch2_runs_and_matches(self):
+        """halo weight_stationary at batch > 1 — hardware-illegal before
+        the manual-DMA accumulators (PR 8) — now runs and matches the
+        spatial reference."""
         x, wk, b, geo = _case(h=12, w=12, batch=2)
-        with pytest.raises(NotImplementedError):
-            fused_spectral_conv2d(x, spec.spectral_kernel(wk, 8), geo,
+        y = fused_spectral_conv2d(x, spec.spectral_kernel(wk, 8), geo,
                                   flow="weight_stationary", block_p=512,
-                                  input_mode="halo", interpret=False)
+                                  input_mode="halo")
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(spec.spatial_conv2d(x, wk)),
+                                   atol=2e-4, rtol=2e-4)
 
     def test_bad_input_mode_raises(self):
         x, wk, b, geo = _case()
@@ -193,14 +196,22 @@ class TestInputModeAutotune:
                 layer, 8, 4.0, input_modes=df.INPUT_MODES)
             assert tn.input_mode == "halo", layer.name
 
-    def test_ws_halo_unsafe_at_batch_gt_1(self):
-        """hw_safe drops halo weight-stationary candidates at batch 2
-        (the halo p grid cannot merge images into one block)."""
+    def test_ws_halo_eligible_at_batch_gt_1(self):
+        """Manual-DMA accumulators (PR 8) lift the batch-1 limit on halo
+        weight-stationary: the tuner may now pick it at batch 2, and
+        whatever it picks must validate in a built plan (hw_safe is a
+        no-op)."""
         layer = df.ConvLayer("tiny", 4, 8, 12, 12)
         tn = autotune.autotune_layer(
             layer, 8, 4.0, batch=2, flows=("weight_stationary",),
             input_modes=df.INPUT_MODES)
-        assert tn.input_mode != "halo"
+        assert tn.input_mode in df.INPUT_MODES
+        # halo is no longer excluded from the candidate set
+        cands = [
+            (f, bn, bm, bp)
+            for f, bn, bm, bp in autotune._layer_candidates(
+                layer, 8, 2, autotune.BLOCK_CANDIDATES, True)]
+        assert any(f == "weight_stationary" for f, *_ in cands)
 
     def test_legacy_mode_is_none(self):
         tn = autotune.autotune_layer(df.VGG16_LAYERS[3], 8, 4.0)

@@ -71,16 +71,27 @@ def test_error_carries_structure():
     assert "tables/idx-bounds" in msg and "[c2] vmem-budget" in msg
 
 
-def test_check_hw_safe_is_structured():
-    """The kernel's hardware-safety gate raises the taxonomy error, and
-    it still satisfies pytest.raises(NotImplementedError) callers."""
-    from repro.kernels.fused_spectral_conv import _check_hw_safe
-    with pytest.raises(res.KernelLoweringError) as ei:
-        _check_hw_safe("weight_stationary", gn=1, gp=2, interpret=False)
-    assert ei.value.site == "hw-safe"
-    with pytest.raises(NotImplementedError):
-        _check_hw_safe("input_stationary", gn=2, gp=1, interpret=False)
-    _check_hw_safe("weight_stationary", gn=1, gp=2, interpret=True)
+def test_dma_accumulator_geometry_validated(mini_plan):
+    """PR 8 replaces the hardware-safety gate with manual-DMA
+    accumulator geometry checks: a healthy plan carries no dma/*
+    errors, a degenerate block size is caught at validate time, and
+    split-p weight-stationary (illegal pre-PR-8) is now clean."""
+    for lp in mini_plan.layers:
+        diags = res.validate_layer_plan(lp, batch=mini_plan.batch)
+        assert not [d for d in diags if d.check.startswith("dma/")
+                    and d.severity == "error"]
+    lp = mini_plan.layers[0]
+    bad = dataclasses.replace(
+        lp, tuning=dataclasses.replace(lp.tuning, block_n=0))
+    diags = res.validate_layer_plan(bad)
+    assert any(d.check == "dma/tile-bounds" and d.severity == "error"
+               for d in diags)
+    split = dataclasses.replace(
+        lp, tuning=dataclasses.replace(lp.tuning,
+                                       flow="weight_stationary",
+                                       block_p=1))
+    diags = res.validate_layer_plan(split)
+    assert not [d for d in diags if d.severity == "error"]
 
 
 def test_guard_policy_validated():
