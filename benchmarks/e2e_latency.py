@@ -96,6 +96,19 @@ BENCH_e2e.json schema
       activation) vs the einsum oracle, <= 1e-5, across ALL THREE
       flows x ALL THREE Hadamard modes, plus the max deviation from
       the windowed path (one-hot gather => 0.0).
+  sharded  (the multi-device column)
+      cost_model: the two-level Alg-1 cost model at D shards (full
+      VGG16 at D=8; smoke at D=4 under --quick) — per layer the chosen
+      partitioning strategy (spatial / channel / replicate), per-chip
+      HBM vs the single-chip autotuned footprint, ICI bytes and
+      serialization, plus the gating booleans
+      ``strategy_diversity_ge_2`` (Alg 1 run per layer must pick >= 2
+      distinct strategies), ``ici_bytes_positive`` and
+      ``per_chip_hbm_le_single_chip_all_layers``.
+      parity: live end-to-end check (present when >= 2 devices are
+      visible, e.g. under XLA_FLAGS=--xla_force_host_platform_device_
+      count=8): channel- and spatial-forced ShardedNetworkPlans under
+      shard_map vs the single-device einsum oracle, <= 1e-5.
 """
 
 from __future__ import annotations
@@ -476,6 +489,118 @@ def halo_parity_matrix(fft_size: int = 8, alpha: float = 4.0,
             "passes_1e-5": bool(worst_oracle <= 1e-5)}
 
 
+def sharded_cost_model(layers, fft_size: int = 8, alpha: float = 4.0,
+                       n_shards: int = 8, batch: int = 1) -> dict:
+    """The multi-device column: the two-level Alg-1 cost model
+    (``autotune.autotune_layer_sharded`` via
+    ``distributed.planner.spectral_plan_cell``) over the conv stack at
+    D shards.  Analytic — needs no devices — and gated:
+
+      strategy_diversity_ge_2   the tuner must pick >= 2 DISTINCT
+          partitionings across the stack (the whole point of running
+          Alg 1 per layer instead of per network: early large-canvas
+          convs shard spatially, late channel-heavy convs by channel).
+      ici_bytes_positive        a sharded network that claims zero
+          wire traffic is mis-modeling its collectives.
+      per_chip_hbm_le_single_chip_all_layers
+          every layer's per-chip HBM footprint under the chosen
+          strategy is <= the single-chip autotuned footprint of the
+          FULL layer — sharding must never inflate per-chip traffic.
+    """
+    from repro.core import autotune
+    from repro.distributed.planner import spectral_plan_cell
+
+    cell = spectral_plan_cell(layers, fft_size, alpha,
+                              n_shards=n_shards, batch=batch)
+    single = autotune.autotune_network(layers, fft_size, alpha,
+                                       batch=batch)
+    rows = []
+    for layer in layers:
+        t = cell["tunings"][layer.name]
+        s = single[layer.name]
+        rows.append({
+            "layer": layer.name,
+            "strategy": t.strategy,
+            "flow": t.base.flow,
+            "hadamard": t.base.hadamard,
+            "input_mode": t.base.input_mode,
+            "block_n": t.base.block_n,
+            "block_m": t.base.block_m,
+            "block_p": t.base.block_p,
+            "per_chip_hbm_bytes": t.per_chip_hbm_bytes,
+            "single_chip_hbm_bytes": s.hbm_bytes,
+            "ici_bytes": t.ici_bytes,
+            "ici_s": t.ici_s,
+            "sharded_s": t.sharded_s,
+            "single_chip_predicted_s": s.predicted_s,
+            "per_chip_le_single_chip": bool(
+                t.per_chip_hbm_bytes <= s.hbm_bytes),
+        })
+    distinct = sorted({r["strategy"] for r in rows})
+    return {
+        "n_shards": n_shards,
+        "batch": batch,
+        "alpha": alpha,
+        "layers": rows,
+        "strategy_counts": {
+            "spatial": cell["n_spatial"],
+            "channel": cell["n_channel"],
+            "replicate": cell["n_replicate"],
+        },
+        "distinct_strategies": distinct,
+        "per_chip_hbm_mb_worst": cell["per_chip_hbm_bytes"] / 1e6,
+        "ici_mb_total": cell["ici_bytes_total"] / 1e6,
+        "ici_s_total": cell["ici_s_total"],
+        "sharded_s_total": cell["sharded_s_total"],
+        "single_chip_s_total": sum(r["single_chip_predicted_s"]
+                                   for r in rows),
+        "strategy_diversity_ge_2": bool(len(distinct) >= 2),
+        "ici_bytes_positive": bool(cell["ici_bytes_total"] > 0),
+        "per_chip_hbm_le_single_chip_all_layers": all(
+            r["per_chip_le_single_chip"] for r in rows),
+    }
+
+
+def sharded_parity(cfg, n_shards: int = 2, batch: int = 1) -> dict:
+    """Live multi-device acceptance: channel- AND spatial-forced
+    ``ShardedNetworkPlan`` forward passes under ``shard_map`` on a real
+    ``n_shards``-device mesh match the single-device einsum oracle to
+    <= 1e-5 end-to-end (conv stack + pools + FC head).  Layers where a
+    forced strategy is infeasible (e.g. channel with D not dividing
+    c_in) fall back to 'replicate' per the plan builder — the mixed
+    plan still exercises the collectives on every feasible layer."""
+    from repro.core.plan import (build_network_plan,
+                                 build_sharded_network_plan)
+    from repro.distributed.executor import forward_spectral_sharded
+    from repro.launch.mesh import make_spectral_mesh
+    from repro.models import cnn
+
+    key = jax.random.PRNGKey(0)
+    params = cnn.init(key, cfg)
+    x = jax.random.normal(key, (batch, 3, cfg.image_size, cfg.image_size),
+                          jnp.float32)
+    base = build_network_plan(params, cfg, batch=batch)
+    ref = cnn.forward_spectral(params, base, x, backend="einsum")
+    mesh = make_spectral_mesh(n_shards)
+    out: dict = {"model": cfg.name, "n_shards": n_shards, "batch": batch}
+    worst = 0.0
+    for strat in ("channel", "spatial"):
+        splan = build_sharded_network_plan(
+            params, cfg, n_shards=n_shards, strategies=(strat,),
+            batch=batch)
+        y = forward_spectral_sharded(params, splan, x, mesh=mesh)
+        err = float(jnp.abs(y - ref).max())
+        counts = {}
+        for s in splan.strategies.values():
+            counts[s] = counts.get(s, 0) + 1
+        out[strat] = {"max_abs_logit_err": err,
+                      "strategy_counts": counts}
+        worst = max(worst, err)
+    out["max_abs_err"] = worst
+    out["passes_1e-5"] = bool(worst <= 1e-5)
+    return out
+
+
 def main() -> None:
     from repro.configs import vgg16_spectral
     from repro.core import dataflow as df
@@ -508,7 +633,7 @@ def main() -> None:
         "quick": bool(args.quick),
     }
 
-    print("[1/6] latency: oracle vs staged Pallas vs fused Pallas "
+    print("[1/7] latency: oracle vs staged Pallas vs fused Pallas "
           "(plan built per batch bucket, batch-tuned)")
     report["latency"] = {"smoke": latency_table(
         vgg16_spectral.SMOKE, iters=args.iters)}
@@ -523,7 +648,7 @@ def main() -> None:
     print(f"      fused<=einsum at every bucket: "
           f"{report['batch_sweep']['fused_le_einsum_all_buckets']}")
 
-    print(f"[2/6] {traffic_cfg.name} NetworkPlan (compile once: prune + "
+    print(f"[2/7] {traffic_cfg.name} NetworkPlan (compile once: prune + "
           "Alg 2 tables + compaction + mode-aware autotune)")
     t0 = time.perf_counter()
     params_full = cnn.init(jax.random.PRNGKey(0), traffic_cfg)
@@ -533,7 +658,7 @@ def main() -> None:
     print(f"      built in {report['plan_build_s']:.1f}s "
           f"({n_sched}/{len(plan_full.layers)} layers scheduled)")
 
-    print("[3/6] per-layer launches + analytic HBM traffic "
+    print("[3/7] per-layer launches + analytic HBM traffic "
           "(dense vs bin vs scheduled vs staged) + Alg-2 PE utilization")
     layer_rows = per_layer_traffic(plan_full, 8, batch=1)
     report["layers"] = layer_rows
@@ -601,7 +726,7 @@ def main() -> None:
           f"{t['launches_fused']} vs {t['launches_staged']}")
 
     if not args.quick:
-        print("[4/6] parity on full VGG16 (batch 1): fused vs spatial "
+        print("[4/7] parity on full VGG16 (batch 1): fused vs spatial "
               "(alpha=1) and fused-sparse+epilogue vs oracle (alpha=4)")
         report["parity"] = fused_parity_vs_spatial(df.VGG16_LAYERS, 8,
                                                    batch=1)
@@ -614,7 +739,7 @@ def main() -> None:
               f"{report['parity_sparse']['max_abs_err']:.2e} "
               f"(<= 1e-4: {report['parity_sparse']['passes_1e-4']})")
 
-    print("[5/6] SCHEDULED-fused parity vs einsum oracle (acceptance "
+    print("[5/7] SCHEDULED-fused parity vs einsum oracle (acceptance "
           "<= 1e-5)")
     sched = {"network_smoke": scheduled_network_parity(
         vgg16_spectral.SMOKE, batch=1)}
@@ -629,7 +754,7 @@ def main() -> None:
           f"{sched['network_smoke']['max_abs_logit_err']:.2e} "
           f"(<= 1e-5: {sched['network_smoke']['passes_1e-5']})")
 
-    print("[6/6] HALO input path parity vs einsum oracle, 3 flows x "
+    print("[6/7] HALO input path parity vs einsum oracle, 3 flows x "
           "3 Hadamard modes (acceptance <= 1e-5)")
     report["parity_halo"] = halo_parity_matrix(8, alpha=4.0, batch=1,
                                                small=args.quick)
@@ -638,6 +763,38 @@ def main() -> None:
           f"{ph['max_abs_err_vs_oracle']:.2e} (<= 1e-5: "
           f"{ph['passes_1e-5']}); vs windowed path "
           f"{ph['max_abs_err_vs_windowed']:.2e}")
+
+    print("[7/7] multi-device column: two-level Alg-1 cost model "
+          "(strategy per layer) + live sharded parity when the mesh "
+          "has devices")
+    if args.quick:
+        cost = sharded_cost_model(list(traffic_cfg.layers), 8,
+                                  alpha=traffic_cfg.alpha, n_shards=4)
+    else:
+        cost = sharded_cost_model(list(df.VGG16_LAYERS), 8, alpha=4.0,
+                                  n_shards=8)
+    report["sharded"] = {"cost_model": cost}
+    sc = cost["strategy_counts"]
+    print(f"      D={cost['n_shards']}: strategies "
+          f"spatial={sc['spatial']} channel={sc['channel']} "
+          f"replicate={sc['replicate']} "
+          f"(diversity>=2: {cost['strategy_diversity_ge_2']}); "
+          f"ICI {cost['ici_mb_total']:.1f} MB on the wire; worst "
+          f"per-chip HBM {cost['per_chip_hbm_mb_worst']:.1f} MB "
+          f"(<= single-chip on all layers: "
+          f"{cost['per_chip_hbm_le_single_chip_all_layers']}); "
+          f"predicted {1e3 * cost['sharded_s_total']:.2f} ms sharded "
+          f"vs {1e3 * cost['single_chip_s_total']:.2f} ms single-chip")
+    n_dev = len(jax.devices())
+    if n_dev >= 2:
+        par = sharded_parity(vgg16_spectral.SMOKE, n_shards=2, batch=1)
+        report["sharded"]["parity"] = par
+        print(f"      live parity on {par['n_shards']}/{n_dev} devices "
+              f"(channel + spatial forced): max abs logit err "
+              f"{par['max_abs_err']:.2e} (<= 1e-5: {par['passes_1e-5']})")
+    else:
+        print(f"      live parity skipped: {n_dev} device(s) visible "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
     _write_report_atomic(report, args.json)
     print(f"wrote {args.json}")
@@ -690,7 +847,18 @@ def _failed_gates(report: dict) -> list[tuple[str, object]]:
          report["parity_scheduled"]["network_smoke"]["passes_1e-5"]),
         ("parity_halo.passes_1e-5",
          report["parity_halo"]["passes_1e-5"]),
+        ("sharded.cost_model.strategy_diversity_ge_2",
+         report["sharded"]["cost_model"]["strategy_diversity_ge_2"]),
+        ("sharded.cost_model.ici_bytes_positive",
+         report["sharded"]["cost_model"]["ici_bytes_positive"]),
+        ("sharded.cost_model.per_chip_hbm_le_single_chip_all_layers",
+         report["sharded"]["cost_model"]
+         ["per_chip_hbm_le_single_chip_all_layers"]),
     ]
+    # live multi-device parity (absent on single-device hosts)
+    if "parity" in report.get("sharded", {}):
+        gates.append(("sharded.parity.passes_1e-5",
+                      report["sharded"]["parity"]["passes_1e-5"]))
     # full-run-only sweeps (absent under --quick)
     if "parity" in report:
         gates.append(("parity.passes_1e-3",

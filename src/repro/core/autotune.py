@@ -368,3 +368,152 @@ def _make_measure_fn(layer: df.ConvLayer, fft_size: int, alpha: float,
         return (time.perf_counter() - t0) / iters
 
     return measure
+
+
+# ---------------------------------------------------------------------------
+# Two-level Alg-1: strategy x (flow, blocks, modes) per layer (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardTuning:
+    """Chosen (partitioning strategy, shard-local kernel config) for one
+    conv layer on a D-shard mesh.
+
+    ``base`` is the per-chip ``FusedTuning`` of the shard-local
+    sub-problem (``dataflow.shard_local_layer``): its blocks are clamped
+    to the LOCAL dims (channel sharding tunes against c_in/D), and its
+    ``predicted_s`` is the per-chip roofline WITHOUT the collective —
+    ``sharded_s = predicted_s + ici_s`` is the two-level objective this
+    tuning minimizes.
+    """
+
+    base: FusedTuning
+    strategy: str                # one of dataflow.SHARD_STRATEGIES
+    n_shards: int
+    ici_bytes: float
+    ici_s: float
+    per_chip_hbm_bytes: float
+    sharded_s: float
+
+
+def autotune_layer_sharded(layer: df.ConvLayer, fft_size: int,
+                           alpha: float, *, n_shards: int,
+                           strategies: Sequence[str] | None = None,
+                           batch: int = 1,
+                           vmem_budget: int = df.TPU_VMEM_BYTES,
+                           blocks: Sequence[int] = BLOCK_CANDIDATES,
+                           hw_safe: bool = True,
+                           flows: Sequence[str] = FLOWS,
+                           active_bins: int | None = None,
+                           hadamard_modes: Sequence[str] | None = None,
+                           input_modes: Sequence[str] | None = None,
+                           schedule_r: int = df.SCHEDULE_R,
+                           schedule_mu: float = df.SCHEDULE_MU,
+                           step_overhead_s: float = 0.0) -> ShardTuning:
+    """Pick (strategy, flow, blocks[, hadamard, input_mode]) for one
+    layer on a ``n_shards``-device mesh — Alg 1 run one level up.
+
+    The candidate grid is the per-strategy product of
+    ``dataflow.SHARD_STRATEGIES`` (infeasible strategies drop out:
+    channel needs D | c_in, spatial needs a tile row per shard;
+    'replicate' is always feasible, so the search never comes back
+    empty) with the usual (flow, block) grid enumerated against the
+    SHARD-LOCAL layer dims.  Every candidate is priced by
+    ``dataflow.tpu_sharded_flow_cost`` and ranked by ``sharded_s`` =
+    per-chip roofline + ICI serialization, ties toward fewer grid steps
+    then fewer total (HBM + ICI) bytes — the same policy as
+    ``autotune_layer`` with the collective folded in.
+    """
+    strategies = (df.SHARD_STRATEGIES if strategies is None
+                  else list(strategies))
+    modes: Sequence[str | None] = (
+        [None] if hadamard_modes is None else list(hadamard_modes))
+    imodes: Sequence[str | None] = (
+        [None] if input_modes is None else list(input_modes))
+    scored: list[ShardTuning] = []
+    for strategy in strategies:
+        local = df.shard_local_layer(layer, fft_size, n_shards, strategy)
+        if local is None:
+            continue
+        for flow, bn, bm, bp in _layer_candidates(local, fft_size, batch,
+                                                  blocks, hw_safe, flows):
+            for mode in modes:
+                for imode in imodes:
+                    kw = {} if mode is None else {
+                        "hadamard": mode, "r": schedule_r,
+                        "mu": schedule_mu}
+                    if imode is not None:
+                        kw["input_mode"] = imode
+                    if step_overhead_s:
+                        kw["step_overhead_s"] = step_overhead_s
+                    c = df.tpu_sharded_flow_cost(
+                        layer, fft_size, alpha, bn, bp, bm, flow,
+                        n_shards=n_shards, strategy=strategy,
+                        batch=batch, active_bins=active_bins, **kw)
+                    if c is None or c["vmem_bytes"] > vmem_budget:
+                        continue
+                    tn = FusedTuning(
+                        layer.name, flow, bn, bm, bp, c["hbm_bytes"],
+                        c["vmem_bytes"], _predict(c), hadamard=mode,
+                        input_mode=imode,
+                        grid_steps=c.get("grid_steps"))
+                    scored.append(ShardTuning(
+                        base=tn, strategy=strategy, n_shards=n_shards,
+                        ici_bytes=c["ici_bytes"], ici_s=c["ici_s"],
+                        per_chip_hbm_bytes=c["per_chip_hbm_bytes"],
+                        sharded_s=c["sharded_s"]))
+    if not scored:
+        # Nothing fit the budget: replicate with the single-chip
+        # fallback tuning (autotune_layer's own over-budget escape
+        # hatch) so the caller still gets an executable config.
+        tn = autotune_layer(
+            layer, fft_size, alpha, batch=batch,
+            vmem_budget=vmem_budget, blocks=blocks, hw_safe=hw_safe,
+            flows=flows, active_bins=active_bins,
+            hadamard_modes=hadamard_modes, input_modes=input_modes,
+            schedule_r=schedule_r, schedule_mu=schedule_mu,
+            step_overhead_s=step_overhead_s)
+        return ShardTuning(base=tn, strategy="replicate",
+                           n_shards=n_shards, ici_bytes=0.0, ici_s=0.0,
+                           per_chip_hbm_bytes=tn.hbm_bytes,
+                           sharded_s=tn.predicted_s)
+    scored.sort(key=lambda st: (st.sharded_s,
+                                st.base.grid_steps
+                                if st.base.grid_steps is not None else 0.0,
+                                st.per_chip_hbm_bytes + st.ici_bytes))
+    return scored[0]
+
+
+def autotune_network_sharded(layers: Sequence[df.ConvLayer]
+                             = df.VGG16_LAYERS,
+                             fft_size: int = 8,
+                             alpha: "float | Sequence[float]" = 4.0, *,
+                             n_shards: int,
+                             batch: int = 1,
+                             vmem_budget: int = df.TPU_VMEM_BYTES,
+                             blocks: Sequence[int] = BLOCK_CANDIDATES,
+                             active_bins: dict[str, int] | None = None,
+                             hadamard_modes: Sequence[str] | None = None,
+                             input_modes: Sequence[str] | None = None,
+                             schedule_r: int = df.SCHEDULE_R,
+                             schedule_mu: float = df.SCHEDULE_MU,
+                             step_overhead_s: float = 0.0
+                             ) -> dict[str, ShardTuning]:
+    """Two-level Alg-1 over a conv stack -> {layer name: ShardTuning}.
+    Per-layer independent (activation layouts are reconciled at layer
+    boundaries by the sharded executor, so strategies mix freely —
+    channel-heavy late convs typically pick 'channel', large-image
+    early convs 'spatial')."""
+    from repro.core.sparse import per_layer_alphas
+
+    layers = list(layers)
+    alphas = per_layer_alphas(alpha, len(layers))
+    return {
+        layer.name: autotune_layer_sharded(
+            layer, fft_size, a, n_shards=n_shards, batch=batch,
+            vmem_budget=vmem_budget, blocks=blocks,
+            active_bins=(active_bins or {}).get(layer.name),
+            hadamard_modes=hadamard_modes, input_modes=input_modes,
+            schedule_r=schedule_r, schedule_mu=schedule_mu,
+            step_overhead_s=step_overhead_s)
+        for layer, a in zip(layers, alphas)}

@@ -38,7 +38,8 @@ import dataclasses
 import math
 from typing import Iterable
 
-from repro.core.spectral import halo_block_geometry, make_geometry
+from repro.core.spectral import (halo_block_geometry, make_geometry,
+                                 shard_band_rows)
 
 BRAM_DEPTH = 1024
 WORD_BYTES = 2  # 16-bit fixed point
@@ -656,3 +657,132 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
         "per_image_kernel_hbm_bytes": float(w_hbm) / batch,
         "per_image_s": total_s / batch,
     }
+
+
+# ---------------------------------------------------------------------------
+# Two-level Alg-1: per-chip HBM + ICI bytes for a sharded layer (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+# Per-layer partitioning strategies over a 1-D device mesh of D shards:
+#   'replicate'  every chip runs the whole layer (terminal rung of the
+#                sharded degradation ladder; also the only legal choice
+#                when neither split is feasible) — no ICI traffic, no
+#                per-chip savings;
+#   'channel'    split the input channels M: shard d owns c_in/D
+#                channels and the matching kernel slice, computes a
+#                PARTIAL conv (epilogue deferred) and ring-all-reduces
+#                the psum — the TPU translation of the paper's Flow-#3
+#                psum streaming, with the stream crossing ICI instead
+#                of DDR.  Feasible iff D divides c_in;
+#   'spatial'    split the tile rows: shard d owns a band of
+#                ceil(n_tiles_h/D) tile rows and receives the k-1 raw
+#                halo rows of its top neighbour over ICI before the
+#                conv (the PR-5 in-kernel halo gather's geometry, one
+#                level up).  Feasible iff the tile grid has at least
+#                one tile row per shard.
+SHARD_STRATEGIES = ("replicate", "channel", "spatial")
+
+
+def shard_local_layer(layer: ConvLayer, fft_size: int, n_shards: int,
+                      strategy: str) -> "ConvLayer | None":
+    """The shard-local sub-problem of ``layer`` as a ConvLayer, or None
+    when ``strategy`` is infeasible at ``n_shards``.
+
+    The returned layer is what ONE chip computes — feed it to
+    ``tpu_fused_flow_cost`` for the per-chip level of the two-level
+    model.  'channel' shrinks c_in; 'spatial' shrinks h_in to
+    ``tr*t - pad`` (the unique height whose ``make_geometry`` tile grid
+    is exactly the shard's tr = ceil(n_tiles_h/D) tile rows — the band's
+    k-1 in-buffer halo rows are ICI-accounted, not HBM-re-modeled).
+    """
+    if strategy not in SHARD_STRATEGIES:
+        raise ValueError(f"strategy must be one of {SHARD_STRATEGIES}, "
+                         f"got {strategy!r}")
+    if strategy == "replicate" or n_shards <= 1:
+        return layer
+    if strategy == "channel":
+        if layer.c_in % n_shards:
+            return None
+        return dataclasses.replace(layer, c_in=layer.c_in // n_shards)
+    geo = make_geometry(layer.h_in, layer.w_in, layer.ksize, fft_size,
+                        layer.pad)
+    if n_shards > geo.n_tiles_h:
+        return None
+    tr = shard_band_rows(geo, n_shards)
+    return dataclasses.replace(layer, h_in=tr * geo.tile - layer.pad)
+
+
+def shard_ici_bytes(layer: ConvLayer, n_shards: int, strategy: str,
+                    batch: int = 1, bytes_per_el: int = 4) -> float:
+    """Modeled inter-chip bytes of one sharded layer forward.
+
+      'replicate'  0 — nothing crosses ICI.
+      'channel'    ring all-reduce of the [B, N, H_out, W_out] psum:
+                   each chip sends (and receives) 2*(D-1)/D of the
+                   output bytes (reduce-scatter + all-gather).
+      'spatial'    each interior boundary moves exactly the k-1 raw
+                   halo rows one hop down: (D-1) * (k-1) * W * M * B
+                   words (outputs stay resident — bands concatenate
+                   only at the consumer, which is itself band-sharded).
+    """
+    if strategy == "replicate" or n_shards <= 1:
+        return 0.0
+    if strategy == "channel":
+        h_out = layer.h_in + 2 * layer.pad - layer.ksize + 1
+        w_out = layer.w_in + 2 * layer.pad - layer.ksize + 1
+        out_bytes = layer.c_out * h_out * w_out * batch * bytes_per_el
+        return 2.0 * (n_shards - 1) / n_shards * out_bytes
+    if strategy == "spatial":
+        return float((n_shards - 1) * (layer.ksize - 1) * layer.w_in
+                     * layer.c_in * batch * bytes_per_el)
+    raise ValueError(f"strategy must be one of {SHARD_STRATEGIES}, "
+                     f"got {strategy!r}")
+
+
+def tpu_sharded_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
+                          block_n: int, block_p: int, block_m: int,
+                          flow: str, *, n_shards: int, strategy: str,
+                          batch: int = 1, bytes_per_el: int = 4,
+                          active_bins: int | None = None,
+                          hadamard: str | None = None,
+                          r: int = SCHEDULE_R, mu: float = SCHEDULE_MU,
+                          input_mode: str | None = None,
+                          step_overhead_s: float = 0.0
+                          ) -> "dict[str, float] | None":
+    """Two-level Alg-1 cost: ONE CHIP's ``tpu_fused_flow_cost`` of the
+    shard-local sub-problem, plus the ICI collective priced at
+    ``TPU_ICI_GBPS``.  Returns None when ``strategy`` is infeasible at
+    ``n_shards`` (channel: D must divide c_in; spatial: at least one
+    tile row per shard).
+
+    Adds to the per-chip cost dict:
+      'strategy' / 'n_shards'   the partitioning priced,
+      'per_chip_hbm_bytes'      alias of the local 'hbm_bytes',
+      'ici_bytes' / 'ici_s'     the collective's bytes and serialized
+                                time (ICI does not overlap the fused
+                                kernel today: channel's all-reduce
+                                waits on the full psum, spatial's halo
+                                exchange precedes the conv),
+      'sharded_s'               the two-level objective
+                                per-chip predicted + ici_s.
+    """
+    local = shard_local_layer(layer, fft_size, n_shards, strategy)
+    if local is None:
+        return None
+    c = tpu_fused_flow_cost(local, fft_size, alpha, block_n, block_p,
+                            block_m, flow, batch=batch,
+                            bytes_per_el=bytes_per_el,
+                            active_bins=active_bins, hadamard=hadamard,
+                            r=r, mu=mu, input_mode=input_mode,
+                            step_overhead_s=step_overhead_s)
+    ici = shard_ici_bytes(layer, n_shards, strategy, batch, bytes_per_el)
+    chip_s = c["serial_s"] + c["step_s"] + max(c["hbm_s"], c["compute_s"])
+    c.update({
+        "strategy": strategy,
+        "n_shards": int(n_shards),
+        "per_chip_hbm_bytes": c["hbm_bytes"],
+        "ici_bytes": float(ici),
+        "ici_s": float(ici) / TPU_ICI_GBPS,
+        "sharded_s": chip_s + float(ici) / TPU_ICI_GBPS,
+    })
+    return c

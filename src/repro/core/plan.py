@@ -456,19 +456,32 @@ def _operators(geo: spec.SpectralGeometry, active: np.ndarray | None):
 # Keyed plan cache (serving front end)
 # ---------------------------------------------------------------------------
 
-def plan_cache_key(cfg, batch: int, **build_kwargs) -> tuple:
+def plan_cache_key(cfg, batch: int, *,
+                   mesh_shape: Sequence[int] | None = None,
+                   **build_kwargs) -> tuple:
     """Cache key for one compiled ``NetworkPlan``: (config name,
-    fft_size, per-layer alpha, batch bucket, build options).
+    fft_size, per-layer alpha, batch bucket, mesh shape, build options).
 
     Everything else a plan depends on (layer geometry, pool placement)
     is a function of the named config; alpha is normalized so a scalar
     and the equivalent per-layer sequence key identically.  Build
     kwargs (forced hadamard/input_mode, vmem budget, ...) are folded in
     by repr so plans built with different options never collide.
+
+    ``mesh_shape`` is the device topology the plan targets and is part
+    of the key — a sharded plan's shard geometry, collective shapes and
+    Alg-2 table slices are all functions of the mesh, so a plan built
+    for one mesh must never be served to another (serving it would be
+    silent cross-mesh cache poisoning: wrong shard math, not an error).
+    ``None`` (single-device / unsharded) keys distinctly from every
+    concrete mesh, including ``(1,)``.
     """
     alphas = sp.per_layer_alphas(cfg.alpha, len(list(cfg.layers)))
+    mesh = (tuple(int(d) for d in mesh_shape)
+            if mesh_shape is not None else None)
     return (getattr(cfg, "name", "spectral-cnn"), int(cfg.fft_size),
             tuple(float(a) for a in alphas), int(batch),
+            ("mesh", mesh),
             tuple(sorted((k, repr(v)) for k, v in build_kwargs.items())))
 
 
@@ -501,21 +514,33 @@ class PlanCache:
     build_s: float = 0.0
 
     def warm(self, params: dict, cfg, batches: Sequence[int],
+             mesh_shape: Sequence[int] | None = None,
              **build_kwargs) -> dict:
         """Build (or confirm) one plan per batch bucket; returns
         {bucket: key} for the entries warmed."""
-        return {int(b): self.key_of(params, cfg, int(b), **build_kwargs)
+        return {int(b): self.key_of(params, cfg, int(b),
+                                    mesh_shape=mesh_shape,
+                                    **build_kwargs)
                 for b in batches}
 
-    def key_of(self, params: dict, cfg, batch: int, **build_kwargs
-               ) -> tuple:
+    def key_of(self, params: dict, cfg, batch: int,
+               mesh_shape: Sequence[int] | None = None,
+               **build_kwargs) -> tuple:
         """``get`` that returns the cache key instead of the plan."""
-        self.get(params, cfg, batch, **build_kwargs)
-        return plan_cache_key(cfg, batch, **build_kwargs)
+        self.get(params, cfg, batch, mesh_shape=mesh_shape,
+                 **build_kwargs)
+        return plan_cache_key(cfg, batch, mesh_shape=mesh_shape,
+                              **build_kwargs)
 
-    def get(self, params: dict, cfg, batch: int, **build_kwargs
-            ) -> NetworkPlan:
-        key = plan_cache_key(cfg, batch, **build_kwargs)
+    def get(self, params: dict, cfg, batch: int,
+            mesh_shape: Sequence[int] | None = None,
+            **build_kwargs) -> NetworkPlan:
+        # mesh_shape participates in the KEY only: builders that target
+        # a mesh (e.g. a closure over build_sharded_network_plan) carry
+        # the topology themselves, and build_network_plan has no mesh
+        # concept — but both must key by it (cross-mesh poisoning).
+        key = plan_cache_key(cfg, batch, mesh_shape=mesh_shape,
+                             **build_kwargs)
         plan = self._plans.get(key)
         if plan is not None:
             self.hits += 1
@@ -546,3 +571,299 @@ class PlanCache:
                 "misses": self.misses, "builds": self.builds,
                 "invalidations": self.invalidations,
                 "build_s": self.build_s}
+
+
+# ---------------------------------------------------------------------------
+# Sharded plans (multi-device execution under shard_map)
+# ---------------------------------------------------------------------------
+
+def _pad_layer_tables(tabs: Sequence[sch.LayerTables]) -> list[PlanTables]:
+    """Pad per-shard Alg-2 tables to a common cycle count T.
+
+    Channel shards schedule DIFFERENT kernel slices, so their exact-cover
+    schedules can differ in length; ``shard_map`` stacks the per-shard
+    operands into one array and needs uniform shapes.  Padded cycles
+    carry idx=0, sel=0 and vr=vi=0.0 — the zero weight kills both the
+    MAC and the scatter contribution, so they are inert (the same
+    convention ``scheduler.compile_layer_tables`` uses for its own
+    padding).
+    """
+    t_max = max(t.idx.shape[2] for t in tabs)
+    out = []
+    for t in tabs:
+        pad_t = t_max - t.idx.shape[2]
+        pads4 = ((0, 0), (0, 0), (0, pad_t), (0, 0))
+        out.append(PlanTables(
+            jnp.asarray(np.pad(t.idx, pads4)),
+            jnp.asarray(np.pad(t.sel, pads4)),
+            jnp.asarray(np.pad(t.vr, pads4)),
+            jnp.asarray(np.pad(t.vi, pads4))))
+    return out
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedLayerPlan:
+    """One conv layer's multi-device execution plan.
+
+    ``base`` is the unsharded ``LayerPlan`` (the single-device truth:
+    full geometry, full kernels, the fused epilogue and the pool-after
+    flag — always executable as-is, and the terminal fallback of the
+    sharded degradation ladder).  ``shards`` holds the shard-LOCAL
+    plans the executor runs under ``shard_map``:
+
+      'replicate'  () — every device executes ``base`` identically;
+      'spatial'    (band_plan,) — ONE plan shared by all shards: the
+          shard-local layer (``dataflow.shard_local_layer``) over the
+          band geometry (``spectral.make_band_geometry``), whose
+          ``pre_halo_h`` rows arrive from the left mesh neighbor via
+          ``ppermute`` before the kernel runs;
+      'channel'    D plans — shard d owns input channels
+          [d*M/D, (d+1)*M/D): kernels/planes/tables sliced on the
+          channel axis, bias+ReLU DEFERRED (``EpilogueSpec(False,
+          False)``) because shard outputs are partial sums — the
+          executor applies ``base.epilogue`` after the psum.
+
+    ``tuning`` is the two-level Alg-1 verdict (``autotune.ShardTuning``)
+    that chose the strategy; ``provenance`` audits shard-level
+    demotions (``resilience.harden_sharded_plan``).
+    """
+
+    base: LayerPlan
+    strategy: str                     # dataflow.SHARD_STRATEGIES
+    n_shards: int
+    tuning: at.ShardTuning
+    shards: tuple[LayerPlan, ...]
+    provenance: tuple[str, ...] = ()
+
+    def stats(self) -> dict:
+        row = self.base.stats()
+        row.update({
+            "strategy": self.strategy,
+            "n_shards": self.n_shards,
+            "ici_bytes": self.tuning.ici_bytes,
+            "per_chip_hbm_bytes": self.tuning.per_chip_hbm_bytes,
+            "sharded_s": self.tuning.sharded_s,
+            "shard_demotions": len(self.provenance),
+        })
+        return row
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedNetworkPlan:
+    """A ``NetworkPlan`` plus its per-layer partitioning for one mesh.
+
+    ``base`` remains fully executable on a single device (it IS the
+    parity oracle the sharded tests compare against); ``layers`` align
+    1:1 with ``base.layers``.  ``mesh_shape`` records the device
+    topology the plan was built for — a plan built for one mesh must
+    never serve another (see ``plan_cache_key(mesh_shape=...)``).
+    """
+
+    base: NetworkPlan
+    n_shards: int
+    mesh_shape: tuple[int, ...]
+    layers: tuple[ShardedLayerPlan, ...]
+    axis: str = "shard"
+
+    @property
+    def name(self) -> str:
+        return self.base.name
+
+    @property
+    def fft_size(self) -> int:
+        return self.base.fft_size
+
+    @property
+    def batch(self) -> int:
+        return self.base.batch
+
+    @property
+    def strategies(self) -> dict[str, str]:
+        return {slp.base.layer.name: slp.strategy for slp in self.layers}
+
+    def summary(self) -> list[dict]:
+        return [slp.stats() for slp in self.layers]
+
+
+def _band_tables(lp: LayerPlan, tn: at.FusedTuning,
+                 schedule_r: int) -> PlanTables | None:
+    """Tables for the spatial band plan (full channels; reuses the base
+    tables when the tuned blocks agree, recompiles otherwise)."""
+    if tn.hadamard != "scheduled":
+        return None
+    n, m = lp.layer.c_out, lp.layer.c_in
+    bt = lp.tuning
+    if (lp.tables is not None
+            and min(tn.block_n, n) == min(bt.block_n, n)
+            and min(tn.block_m, m) == min(bt.block_m, m)):
+        return lp.tables
+    k2 = lp.geo.fft_size ** 2
+    lt = sch.compile_layer_tables(
+        np.asarray(lp.kernels.indices),
+        np.asarray(lp.kernels.values).reshape(n, m, k2),
+        k2, schedule_r, min(tn.block_n, n),
+        active=lp.active, m_pad_to=min(tn.block_m, m))
+    return PlanTables(jnp.asarray(lt.idx), jnp.asarray(lt.sel),
+                      jnp.asarray(lt.vr), jnp.asarray(lt.vi))
+
+
+def make_sharded_layer_plan(lp: LayerPlan, st: at.ShardTuning,
+                            n_shards: int, *,
+                            schedule_r: int = df.SCHEDULE_R
+                            ) -> ShardedLayerPlan:
+    """Construct the shard-local plans for one layer (see
+    ``ShardedLayerPlan``).  Also the REBUILD step of the sharded
+    degradation ladder: after ``resilience`` demotes the base plan one
+    rung, calling this again re-derives consistent shard plans.
+
+    A base plan demoted off the fused backend executes replicated —
+    sharded execution is a fused-kernel path; 'staged'/'einsum' rungs
+    run the base plan outside ``shard_map`` (a plan-level, uniform
+    decision, so no device can be left waiting on a collective).
+    """
+    strategy = st.strategy
+    if (n_shards <= 1 or strategy == "replicate"
+            or lp.backend != "fused"):
+        return ShardedLayerPlan(
+            base=lp, strategy="replicate", n_shards=n_shards,
+            tuning=st, shards=())
+    local = df.shard_local_layer(lp.layer, lp.geo.fft_size, n_shards,
+                                 strategy)
+    if local is None:                 # infeasible at this D: replicate
+        return ShardedLayerPlan(
+            base=lp, strategy="replicate", n_shards=n_shards,
+            tuning=st, shards=())
+    tn = st.base
+    hadamard = tn.hadamard or lp.hadamard
+    input_mode = tn.input_mode or lp.input_mode
+    if strategy == "spatial":
+        tr = spec.shard_band_rows(lp.geo, n_shards)
+        band_geo = spec.make_band_geometry(lp.geo, tr)
+        band = dataclasses.replace(
+            lp, layer=local, geo=band_geo, tuning=tn,
+            epilogue=dataclasses.replace(lp.epilogue, pool=False),
+            hadamard=hadamard, input_mode=input_mode,
+            tables=_band_tables(lp, tn, schedule_r))
+        return ShardedLayerPlan(base=lp, strategy="spatial",
+                                n_shards=n_shards, tuning=st,
+                                shards=(band,))
+    # channel: slice kernels/planes/tables on the input-channel axis;
+    # shard outputs are PARTIAL sums, so bias+ReLU defer to post-psum.
+    mloc = local.c_in
+    k2 = lp.geo.fft_size ** 2
+    no_epi = EpilogueSpec(bias=False, relu=False, pool=False)
+    zero_bias = jnp.zeros_like(lp.bias)
+    sliced = []
+    raw_tables: list[sch.LayerTables] = []
+    for d in range(n_shards):
+        sl = slice(d * mloc, (d + 1) * mloc)
+        sk = lp.kernels
+        skd = sp.SparseSpectralKernels(
+            values=sk.values[:, sl], mask=sk.mask[:, sl],
+            indices=sk.indices[:, sl], alpha=sk.alpha,
+            active_bins=sk.active_bins)
+        sliced.append(skd)
+        if hadamard == "scheduled":
+            raw_tables.append(sch.compile_layer_tables(
+                np.asarray(skd.indices),
+                np.asarray(skd.values).reshape(lp.layer.c_out, mloc, k2),
+                k2, schedule_r, min(tn.block_n, lp.layer.c_out),
+                active=lp.active, m_pad_to=min(tn.block_m, mloc)))
+    tables = (_pad_layer_tables(raw_tables) if raw_tables
+              else [None] * n_shards)
+    shards = tuple(
+        dataclasses.replace(
+            lp, layer=local, kernels=sliced[d], tuning=tn,
+            epilogue=no_epi, bias=zero_bias,
+            wr=lp.wr[:, :, d * mloc:(d + 1) * mloc],
+            wi=lp.wi[:, :, d * mloc:(d + 1) * mloc],
+            hadamard=hadamard, input_mode=input_mode,
+            schedule_cycles=(raw_tables[d].total_cycles
+                             if raw_tables else lp.schedule_cycles),
+            pe_utilization=(raw_tables[d].pe_utilization
+                            if raw_tables else lp.pe_utilization),
+            tables=tables[d])
+        for d in range(n_shards))
+    return ShardedLayerPlan(base=lp, strategy="channel",
+                            n_shards=n_shards, tuning=st, shards=shards)
+
+
+def resharded_layer_plan(slp: ShardedLayerPlan, new_base: LayerPlan, *,
+                         schedule_r: int = df.SCHEDULE_R,
+                         note: str | None = None) -> ShardedLayerPlan:
+    """Rebuild a ``ShardedLayerPlan`` around a demoted base plan.
+
+    The shard-local tuning inherits the demoted base's hadamard /
+    input-mode so shard plans track the base down the ladder; once the
+    base leaves the fused backend, ``make_sharded_layer_plan`` collapses
+    the strategy to 'replicate' (terminal rung — structurally immune to
+    collective hangs because no shard_map runs at all).
+    """
+    tn = dataclasses.replace(slp.tuning.base,
+                             hadamard=new_base.hadamard,
+                             input_mode=new_base.input_mode)
+    st = dataclasses.replace(slp.tuning, base=tn)
+    rebuilt = make_sharded_layer_plan(new_base, st, slp.n_shards,
+                                      schedule_r=schedule_r)
+    prov = slp.provenance + ((note,) if note else ())
+    return dataclasses.replace(rebuilt, provenance=prov)
+
+
+def build_sharded_network_plan(params: dict, cfg, *,
+                               n_shards: int,
+                               mesh_shape: Sequence[int] | None = None,
+                               batch: int = 1,
+                               strategies: Sequence[str] | None = None,
+                               validate: bool = True,
+                               **build_kwargs) -> ShardedNetworkPlan:
+    """Compile a ``NetworkPlan`` AND its per-layer partitioning.
+
+    Builds the single-device base plan first (``build_network_plan``,
+    which also serves as the parity oracle), then runs the two-level
+    Alg-1 (``autotune.autotune_layer_sharded``) per layer over the
+    surviving hadamard/input-mode candidates and materializes the
+    shard-local plans (``make_sharded_layer_plan``).
+
+    ``mesh_shape`` defaults to ``(n_shards,)``; ``strategies`` restricts
+    the partitioning search (e.g. ``("channel",)`` for a forced-mode
+    test).  Remaining kwargs flow to ``build_network_plan`` and the
+    relevant ones (vmem budget, blocks, schedule knobs) are re-read for
+    the sharded tuner so both levels cost the same machine.
+    """
+    base = build_network_plan(params, cfg, batch=batch,
+                              validate=validate, **build_kwargs)
+    vmem_budget = build_kwargs.get("vmem_budget", df.TPU_VMEM_BYTES)
+    blocks = build_kwargs.get("blocks", at.BLOCK_CANDIDATES)
+    hw_safe = build_kwargs.get("hw_safe", True)
+    schedule = build_kwargs.get("schedule", True)
+    schedule_r = build_kwargs.get("schedule_r", 10)
+    schedule_mu = build_kwargs.get("schedule_mu", df.SCHEDULE_MU)
+    step_overhead_s = build_kwargs.get("step_overhead_s", 0.0)
+    hadamard = build_kwargs.get("hadamard", "auto")
+    input_mode = build_kwargs.get("input_mode", "auto")
+
+    slayers = []
+    for lp in base.layers:
+        modes = _resolve_hadamard_modes(hadamard, lp.alpha, schedule,
+                                        lp.active)
+        imodes = _resolve_input_modes(input_mode)
+        st = at.autotune_layer_sharded(
+            lp.layer, base.fft_size, lp.alpha, n_shards=n_shards,
+            strategies=strategies, batch=batch,
+            vmem_budget=vmem_budget, blocks=blocks, hw_safe=hw_safe,
+            active_bins=(len(lp.active) if lp.active is not None
+                         else None),
+            hadamard_modes=modes, input_modes=imodes,
+            schedule_r=schedule_r, schedule_mu=schedule_mu,
+            step_overhead_s=step_overhead_s)
+        slayers.append(make_sharded_layer_plan(lp, st, n_shards,
+                                               schedule_r=schedule_r))
+    splan = ShardedNetworkPlan(
+        base=base, n_shards=n_shards,
+        mesh_shape=(tuple(int(d) for d in mesh_shape)
+                    if mesh_shape is not None else (n_shards,)),
+        layers=tuple(slayers))
+    if validate:
+        res.validate_sharded_plan(splan, vmem_budget=vmem_budget,
+                                  hw_safe=hw_safe)
+    return splan

@@ -143,9 +143,14 @@ class Diagnostic:
 # the serving front end (``launch.spectral_serve``): a kernel fault
 # mid-request, a corrupted plan fetched from the keyed plan cache, and
 # injected per-batch slowness (deadline pressure).
+# ``shard_tables`` is shard-scoped: its context carries the shard index
+# (plus layer/strategy), so a fault can corrupt or fail ONE shard of a
+# sharded plan.  It is consulted host-side — at shard-plan preparation
+# and probing — never inside a shard_map body, where per-device python
+# control flow does not exist (the body traces once for all devices).
 FAULT_SITES = ("lowering", "vmem_overflow", "oob_index", "corrupt_value",
-               "nan_activations", "serve_kernel", "serve_plan_cache",
-               "serve_slow")
+               "nan_activations", "shard_tables", "serve_kernel",
+               "serve_plan_cache", "serve_slow")
 
 
 @dataclasses.dataclass
@@ -941,3 +946,250 @@ def apply_guards(x, y, lp, guards: NumericGuards):
                 f"({guards.parity_channels} channels, "
                 f"{guards.parity_batch} image(s))")
     return y
+
+
+# ---------------------------------------------------------------------------
+# (5) Sharded plans: partition validation + the sharded degradation ladder
+# ---------------------------------------------------------------------------
+
+def validate_layer_partition(slp, *, batch: int = 1) -> list[Diagnostic]:
+    """Partition invariants of one ``core.plan.ShardedLayerPlan``:
+    per-shard geometry AND the shapes every ICI collective assumes.
+
+    The collective checks matter because a mismatch there does not
+    raise — it HANGS (a psum over differently-shaped partials, or a
+    ppermute whose halo width disagrees with the receiver's
+    ``pre_halo_h``, deadlocks the mesh).  Checked per strategy:
+
+      spatial   one shared band plan; ``pre_halo_h`` == k-1 (the rows
+          ppermute ships), band rows == ``shard_band_rows``, band
+          covers the full canvas, W-axis untouched;
+      channel   D shard plans; D | c_in; every shard the SAME local
+          dims, geometry and output channels (psum operands must agree
+          elementwise), epilogue deferred (bias/relu post-psum, else
+          the bias is summed D times), Alg-2 tables padded to one T
+          (they stack into a single shard-mapped operand);
+      replicate no shard plans at all.
+    """
+    out: list[Diagnostic] = []
+    name = slp.base.layer.name
+    d = lambda check, msg, sev="error": out.append(
+        Diagnostic(name, check, msg, sev))
+
+    if slp.strategy not in df.SHARD_STRATEGIES:
+        d("shard/strategy", f"unknown strategy {slp.strategy!r}; must "
+                            f"be one of {df.SHARD_STRATEGIES}")
+        return out
+    if slp.strategy == "replicate":
+        if slp.shards:
+            d("shard/replicate", f"replicate carries {len(slp.shards)} "
+                                 f"shard plans; expected none")
+        return out
+    if slp.base.backend != "fused":
+        d("shard/backend", f"sharded execution requires the fused "
+                           f"backend; base is {slp.base.backend!r} "
+                           f"(demote to 'replicate' instead)")
+    geo = slp.base.geo
+    ov = geo.ksize - 1
+    D = slp.n_shards
+
+    if slp.strategy == "spatial":
+        if len(slp.shards) != 1:
+            d("shard/spatial", f"spatial wants ONE shared band plan, "
+                               f"got {len(slp.shards)}")
+            return out
+        band = slp.shards[0]
+        bg = band.geo
+        tr = spec.shard_band_rows(geo, D)
+        if bg.pre_halo_h != ov:
+            d("shard/halo-rows",
+              f"band pre_halo_h={bg.pre_halo_h} != k-1={ov}; the "
+              f"ppermute ships exactly k-1 rows per boundary — the "
+              f"receiver would mis-index every tile")
+        if bg.n_tiles_h != tr:
+            d("shard/band-rows",
+              f"band has {bg.n_tiles_h} tile rows, shard_band_rows "
+              f"says {tr}")
+        if bg.h_in != ov + tr * geo.tile or bg.h_pad != tr * geo.tile:
+            d("shard/band-height",
+              f"band h_in={bg.h_in}/h_pad={bg.h_pad} inconsistent with "
+              f"{tr} tile rows of stride {geo.tile} plus {ov} halo rows")
+        if D * tr < geo.n_tiles_h:
+            d("shard/coverage",
+              f"{D} bands x {tr} tile rows cover {D * tr} < "
+              f"{geo.n_tiles_h} canvas tile rows")
+        if (bg.w_in, bg.w_pad, bg.n_tiles_w) != (geo.w_in, geo.w_pad,
+                                                 geo.n_tiles_w):
+            d("shard/band-width",
+              f"band W-axis {(bg.w_in, bg.w_pad, bg.n_tiles_w)} != "
+              f"base {(geo.w_in, geo.w_pad, geo.n_tiles_w)}; spatial "
+              f"sharding splits rows only")
+        if band.layer.c_in != slp.base.layer.c_in:
+            d("shard/band-channels",
+              f"band c_in={band.layer.c_in} != {slp.base.layer.c_in}; "
+              f"spatial shards keep full channels")
+        return out
+
+    # channel
+    if len(slp.shards) != D:
+        d("shard/channel", f"channel wants {D} shard plans, got "
+                           f"{len(slp.shards)}")
+        return out
+    M = slp.base.layer.c_in
+    if M % D:
+        d("shard/divisibility", f"c_in={M} not divisible by D={D}")
+        return out
+    mloc = M // D
+    t_lens = set()
+    for i, sh in enumerate(slp.shards):
+        if sh.layer.c_in != mloc:
+            d("shard/local-dims",
+              f"shard {i} c_in={sh.layer.c_in} != c_in/D={mloc}")
+        if sh.layer.c_out != slp.base.layer.c_out or sh.geo != geo:
+            d("shard/psum-shape",
+              f"shard {i} output shape disagrees with the others "
+              f"(c_out={sh.layer.c_out}, geo mismatch={sh.geo != geo}) "
+              f"— psum operands must agree elementwise or the "
+              f"collective deadlocks")
+        if sh.epilogue.bias or sh.epilogue.relu:
+            d("shard/epilogue",
+              f"shard {i} fuses bias/relu into a PARTIAL sum; channel "
+              f"shards must defer the epilogue to post-psum")
+        if sh.tables is not None:
+            t_lens.add(int(np.asarray(sh.tables.idx).shape[2]))
+    if len(t_lens) > 1:
+        d("shard/table-pad",
+          f"shard Alg-2 tables disagree on cycle count T {sorted(t_lens)}"
+          f"; they stack into one shard-mapped operand — pad to max T")
+    return out
+
+
+def validate_sharded_plan(splan, *,
+                          vmem_budget: int = df.TPU_VMEM_BYTES,
+                          hw_safe: bool = True,
+                          raise_on_error: bool = True
+                          ) -> list[Diagnostic]:
+    """Validate a ``core.plan.ShardedNetworkPlan``: the base plan, every
+    shard-local ``LayerPlan`` (full ``validate_layer_plan`` — shard
+    plans carry LOCAL dims, so table/operand/halo checks see the shapes
+    the kernel will), and the partition/collective invariants
+    (``validate_layer_partition``)."""
+    diags: list[Diagnostic] = []
+    batch = splan.base.batch
+    if len(splan.layers) != len(splan.base.layers):
+        diags.append(Diagnostic(
+            "<plan>", "shard/alignment",
+            f"{len(splan.layers)} sharded layers vs "
+            f"{len(splan.base.layers)} base layers"))
+    if int(np.prod(splan.mesh_shape)) != splan.n_shards:
+        diags.append(Diagnostic(
+            "<plan>", "shard/mesh",
+            f"mesh_shape {splan.mesh_shape} has "
+            f"{int(np.prod(splan.mesh_shape))} devices, plan says "
+            f"n_shards={splan.n_shards}"))
+    for slp in splan.layers:
+        for sh in slp.shards:
+            diags.extend(validate_layer_plan(
+                sh, batch=batch, vmem_budget=vmem_budget,
+                hw_safe=hw_safe))
+        diags.extend(validate_layer_partition(slp, batch=batch))
+    errors = [d for d in diags if d.severity == "error"]
+    if errors and raise_on_error:
+        raise PlanValidationError(
+            f"sharded plan {splan.name!r} failed validation "
+            f"({len(errors)} error(s))",
+            layer=errors[0].layer, site="validate_sharded_plan",
+            diagnostics=errors)
+    return diags
+
+
+def probe_sharded_layer(slp, *, batch: int = 1,
+                        interpret: bool | None = None
+                        ) -> BaseException | None:
+    """Capability probe for one sharded layer: consult the shard-scoped
+    fault site, then compile + run every shard-local plan on zeros.
+
+    Host-side and mesh-free by design: each shard plan executes as an
+    ordinary single-device program (the collective wrappers add only
+    ppermute/psum around these exact kernels), so a shard whose tables
+    were corrupted or whose variant cannot lower is caught HERE — at
+    plan time, before any device enters a collective it can never leave.
+    """
+    for i, sh in enumerate(slp.shards):
+        try:
+            fault_check("shard_tables", layer=slp.base.layer.name,
+                        shard=i, strategy=slp.strategy)
+        except BaseException as e:      # noqa: BLE001 — probe boundary
+            if isinstance(e, (KeyboardInterrupt, SystemExit)):
+                raise
+            return e
+        err = probe_layer_plan(sh, batch=batch, interpret=interpret)
+        if err is not None:
+            return err
+    if not slp.shards:                  # replicate: probe the base
+        return probe_layer_plan(slp.base, batch=batch,
+                                interpret=interpret)
+    return None
+
+
+def harden_sharded_plan(splan, *,
+                        vmem_budget: int = df.TPU_VMEM_BYTES,
+                        hw_safe: bool = True,
+                        interpret: bool | None = None,
+                        probe: bool = True):
+    """Per-layer degradation ladder for a sharded plan.
+
+    Structured demotion instead of a collective hang: every check and
+    probe runs host-side per shard (``probe_sharded_layer``), and every
+    demotion is a PLAN-level decision applied before any shard_map is
+    entered — all devices always trace the same program.  A failing
+    layer walks the same ladder as ``harden_network_plan`` applied to
+    its BASE plan (halo->windowed, scheduled->dense, fused->staged ->
+    einsum), and the shard plans are REBUILT from the demoted base at
+    each rung (``plan.resharded_layer_plan``); once the base leaves the
+    fused backend the strategy collapses to 'replicate', whose terminal
+    einsum rung always executes.
+
+    Returns a new ``ShardedNetworkPlan`` (same objects where healthy);
+    per-layer shard demotions append to ``ShardedLayerPlan.provenance``.
+    """
+    import dataclasses as dc
+
+    from repro.core import plan as pl
+
+    batch = splan.base.batch
+    new_layers = []
+    for slp in splan.layers:
+        for _ in range(len(DEMOTION_LADDER) + 1):
+            issue: BaseException | None = None
+            diags = [dg for sh in slp.shards
+                     for dg in validate_layer_plan(
+                         sh, batch=batch, vmem_budget=vmem_budget,
+                         hw_safe=hw_safe)]
+            diags += validate_layer_partition(slp, batch=batch)
+            bad = [dg for dg in diags
+                   if dg.severity == "error" or dg.check == "vmem-budget"]
+            if bad:
+                issue = PlanValidationError(
+                    f"sharded layer {slp.base.layer.name} failed "
+                    f"validation", layer=slp.base.layer.name,
+                    site="harden_sharded", diagnostics=bad)
+            if issue is None and probe:
+                issue = probe_sharded_layer(slp, batch=batch,
+                                            interpret=interpret)
+            if issue is None:
+                break
+            demoted = demote_layer(slp.base, batch=batch, reason=issue)
+            if demoted is None:
+                raise KernelLoweringError(
+                    f"sharded layer {slp.base.layer.name} failed on "
+                    f"the terminal replicated-einsum rung: "
+                    f"{_summarize(issue)}",
+                    layer=slp.base.layer.name,
+                    site="harden_sharded") from issue
+            slp = pl.resharded_layer_plan(
+                slp, demoted, note=f"shard ladder: {_summarize(issue)}")
+        new_layers.append(slp)
+    base = dc.replace(splan.base,
+                      layers=tuple(slp.base for slp in new_layers))
+    return dc.replace(splan, base=base, layers=tuple(new_layers))

@@ -59,6 +59,14 @@ class SpectralGeometry(NamedTuple):
     n_tiles_w: int
     h_pad: int           # padded input size = n_tiles_h * tile
     w_pad: int
+    # Rows of TOP halo already PRESENT in the input (sharded bands):
+    # the first pre_halo_h input rows are a neighbour shard's bottom
+    # rows (or explicit zeros on shard 0), so overlap-save extraction
+    # zero-pads only the remaining k-1-pre_halo_h halo rows and every
+    # H-axis window/gather coordinate shifts down by pre_halo_h.
+    # 0 (the default, and the only value `make_geometry` emits) is the
+    # single-device geometry — all formulas reduce to their PR-5 form.
+    pre_halo_h: int = 0
 
     @property
     def n_tiles(self) -> int:
@@ -133,7 +141,9 @@ def extract_tiles_overlapping(x: Array, geo: SpectralGeometry) -> Array:
     b, m = x.shape[:2]
     ov = geo.ksize - 1
     x = jnp.pad(x, ((0, 0), (0, 0),
-                    (ov, geo.h_pad - geo.h_in), (ov, geo.w_pad - geo.w_in)))
+                    (ov - geo.pre_halo_h,
+                     geo.h_pad + geo.pre_halo_h - geo.h_in),
+                    (ov, geo.w_pad - geo.w_in)))
     ih = (np.arange(geo.n_tiles_h)[:, None] * geo.tile
           + np.arange(geo.fft_size)[None, :])           # [n_th, K]
     iw = (np.arange(geo.n_tiles_w)[:, None] * geo.tile
@@ -207,7 +217,7 @@ def halo_block_starts(geo: SpectralGeometry, hg: HaloGeometry
     index map computes exactly this formula on traced indices.
     """
     ov = geo.ksize - 1
-    sh = np.arange(hg.nbh) * hg.bth * geo.tile - ov
+    sh = np.arange(hg.nbh) * hg.bth * geo.tile - ov + geo.pre_halo_h
     sw = np.arange(hg.nbw) * hg.btw * geo.tile - ov
     return (np.clip(sh, 0, geo.h_in - hg.rh),
             np.clip(sw, 0, geo.w_in - hg.rw))
@@ -231,7 +241,7 @@ def halo_gather_matrices(geo: SpectralGeometry, hg: HaloGeometry
     ov = geo.ksize - 1
     sh, sw = halo_block_starts(geo, hg)
 
-    def axis(nb, bt, n_tiles, start, size, extent):
+    def axis(nb, bt, n_tiles, start, size, extent, pre=0):
         g = np.zeros((nb, bt * k, size), np.float32)
         for ib in range(nb):
             for ii in range(bt):
@@ -239,12 +249,13 @@ def halo_gather_matrices(geo: SpectralGeometry, hg: HaloGeometry
                 if tile_idx >= n_tiles:
                     continue                      # block padding tile
                 for kh in range(k):
-                    raw = tile_idx * geo.tile - ov + kh
+                    raw = tile_idx * geo.tile - ov + kh + pre
                     if 0 <= raw < extent:
                         g[ib, ii * k + kh, raw - start[ib]] = 1.0
         return g
 
-    return (axis(hg.nbh, hg.bth, geo.n_tiles_h, sh, hg.rh, geo.h_in),
+    return (axis(hg.nbh, hg.bth, geo.n_tiles_h, sh, hg.rh, geo.h_in,
+                 geo.pre_halo_h),
             axis(hg.nbw, hg.btw, geo.n_tiles_w, sw, hg.rw, geo.w_in))
 
 
@@ -277,6 +288,33 @@ def halo_window_reference(x: Array, geo: SpectralGeometry,
     return jnp.asarray(out.reshape(b, m, geo.n_tiles, k, k))
 
 
+def assemble_tile_canvas(y_tiles: Array, geo: SpectralGeometry) -> Array:
+    """[B, N, T, h', h'] valid tiles -> UNCROPPED [B, N, h_pad, w_pad]
+    full-conv canvas (pure relayout, no overlap additions).
+
+    The sharded executor assembles each shard's band canvas with this
+    and crops only after concatenating the bands — the 'same' crop is a
+    global operation (its start offset is relative to the whole image),
+    so per-shard outputs must stay uncropped.
+    """
+    b, n, t, tl, _ = y_tiles.shape
+    assert t == geo.n_tiles and tl == geo.tile
+    yt = y_tiles.reshape(b, n, geo.n_tiles_h, geo.n_tiles_w, tl, tl)
+    return (yt.transpose(0, 1, 2, 4, 3, 5)
+            .reshape(b, n, geo.h_pad, geo.w_pad))
+
+
+def crop_canvas_same(canvas: Array, geo: SpectralGeometry) -> Array:
+    """'same' crop of a full-conv canvas: [B, N, h_pad*, w_pad] ->
+    [B, N, H_out, W_out].  ``geo`` must be the GLOBAL geometry (the
+    canvas may be taller than h_pad when bands were concatenated past
+    the image; only the cropped range is read)."""
+    start = geo.ksize - 1 - geo.pad
+    h_out = geo.h_in + 2 * geo.pad - geo.ksize + 1
+    w_out = geo.w_in + 2 * geo.pad - geo.ksize + 1
+    return canvas[:, :, start:start + h_out, start:start + w_out]
+
+
 def assemble_valid_tiles(y_tiles: Array, geo: SpectralGeometry) -> Array:
     """Overlap-save output assembly: [B, N, T, h', h'] valid tiles ->
     [B, N, H_out, W_out].
@@ -286,15 +324,99 @@ def assemble_valid_tiles(y_tiles: Array, geo: SpectralGeometry) -> Array:
     pure relayout — no overlap additions — followed by the same 'same'
     crop as ``overlap_add``.
     """
-    b, n, t, tl, _ = y_tiles.shape
-    assert t == geo.n_tiles and tl == geo.tile
-    yt = y_tiles.reshape(b, n, geo.n_tiles_h, geo.n_tiles_w, tl, tl)
-    canvas = (yt.transpose(0, 1, 2, 4, 3, 5)
-              .reshape(b, n, geo.h_pad, geo.w_pad))
-    start = geo.ksize - 1 - geo.pad
-    h_out = geo.h_in + 2 * geo.pad - geo.ksize + 1
-    w_out = geo.w_in + 2 * geo.pad - geo.ksize + 1
-    return canvas[:, :, start:start + h_out, start:start + w_out]
+    return crop_canvas_same(assemble_tile_canvas(y_tiles, geo), geo)
+
+
+# ---------------------------------------------------------------------------
+# Spatial sharding: tile-row bands + cross-shard halo (ISSUE 9)
+# ---------------------------------------------------------------------------
+#
+# Spatial sharding splits the image into horizontal BANDS of whole tile
+# rows (pruned-kernel overlap-save semantics are tile-alignment
+# dependent, so shard boundaries must fall on tile boundaries).  Shard d
+# owns tile rows [d*tr, (d+1)*tr) = raw rows [d*tr*t, (d+1)*tr*t), and
+# needs exactly ov = k-1 rows of TOP halo from shard d-1 (shard 0's
+# halo is zeros — the global 'same' padding); no bottom halo, because a
+# window starting at the band's last tile row spans (tr-1)*t + K =
+# tr*t + ov rows, i.e. ends inside the band + its own top halo.  The
+# extended band [B, C, ov + tr*t, W] is described by
+# ``make_band_geometry`` — a SpectralGeometry with pre_halo_h = ov whose
+# extraction needs ZERO H padding and whose gather coordinates are all
+# in bounds by construction (property-tested).
+
+def shard_band_rows(geo: SpectralGeometry, n_shards: int) -> int:
+    """Tile rows per shard band: ceil(n_tiles_h / n_shards)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    return -(-geo.n_tiles_h // n_shards)
+
+
+def make_band_geometry(geo: SpectralGeometry,
+                       tile_rows: int) -> SpectralGeometry:
+    """Per-shard geometry of a ``tile_rows``-tall band of ``geo``.
+
+    The band input is the EXTENDED band [B, C, (k-1) + tile_rows*t, W]
+    (top halo included), so h_in counts the halo rows and pre_halo_h
+    marks them; h_pad is the band's canvas height tile_rows*t.  W-axis
+    geometry is inherited unchanged (bands span the full width).
+    """
+    ov = geo.ksize - 1
+    return SpectralGeometry(
+        geo.fft_size, geo.tile, geo.ksize, geo.pad,
+        h_in=ov + tile_rows * geo.tile, w_in=geo.w_in,
+        n_tiles_h=tile_rows, n_tiles_w=geo.n_tiles_w,
+        h_pad=tile_rows * geo.tile, w_pad=geo.w_pad,
+        pre_halo_h=ov)
+
+
+def halo_exchange_reference(x: Array, geo: SpectralGeometry,
+                            n_shards: int) -> list[Array]:
+    """Host emulation of the cross-shard halo exchange (tests/docs).
+
+    Returns the ``n_shards`` extended bands [B, C, (k-1) + tr*t, W] the
+    ppermute exchange produces on-device: shard d's band of the
+    (bottom-zero-padded) image prefixed by the last k-1 rows of shard
+    d-1's band (zeros for shard 0).  Exactly k-1 rows cross each
+    boundary — the property the geometry test pins down.
+    """
+    ov = geo.ksize - 1
+    tr = shard_band_rows(geo, n_shards)
+    hb = tr * geo.tile
+    xn = np.asarray(x)
+    b, c, h, w = xn.shape
+    xp = np.zeros((b, c, n_shards * hb, w), xn.dtype)
+    xp[:, :, :h] = xn
+    bands = []
+    for d in range(n_shards):
+        halo = (np.zeros((b, c, ov, w), xn.dtype) if d == 0
+                else xp[:, :, d * hb - ov:d * hb])
+        bands.append(jnp.asarray(
+            np.concatenate([halo, xp[:, :, d * hb:(d + 1) * hb]], axis=2)))
+    return bands
+
+
+def spectral_band_conv2d_pretransformed(x_ext: Array, w_f,
+                                        geo: SpectralGeometry) -> Array:
+    """Band einsum oracle: one shard's extended band -> its UNCROPPED
+    band canvas [B, N, tile_rows*t, w_pad].
+
+    ``geo`` is a ``make_band_geometry`` result; ``x_ext`` is the
+    extended band (top halo included).  Concatenating the shard
+    canvases along H reconstructs ``assemble_tile_canvas`` of the
+    unsharded image: the band windows are BIT-identical to the
+    full-image overlap-save windows (property-tested), and the canvas
+    matches to float-accumulation tolerance — XLA may schedule the
+    Hadamard contraction differently at band vs full tile extents.
+    ``crop_canvas_same`` with the GLOBAL geometry then yields the
+    'same' output.
+    """
+    windows = extract_tiles_overlapping(x_ext, geo)  # [B,M,T,K,K]
+    x_f = jnp.fft.fft2(windows.astype(jnp.float32))
+    y_f = _hadamard_maybe_sparse(x_f, w_f, geo)
+    y_sp = jnp.fft.ifft2(y_f).real
+    ov = geo.ksize - 1
+    y_valid = y_sp[..., ov:, ov:]
+    return assemble_tile_canvas(y_valid.astype(x_ext.dtype), geo)
 
 
 def fft_tiles(tiles: Array, geo: SpectralGeometry) -> Array:

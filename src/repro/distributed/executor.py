@@ -1,0 +1,207 @@
+"""Sharded spectral inference: execute a ``ShardedNetworkPlan`` under
+``shard_map``.
+
+The paper's Alg 1 answers "reuse kernels or activations?" per layer; a
+multi-chip mesh re-asks it one level up (DESIGN.md §4), and the
+two-level autotuner (``autotune.autotune_layer_sharded``) answers with
+a partitioning strategy per layer.  This module is the runtime for that
+answer — one ``shard_map`` per sharded layer, strategies mixing freely
+across layers because every layer's output returns to a well-defined
+global layout:
+
+  channel   shard d owns input channels [d*M/D, (d+1)*M/D).  The full
+      activation is replicated; each shard slices its channels by
+      ``axis_index``, runs the fused kernel on its SLICED operands
+      (stacked on a leading device axis, ``P(axis)``) producing a
+      partial spatial sum, and a ring all-reduce (``lax.psum``) — the
+      2(D-1)/D output bytes the cost model charges — combines them.
+      Bias+ReLU were DEFERRED at plan build (a partial sum through a
+      ReLU is wrong); the executor applies the base epilogue post-psum.
+
+  spatial   shard d owns a contiguous band of tile rows.  Each shard
+      ships its LAST k-1 raw rows to its lower neighbour
+      (``lax.ppermute`` — the (D-1)*(k-1)*W*C bytes the cost model
+      charges), prepends the received halo (zeros on shard 0 — exactly
+      the global 'same' zero padding), and runs the band kernel
+      (``kernels.fused_spectral_conv.execute_band_plan``) whose
+      geometry's ``pre_halo_h`` accounts for the received rows.  Band
+      canvases concatenate on H (``P(None, None, axis, None)``) and the
+      'same' crop runs ONCE, globally.
+
+  replicate no shard_map at all: the base plan executes as on a single
+      device.  Also the terminal rung of the sharded degradation ladder
+      (``resilience.harden_sharded_plan``) — any layer that cannot run
+      its fused shard kernels falls back here, a uniform plan-level
+      decision, so no device is ever left blocked in a collective.
+
+Every collective runs with ``check_rep=False`` — the bodies launch
+Pallas kernels, which carry no replication rule.  The shard-scoped
+fault site ``shard_tables`` is consulted HOST-SIDE (operand staging),
+never inside a shard_map body: per-device python control flow does not
+exist there (one trace serves all devices), and host-side is precisely
+what turns an injected shard fault into a structured error *before*
+any device enters a collective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+
+from repro.core import resilience as res
+from repro.core import spectral as spec
+from repro.distributed import sharding as shd
+
+Array = jax.Array
+
+
+def _check_mesh(slp, mesh, axis: str) -> None:
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh axes {mesh.axis_names} lack the plan's "
+                         f"shard axis {axis!r}")
+    size = mesh.shape[axis]
+    if size != slp.n_shards:
+        raise ValueError(
+            f"layer {slp.base.layer.name}: plan was built for "
+            f"{slp.n_shards} shards but mesh axis {axis!r} has {size} "
+            f"devices — rebuild the plan for this mesh "
+            f"(plans never port across topologies; see plan_cache_key)")
+
+
+def _stage_shard_tables(slp, strategy: str):
+    """Host-side staging of per-shard Alg-2 tables with the shard-scoped
+    fault site applied (check + corrupt) — the one place a single
+    shard's tables can fail or rot before the collective launches."""
+    name = slp.base.layer.name
+    staged = []
+    for d, sh in enumerate(slp.shards):
+        res.fault_check("shard_tables", layer=name, shard=d,
+                        strategy=strategy)
+        tb = sh.tables
+        if tb is not None:
+            tb = res.fault_corrupt("shard_tables", tb, layer=name,
+                                   shard=d, strategy=strategy)
+        staged.append(tb)
+    return staged
+
+
+def _execute_spatial(x: Array, slp, mesh, axis: str,
+                     interpret: bool | None) -> Array:
+    from repro.kernels.fused_spectral_conv import execute_band_plan
+
+    base = slp.base
+    geo = base.geo
+    ov = geo.ksize - 1
+    D = slp.n_shards
+    band = slp.shards[0]
+    staged = _stage_shard_tables(slp, "spatial")
+    band = dataclasses.replace(band, tables=staged[0])
+    hb = band.geo.n_tiles_h * geo.tile          # raw rows per shard
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, D * hb - x.shape[2]), (0, 0)))
+
+    def body(xb):
+        # ship my last k-1 raw rows DOWN the mesh; shard 0's halo stays
+        # zero — identical to the global 'same' zero padding.
+        halo = jax.lax.ppermute(
+            xb[:, :, -ov:, :], axis,
+            [(i, i + 1) for i in range(D - 1)])
+        x_ext = jnp.concatenate([halo, xb], axis=2)
+        return execute_band_plan(x_ext, band, interpret=interpret)
+
+    sp_ = shd.spectral_specs("spatial", axis)
+    f = shard_map(body, mesh=mesh, in_specs=sp_["x"],
+                  out_specs=sp_["out"], check_rep=False)
+    canvas = f(xp)                               # [B, N, D*hb, w_pad]
+    return spec.crop_canvas_same(canvas, geo)
+
+
+def _execute_channel(x: Array, slp, mesh, axis: str,
+                     interpret: bool | None) -> Array:
+    from repro.core.plan import PlanTables
+    from repro.kernels.fused_spectral_conv import execute_layer_plan
+
+    base = slp.base
+    shards = slp.shards
+    mloc = shards[0].layer.c_in
+    staged = _stage_shard_tables(slp, "channel")
+    wr = jnp.stack([sh.wr for sh in shards])     # [D, Fa, N, Mloc]
+    wi = jnp.stack([sh.wi for sh in shards])
+    tabs: tuple[Array, ...] = ()
+    if staged[0] is not None:
+        tabs = tuple(jnp.stack([jnp.asarray(getattr(tb, f))
+                                for tb in staged])
+                     for f in ("idx", "sel", "vr", "vi"))
+
+    def body(xf, wrd, wid, *tb):
+        i = jax.lax.axis_index(axis)
+        xloc = jax.lax.dynamic_slice_in_dim(xf, i * mloc, mloc, 1)
+        lp = dataclasses.replace(
+            shards[0], wr=wrd[0], wi=wid[0],
+            tables=PlanTables(*(t[0] for t in tb)) if tb else None)
+        y = execute_layer_plan(xloc, lp, interpret=interpret)
+        return jax.lax.psum(y, axis)
+
+    sp_ = shd.spectral_specs("channel", axis)
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(sp_["x"],) + (sp_["operand"],) * (2 + len(tabs)),
+        out_specs=sp_["out"], check_rep=False)
+    y = f(x, wr, wi, *tabs)
+    return res._spatial_epilogue(y, base)        # deferred bias+ReLU
+
+
+def execute_sharded_layer(x: Array, slp, mesh, *,
+                          axis: str = shd.SPECTRAL_AXIS,
+                          interpret: bool | None = None) -> Array:
+    """Run one conv layer of a ``ShardedNetworkPlan`` on ``mesh``.
+
+    Dispatches on ``slp.strategy`` (see module doc).  The output is
+    always the full [B, N, H_out, W_out] activation in the global
+    layout, so consecutive layers may use different strategies.
+    Pooling stays with the caller (it is spatial and global), exactly
+    as for ``resilience.execute_planned_layer``.
+    """
+    if slp.strategy == "replicate" or not slp.shards:
+        return res.execute_planned_layer(x, slp.base,
+                                         interpret=interpret)
+    _check_mesh(slp, mesh, axis)
+    if slp.strategy == "spatial":
+        return _execute_spatial(x, slp, mesh, axis, interpret)
+    if slp.strategy == "channel":
+        return _execute_channel(x, slp, mesh, axis, interpret)
+    raise ValueError(f"unknown shard strategy {slp.strategy!r}")
+
+
+def _pool(x: Array) -> Array:
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def forward_spectral_sharded(params: dict, splan, x: Array, *,
+                             mesh: Any | None = None,
+                             interpret: bool | None = None) -> Array:
+    """Sharded analogue of ``models.cnn.forward_spectral``.
+
+    Walks the ``ShardedNetworkPlan`` layer by layer through
+    ``execute_sharded_layer`` (strategies mix freely), pools where the
+    BASE plan says to, and runs the FC head replicated — the paper's
+    CPU-side stage, a few matmuls XLA replicates trivially.  ``mesh``
+    defaults to ``launch.mesh.make_spectral_mesh(splan.n_shards,
+    splan.axis)``.
+    """
+    if mesh is None:
+        from repro.launch.mesh import make_spectral_mesh
+        mesh = make_spectral_mesh(splan.n_shards, splan.axis)
+    for slp in splan.layers:
+        x = execute_sharded_layer(x, slp, mesh, axis=splan.axis,
+                                  interpret=interpret)
+        if slp.base.epilogue.pool:
+            x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"])
+    x = jax.nn.relu(x @ params["fc2"])
+    return x @ params["fc3"]

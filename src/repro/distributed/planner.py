@@ -192,3 +192,45 @@ def plan_cell(cfg: ModelConfig, shape: ShapeConfig,
                                     c.plan.optimizer != "adamw",
                                     c.total_bytes_per_chip))
     return best, costs
+
+
+# ---------------------------------------------------------------------------
+# Spectral-CNN cell (ISSUE 9): the conv stack's two-level Alg 1
+# ---------------------------------------------------------------------------
+
+def spectral_plan_cell(layers=None, fft_size: int = 8, alpha=4.0, *,
+                       n_shards: int, batch: int = 1,
+                       **autotune_kwargs) -> dict:
+    """Plan one spectral-CNN (mesh, shape) cell: per-layer partitioning
+    via the two-level autotuner plus the whole-network roll-up the
+    planner reports for every other family.
+
+    Unlike the transformer cells above — one strategy for the whole
+    model — the spectral stack picks per LAYER (the paper's Alg-1
+    granularity carried up a level): early convs with large canvases
+    and few channels go 'spatial', late channel-heavy convs go
+    'channel'.  Returns per-layer tunings plus network totals in the
+    same spirit as ``PlanCost``: worst per-chip HBM footprint, total
+    ICI bytes on the wire, and the summed two-level latency objective.
+    """
+    from repro.core.autotune import autotune_network_sharded
+    from repro.core.dataflow import VGG16_LAYERS
+
+    layers = list(VGG16_LAYERS if layers is None else layers)
+    tunings = autotune_network_sharded(
+        layers, fft_size, alpha, n_shards=n_shards, batch=batch,
+        **autotune_kwargs)
+    strategies = {n: t.strategy for n, t in tunings.items()}
+    return {
+        "n_shards": n_shards,
+        "tunings": tunings,
+        "strategies": strategies,
+        "n_spatial": sum(s == "spatial" for s in strategies.values()),
+        "n_channel": sum(s == "channel" for s in strategies.values()),
+        "n_replicate": sum(s == "replicate" for s in strategies.values()),
+        "per_chip_hbm_bytes": max(t.per_chip_hbm_bytes
+                                  for t in tunings.values()),
+        "ici_bytes_total": sum(t.ici_bytes for t in tunings.values()),
+        "sharded_s_total": sum(t.sharded_s for t in tunings.values()),
+        "ici_s_total": sum(t.ici_s for t in tunings.values()),
+    }

@@ -194,3 +194,57 @@ def attach(abstract: PyTree, shardings: PyTree) -> PyTree:
     return jax.tree.map(
         lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
         abstract, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Spectral sharded inference (ISSUE 9): the specs the executor maps with
+# ---------------------------------------------------------------------------
+
+# The spectral conv stack shards over ONE mesh axis; activations are
+# NCHW, so the two strategies of the two-level Alg-1 map cleanly onto
+# PartitionSpecs over [B, C, H, W]:
+#
+#   spatial   split the tile-ROW axis (H) into contiguous bands; each
+#             shard receives its band plus k-1 ppermute'd halo rows;
+#   channel   every shard sees the FULL activation (P()) and slices its
+#             own c_in/D channels by axis_index; the per-shard kernel
+#             operands are stacked on a leading device axis (P(axis)).
+
+SPECTRAL_AXIS = "shard"
+
+
+def spectral_band_spec(axis: str = SPECTRAL_AXIS) -> P:
+    """[B, C, H, W] activations split into tile-row bands over ``axis``
+    (spatial strategy, in AND out: band canvases concatenate on H)."""
+    return P(None, None, axis, None)
+
+
+def spectral_stacked_spec(axis: str = SPECTRAL_AXIS) -> P:
+    """Per-shard operands stacked on a leading device axis (channel
+    strategy: sliced kernel planes / Alg-2 tables, one slice each)."""
+    return P(axis)
+
+
+def spectral_replicated_spec() -> P:
+    """Fully-replicated operand (channel-strategy activations — every
+    shard slices its own channels — and the post-psum output)."""
+    return P()
+
+
+def spectral_specs(strategy: str, axis: str = SPECTRAL_AXIS) -> dict:
+    """{'x': ..., 'operand': ..., 'out': ...} PartitionSpecs for one
+    strategy of ``core.plan.ShardedLayerPlan`` (see the executor,
+    ``distributed.executor``)."""
+    if strategy == "spatial":
+        return {"x": spectral_band_spec(axis),
+                "operand": spectral_replicated_spec(),
+                "out": spectral_band_spec(axis)}
+    if strategy == "channel":
+        return {"x": spectral_replicated_spec(),
+                "operand": spectral_stacked_spec(axis),
+                "out": spectral_replicated_spec()}
+    if strategy == "replicate":
+        return {"x": spectral_replicated_spec(),
+                "operand": spectral_replicated_spec(),
+                "out": spectral_replicated_spec()}
+    raise ValueError(f"unknown spectral shard strategy {strategy!r}")

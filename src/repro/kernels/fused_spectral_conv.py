@@ -142,6 +142,7 @@ from repro.core import resilience as res
 from repro.core import sparse as sp
 from repro.core.dataflow import DMA_SLOTS, FLOWS, INPUT_MODES
 from repro.core.spectral import (HaloGeometry, SpectralGeometry,
+                                 assemble_tile_canvas,
                                  assemble_valid_tiles,
                                  extract_tiles_overlapping,
                                  halo_block_geometry, halo_gather_matrices)
@@ -814,8 +815,11 @@ def _halo_specs(geo: SpectralGeometry, hg: HaloGeometry, bm: int, canon):
     def x_idx(*g):
         _, p, m = canon(*g)
         b, ib, jb = decomp(p)
+        # + pre_halo_h: sharded bands carry their top halo in-buffer,
+        # shifting every H-axis block start down by the halo rows
+        # (traced twin of spectral.halo_block_starts).
         return (b, m * bm,
-                jnp.clip(ib * hg.bth * t - ov, 0, h_hi),
+                jnp.clip(ib * hg.bth * t - ov + geo.pre_halo_h, 0, h_hi),
                 jnp.clip(jb * hg.btw * t - ov, 0, w_hi))
 
     x_spec = pl.BlockSpec((1, bm, hg.rh, hg.rw), x_idx,
@@ -1352,6 +1356,145 @@ def execute_layer_plan(x: Array, lp, *, interpret: bool | None = None
         return res.fault_corrupt("nan_activations", y, **ctx)
     conv = _fused_conv_halo if halo else _fused_conv
     y = conv(x, lp.wr, lp.wi, lp.dfr, lp.dfi, lp.dvr, lp.dvi,
+             bias, geo=lp.geo, flow=tn.flow,
+             block_n=tn.block_n, block_m=tn.block_m,
+             block_p=tn.block_p, relu=lp.epilogue.relu,
+             interpret=interpret)
+    return res.fault_corrupt("nan_activations", y, **ctx)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-band execution (ISSUE 9): uncropped canvas contract
+# ---------------------------------------------------------------------------
+
+def _assemble_band_canvas(y: Array, geo: SpectralGeometry, b: int, n: int,
+                          t_cnt: int, dtype) -> Array:
+    """[t^2, N, B*T] pipeline output -> UNCROPPED [B, N, h_pad, w_pad]
+    band canvas (``_assemble_output`` without the 'same' crop — sharded
+    bands crop only after cross-shard concatenation)."""
+    s2 = geo.tile * geo.tile
+    y_tiles = (y.reshape(s2, n, b, t_cnt).transpose(2, 1, 3, 0)
+               .reshape(b, n, t_cnt, geo.tile, geo.tile))
+    return assemble_tile_canvas(y_tiles.astype(dtype), geo)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geo", "flow", "block_n", "block_m", "block_p",
+                     "relu", "interpret"))
+def _band_conv(x: Array, wr: Array, wi: Array, dfr: Array, dfi: Array,
+               dvr: Array, dvi: Array, bias: Array, *,
+               geo: SpectralGeometry, flow: str,
+               block_n: int, block_m: int, block_p: int,
+               relu: bool, interpret: bool) -> Array:
+    """``_fused_conv`` returning the uncropped band canvas."""
+    b, m = x.shape[:2]
+    n = wr.shape[1]
+    xt, t_cnt = _windows_layout(x, geo)
+    y = fused_spectral_pipeline(
+        xt, wr, wi, dfr, dfi, dvr, dvi, bias, flow=flow,
+        block_n=block_n, block_m=block_m, block_p=block_p, relu=relu,
+        interpret=interpret)
+    return _assemble_band_canvas(y, geo, b, n, t_cnt, x.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geo", "n_out", "flow", "block_m", "block_p",
+                     "relu", "interpret"))
+def _band_conv_scheduled(x: Array, idx: Array, sel: Array, vr: Array,
+                         vi: Array, dfr: Array, dfi: Array, dvr: Array,
+                         dvi: Array, bias: Array, *,
+                         geo: SpectralGeometry, n_out: int, flow: str,
+                         block_m: int, block_p: int,
+                         relu: bool, interpret: bool) -> Array:
+    """``_fused_conv_scheduled`` returning the uncropped band canvas."""
+    b = x.shape[0]
+    xt, t_cnt = _windows_layout(x, geo)
+    y = fused_spectral_pipeline_scheduled(
+        xt, idx, sel, vr, vi, dfr, dfi, dvr, dvi, bias, n_out=n_out,
+        flow=flow, block_m=block_m, block_p=block_p, relu=relu,
+        interpret=interpret)
+    return _assemble_band_canvas(y, geo, b, n_out, t_cnt, x.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geo", "flow", "block_n", "block_m", "block_p",
+                     "relu", "interpret"))
+def _band_conv_halo(x: Array, wr: Array, wi: Array, dfr: Array,
+                    dfi: Array, dvr: Array, dvi: Array, bias: Array, *,
+                    geo: SpectralGeometry, flow: str,
+                    block_n: int, block_m: int, block_p: int,
+                    relu: bool, interpret: bool) -> Array:
+    """``_fused_conv_halo`` returning the uncropped band canvas: the
+    halo pipeline already assembles tiles in canvas order, so the band
+    contract is the channel/padding crop WITHOUT the 'same' slice."""
+    n = wr.shape[1]
+    hg = halo_block_geometry(geo, block_p)
+    y = fused_spectral_pipeline_halo(
+        x, wr, wi, dfr, dfi, dvr, dvi, bias, geo=geo, hg=hg, flow=flow,
+        block_n=block_n, block_m=block_m, relu=relu, interpret=interpret)
+    return y[:, :n, :geo.h_pad, :geo.w_pad].astype(x.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geo", "n_out", "flow", "block_m", "block_p",
+                     "relu", "interpret"))
+def _band_conv_scheduled_halo(x: Array, idx: Array, sel: Array,
+                              vr: Array, vi: Array, dfr: Array,
+                              dfi: Array, dvr: Array, dvi: Array,
+                              bias: Array, *, geo: SpectralGeometry,
+                              n_out: int, flow: str, block_m: int,
+                              block_p: int, relu: bool,
+                              interpret: bool) -> Array:
+    """``_fused_conv_scheduled_halo`` returning the uncropped band
+    canvas."""
+    hg = halo_block_geometry(geo, block_p)
+    y = fused_spectral_pipeline_scheduled_halo(
+        x, idx, sel, vr, vi, dfr, dfi, dvr, dvi, bias, geo=geo, hg=hg,
+        n_out=n_out, flow=flow, block_m=block_m, relu=relu,
+        interpret=interpret)
+    return y[:, :n_out, :geo.h_pad, :geo.w_pad].astype(x.dtype)
+
+
+def execute_band_plan(x_ext: Array, lp, *, interpret: bool | None = None
+                      ) -> Array:
+    """Run one conv layer's SHARD-LOCAL band from a per-shard
+    ``core.plan.LayerPlan`` whose geometry is a ``make_band_geometry``
+    result (pre_halo_h = k-1).
+
+    ``x_ext`` is the extended band [B, M, (k-1) + tr*t, W] — the shard's
+    raw rows prefixed by the halo rows its mesh neighbour sent
+    (``lax.ppermute`` inside the sharded executor; zeros on shard 0).
+    Returns the UNCROPPED band canvas [B, N, tr*t, w_pad]: the 'same'
+    crop is global, so it runs after the shards' canvases are
+    concatenated (``spectral.crop_canvas_same``).  Same fault sites and
+    dispatch as ``execute_layer_plan``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tn = lp.tuning
+    halo = getattr(lp, "input_mode", "windowed") == "halo"
+    ctx = dict(layer=lp.layer.name, backend="fused", flow=tn.flow,
+               hadamard=getattr(lp, "hadamard", None),
+               input_mode=getattr(lp, "input_mode", "windowed"))
+    res.fault_check("lowering", **ctx)
+    res.fault_check("vmem_overflow", **ctx)
+    bias = lp.bias if lp.epilogue.bias else jnp.zeros_like(lp.bias)
+    if getattr(lp, "hadamard", None) == "scheduled":
+        tb = lp.tables
+        conv = _band_conv_scheduled_halo if halo else _band_conv_scheduled
+        y = conv(
+            x_ext, tb.idx, tb.sel, tb.vr, tb.vi,
+            lp.dfr, lp.dfi, lp.dvr, lp.dvi, bias, geo=lp.geo,
+            n_out=lp.layer.c_out, flow=tn.flow, block_m=tn.block_m,
+            block_p=tn.block_p, relu=lp.epilogue.relu,
+            interpret=interpret)
+        return res.fault_corrupt("nan_activations", y, **ctx)
+    conv = _band_conv_halo if halo else _band_conv
+    y = conv(x_ext, lp.wr, lp.wi, lp.dfr, lp.dfi, lp.dvr, lp.dvi,
              bias, geo=lp.geo, flow=tn.flow,
              block_n=tn.block_n, block_m=tn.block_m,
              block_p=tn.block_p, relu=lp.epilogue.relu,

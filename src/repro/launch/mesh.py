@@ -24,3 +24,25 @@ def make_host_mesh(shape: tuple[int, ...] = (1, 1),
                    axes: tuple[str, ...] = ("data", "model")):
     """Mesh over however many (host) devices exist — tests/examples."""
     return jax.make_mesh(shape, axes)
+
+
+def make_spectral_mesh(n_shards: int, axis: str = "shard"):
+    """1-D mesh for sharded spectral inference (ISSUE 9).
+
+    Uses the FIRST ``n_shards`` devices so a plan built for a small
+    mesh runs on a machine exposing more (e.g. a 2-shard plan on the
+    CI's forced 8-device CPU mesh).  The axis name must match
+    ``ShardedNetworkPlan.axis`` — the executor's collectives
+    (ppermute/psum) are written against it.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        raise ValueError(
+            f"need {n_shards} devices for the spectral mesh, have "
+            f"{len(devs)} (forced host meshes: set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards} "
+            f"BEFORE importing jax)")
+    return Mesh(np.asarray(devs[:n_shards]), (axis,))

@@ -187,7 +187,8 @@ class SpectralServer:
                  guards: res.NumericGuards | None = None,
                  interpret: bool | None = None,
                  plan_cache: PlanCache | None = None,
-                 plan_kwargs: dict | None = None):
+                 plan_kwargs: dict | None = None,
+                 mesh_shape: tuple[int, ...] | None = None):
         if cfg is None:
             from repro.configs import vgg16_spectral
             cfg = vgg16_spectral.SMOKE
@@ -217,9 +218,18 @@ class SpectralServer:
         self.image_shape = (first.c_in, first.h_in, first.w_in)
         self.params = cnn.init(jax.random.PRNGKey(seed), cfg)
 
+        # The device topology this server executes on, folded into every
+        # plan-cache key.  A cache shared across servers (or a server
+        # whose mesh changed across restarts with a persistent cache)
+        # must never hand a plan built for one topology to another —
+        # sharded plans bake shard geometry and collective shapes, so a
+        # cross-mesh hit is silent wrong math, not an error.
+        self.mesh_shape = (tuple(int(d) for d in mesh_shape)
+                           if mesh_shape is not None else None)
         self.plans = plan_cache if plan_cache is not None else PlanCache()
         if warm:
             self.plans.warm(self.params, cfg, self.buckets,
+                            mesh_shape=self.mesh_shape,
                             **self.plan_kwargs)
 
         # per-rung circuit breakers; the terminal einsum rung is never
@@ -272,6 +282,7 @@ class SpectralServer:
         request pays trace/compile time either."""
         for b in self.buckets:
             plan = self.plans.get(self.params, self.cfg, b,
+                                  mesh_shape=self.mesh_shape,
                                   **self.plan_kwargs)
             x = jnp.zeros((b,) + self.image_shape, jnp.float32)
             jax.block_until_ready(cnn.forward_spectral(
@@ -439,6 +450,7 @@ class SpectralServer:
         Returns (plan, force_einsum).
         """
         plan = self.plans.get(self.params, self.cfg, bucket,
+                              mesh_shape=self.mesh_shape,
                               **self.plan_kwargs)
         fetched = res.fault_corrupt("serve_plan_cache", plan,
                                     bucket=bucket)

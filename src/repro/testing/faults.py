@@ -28,6 +28,16 @@ Sites (``FAULT_SITES``):
                     runtime parity guard.
   'nan_activations' corrupt a fused layer's output with a NaN — caught
                     by the runtime NaN/Inf scan.
+  'shard_tables'    shard-scoped fault in a SHARDED plan (match on
+                    ``shard=<int>``, ``layer=...``, ``strategy=...``).
+                    Raise-site by default (one shard's operands fail to
+                    stage); pass ``corrupt=`` to mutate that shard's
+                    staged Alg-2 tables instead.  Consulted host-side —
+                    operand staging in ``distributed.executor`` and the
+                    probe in ``resilience.harden_sharded_plan`` — so an
+                    injected shard fault surfaces as a structured
+                    demotion BEFORE any device enters a collective
+                    (never as a mesh hang).
 
 Serve-level sites (consulted by ``launch.spectral_serve``):
 
@@ -155,6 +165,14 @@ def inject(site: str, *, exc: Callable[[], Exception] | None = None,
     if site in ("lowering", "vmem_overflow", "serve_kernel"):
         fault = res.InjectedFault(site=site, match=dict(match),
                                   exc=exc or _default_exc(site, match))
+    elif site == "shard_tables":
+        # dual-use: raise-site unless a corruption transform is given
+        if corrupt is not None:
+            fault = res.InjectedFault(site=site, match=dict(match),
+                                      corrupt=corrupt)
+        else:
+            fault = res.InjectedFault(site=site, match=dict(match),
+                                      exc=exc or _default_exc(site, match))
     elif site in _DEFAULT_CORRUPT:
         fault = res.InjectedFault(site=site, match=dict(match),
                                   corrupt=corrupt or _DEFAULT_CORRUPT[site])
@@ -352,3 +370,46 @@ def chaos_soak(*, cfg=None, queue_limit: int = 16, seed: int = 0,
         "stats": stats,
         "health": health,
     }
+
+
+def corrupt_shard_tables(splan, *, layer: str | None = None,
+                         shard: int = 0, kind: str = "oob_index"):
+    """Return a copy of a ``ShardedNetworkPlan`` with ONE shard's Alg-2
+    tables mutated (``kind`` in 'oob_index' | 'corrupt_value') — for
+    direct tests that per-shard validation
+    (``resilience.validate_sharded_plan``) catches a single rotten
+    shard while its siblings stay healthy.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.plan import PlanTables
+
+    mutate = _DEFAULT_CORRUPT[kind]
+    new_layers = []
+    done = False
+    for slp in splan.layers:
+        eligible = (not done and len(slp.shards) > shard
+                    and slp.shards[shard].tables is not None
+                    and (layer is None or slp.base.layer.name == layer))
+        if eligible:
+            shards = list(slp.shards)
+            sh = shards[shard]
+            tb = sh.tables
+            if kind == "oob_index":
+                tb = PlanTables(jnp.asarray(mutate(tb.idx)), tb.sel,
+                                tb.vr, tb.vi)
+            else:
+                tb = PlanTables(tb.idx, tb.sel,
+                                jnp.asarray(mutate(tb.vr)), tb.vi)
+            shards[shard] = dataclasses.replace(sh, tables=tb)
+            slp = dataclasses.replace(slp, shards=tuple(shards))
+            done = True
+        new_layers.append(slp)
+    if not done:
+        raise ValueError(
+            f"no sharded layer matching layer={layer!r} with tables on "
+            f"shard {shard} (build with hadamard='scheduled' and a "
+            f"channel/spatial strategy)")
+    return dataclasses.replace(splan, layers=tuple(new_layers))

@@ -16,6 +16,8 @@ from repro.core import spectral as spec
 DOC = Path(__file__).resolve().parent.parent / "docs" / "DATAFLOW.md"
 
 _BLOCK = re.compile(r"```python doc-formulas\n(.*?)```", re.DOTALL)
+_BLOCK_ICI = re.compile(r"```python doc-formulas-ici\n(.*?)```",
+                        re.DOTALL)
 
 
 def _doc_namespace() -> dict:
@@ -26,6 +28,17 @@ def _doc_namespace() -> dict:
     for fn in ("input_bytes", "kernel_bytes", "output_bytes",
                "per_image_bytes", "step_seconds"):
         assert fn in ns, f"doc-formulas block lost {fn}()"
+    return ns
+
+
+def _doc_ici_namespace() -> dict:
+    m = _BLOCK_ICI.search(DOC.read_text())
+    assert m, "docs/DATAFLOW.md lost its ```python doc-formulas-ici " \
+              "block (section 8)"
+    ns: dict = {}
+    exec(compile(m.group(1), str(DOC), "exec"), ns)  # noqa: S102
+    for fn in ("ici_bytes", "ici_seconds", "sharded_seconds"):
+        assert fn in ns, f"doc-formulas-ici block lost {fn}()"
     return ns
 
 
@@ -99,3 +112,50 @@ class TestDocFormulasMatchCode:
         assert "docs/DATAFLOW.md" in (root / "README.md").read_text()
         assert "DATAFLOW.md" in (root / "docs" /
                                  "ARCHITECTURE.md").read_text()
+
+
+ICI_CASES = [(layer, strategy, n_shards, batch)
+             for layer in (df.VGG16_LAYERS[1], df.VGG16_LAYERS[5],
+                           df.VGG16_LAYERS[-1])
+             for strategy in df.SHARD_STRATEGIES
+             for n_shards in (2, 4, 8)
+             for batch in (1, 8)]
+
+
+class TestDocIciFormulasMatchCode:
+    """Section 8's two-level formulas (wire bytes per strategy, ICI
+    serialization, the sharded objective) against the code."""
+
+    ns = _doc_ici_namespace()
+
+    @pytest.mark.parametrize("layer,strategy,n_shards,batch", ICI_CASES,
+                             ids=[f"{l.name}-{s}-D{d}-b{b}"
+                                  for l, s, d, b in ICI_CASES])
+    def test_ici_and_objective(self, layer, strategy, n_shards, batch):
+        fft, alpha = 8, 4.0
+        doc_wire = self.ns["ici_bytes"](
+            strategy, n_shards, layer.c_out, layer.c_in, layer.h_in,
+            layer.w_in, layer.ksize, layer.pad, batch)
+        assert doc_wire == pytest.approx(df.shard_ici_bytes(
+            layer, n_shards, strategy, batch)), "wire bytes"
+        assert self.ns["ICI_BYTES_PER_S"] == df.TPU_ICI_GBPS
+
+        c = df.tpu_sharded_flow_cost(
+            layer, fft, alpha, 64, 128, 64, "output_stationary",
+            n_shards=n_shards, strategy=strategy, batch=batch,
+            step_overhead_s=1e-4)
+        if c is None:       # infeasible split: doc feasibility matches
+            assert strategy != "replicate"
+            if strategy == "channel":
+                assert layer.c_in % n_shards != 0
+            else:
+                geo = spec.make_geometry(layer.h_in, layer.w_in,
+                                         layer.ksize, fft, layer.pad)
+                assert n_shards > geo.n_tiles_h
+            return
+        assert c["ici_bytes"] == pytest.approx(doc_wire)
+        assert c["ici_s"] == pytest.approx(
+            self.ns["ici_seconds"](doc_wire))
+        assert c["sharded_s"] == pytest.approx(self.ns["sharded_seconds"](
+            c["serial_s"], c["step_s"], c["hbm_s"], c["compute_s"],
+            c["ici_s"])), "two-level objective"
