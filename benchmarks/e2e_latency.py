@@ -109,6 +109,21 @@ BENCH_e2e.json schema
       visible, e.g. under XLA_FLAGS=--xla_force_host_platform_device_
       count=8): channel- and spatial-forced ShardedNetworkPlans under
       shard_map vs the single-device einsum oracle, <= 1e-5.
+  resnet  (the residual-DAG column, ISSUE 10)
+      the ResNet-18-style smoke preset (stride-2 downsample, max/avg
+      pool nodes, four residual-FUSED shortcut epilogues) at alpha = 1
+      against the spatial DAG oracle (``cnn.forward_spatial``):
+      graph composition (n_nodes / n_residual / n_stride2 / pools /
+      shortcut_on_chip reuse verdicts), then the gating sections
+      ``parity`` (all three backends <= 1e-5), ``shortcuts`` (per
+      residual edge the analytic HBM bytes of the residual-fused
+      epilogue <= the unfused kernel + 3-Y-pass XLA add;
+      ``fused_le_unfused_all``), ``demotion`` (an injected 'lowering'
+      fault matched on residual='fused' walks every residual node down
+      the residual-fused -> residual-add ladder rung and the hardened
+      plan still passes <= 1e-5), and — when >= 2 devices are visible —
+      ``sharded`` (channel- and spatial-forced DAG execution under
+      shard_map, <= 1e-5).
 """
 
 from __future__ import annotations
@@ -601,6 +616,151 @@ def sharded_parity(cfg, n_shards: int = 2, batch: int = 1) -> dict:
     return out
 
 
+def resnet_dag_column(batch: int = 1) -> dict:
+    """The gated ``resnet`` column (ISSUE 10): the residual-DAG plan IR
+    on the ResNet-18-style smoke preset — stride-2 downsample, max- and
+    avg-pool nodes, and four residual-FUSED shortcut epilogues.
+
+    Four acceptance surfaces, all against the SPATIAL DAG oracle
+    (``cnn.forward_spatial`` walking the same graph) at alpha = 1
+    (pruning off — the oracle does not prune, so parity is only defined
+    dense):
+
+      parity     all three backends <= 1e-5 end-to-end;
+      shortcuts  per residual edge, the analytic HBM bytes of the
+                 residual-FUSED epilogue (shortcut priced at the tuned
+                 'vmem'/'hbm' placement) <= the unfused alternative
+                 (same kernel without the shortcut operand + a separate
+                 XLA add pass re-reading y and the shortcut and writing
+                 y back: 3 extra Y-passes);
+      demotion   an injected 'lowering' fault matched on
+                 ``residual='fused'`` must walk every residual node down
+                 the NEW ladder rung (residual-fused -> residual-add)
+                 and the hardened plan must still match the oracle;
+      sharded    when >= 2 devices are visible, a channel- and a
+                 spatial-FORCED ShardedNetworkPlan of the same DAG must
+                 match the oracle under shard_map.
+    """
+    import dataclasses
+
+    from repro.configs import resnet18_spectral
+    from repro.core import dataflow as df
+    from repro.core import resilience as res
+    from repro.core.plan import build_network_plan
+    from repro.models import cnn
+    from repro.testing import faults
+
+    cfg = dataclasses.replace(resnet18_spectral.SMOKE, alpha=1.0)
+    key = jax.random.PRNGKey(0)
+    params = cnn.init(key, cfg)
+    x = jax.random.normal(key, (batch, 3, cfg.image_size, cfg.image_size),
+                          jnp.float32)
+    plan = build_network_plan(params, cfg, batch=batch)
+    ref = cnn.forward_spatial(params, cfg, x)
+
+    graph = plan.execution_graph
+    residual_nodes = [n for n in graph if n.residual_from is not None]
+    out: dict = {
+        "model": cfg.name,
+        "alpha": cfg.alpha,
+        "batch": batch,
+        "n_nodes": len(graph),
+        "n_residual": len(residual_nodes),
+        "n_stride2": sum(
+            n.kind == "conv"
+            and plan.layers[n.layer_index].layer.stride == 2
+            for n in graph),
+        "pools": [n.pool for n in graph if n.kind == "pool"],
+        "residual_fused_nodes": [
+            n.id for n in residual_nodes
+            if plan.layers[n.layer_index].epilogue.residual == "fused"],
+        "shortcut_on_chip": {n.id: n.shortcut_on_chip
+                             for n in residual_nodes},
+    }
+
+    per_backend = {}
+    for backend in ("einsum", "pallas_staged", "pallas_fused"):
+        y = cnn.forward_spectral(params, plan, x, backend=backend)
+        per_backend[backend] = float(jnp.abs(y - ref).max())
+    worst = max(per_backend.values())
+    out["parity"] = {"per_backend": per_backend, "max_abs_err": worst,
+                     "passes_1e-5": bool(worst <= 1e-5)}
+
+    # Analytic shortcut gate: fusing the residual add into the epilogue
+    # must never cost more HBM than the unfused alternative (kernel
+    # without the shortcut operand + a 3-Y-pass XLA add: read y, read
+    # shortcut, write y).
+    rows = []
+    for n in residual_nodes:
+        lp = plan.layers[n.layer_index]
+        tn = lp.tuning
+        place = tn.residual or "hbm"
+
+        def cost(residual):
+            return df.tpu_fused_flow_cost(
+                lp.layer, cfg.fft_size, lp.alpha, tn.block_n,
+                tn.block_p, tn.block_m, tn.flow, batch=batch,
+                active_bins=lp.n_active_bins, hadamard=lp.hadamard,
+                input_mode=lp.input_mode, residual=residual)
+
+        hw = lp.layer.out_hw
+        y_bytes = 4 * batch * lp.layer.c_out * hw[0] * hw[1]
+        fused = cost(place)["hbm_bytes"]
+        unfused = cost(None)["hbm_bytes"] + 3 * y_bytes
+        rows.append({
+            "node": n.id,
+            "placement": place,
+            "shortcut_on_chip": n.shortcut_on_chip,
+            "fused_hbm_bytes": fused,
+            "unfused_hbm_bytes": unfused,
+            "fused_le_unfused": bool(fused <= unfused),
+        })
+    out["shortcuts"] = {
+        "per_edge": rows,
+        "fused_le_unfused_all": all(r["fused_le_unfused"] for r in rows),
+    }
+
+    # Injected lowering fault on every residual-FUSED variant: the
+    # hardening loop must take the NEW ladder rung (residual-fused ->
+    # residual-add) and the demoted plan must still match the oracle.
+    with faults.inject("lowering", residual="fused") as fault:
+        hard = res.harden_network_plan(plan)
+    demoted = {n.id: list(hard.layers[n.layer_index].provenance)
+               for n in residual_nodes}
+    rung_hit = all(
+        any("residual-fused->residual-add" in p for p in prov)
+        for prov in demoted.values())
+    y = cnn.forward_spectral(params, hard, x, backend="pallas_fused")
+    derr = float(jnp.abs(y - ref).max())
+    out["demotion"] = {
+        "fault_fires": fault.fires,
+        "provenance": demoted,
+        "all_residual_nodes_demoted_to_add": bool(rung_hit),
+        "max_abs_err": derr,
+        "passes_1e-5": bool(derr <= 1e-5),
+    }
+
+    if len(jax.devices()) >= 2:
+        from repro.core.plan import build_sharded_network_plan
+        from repro.distributed.executor import forward_spectral_sharded
+        from repro.launch.mesh import make_spectral_mesh
+        mesh = make_spectral_mesh(2)
+        sh: dict = {"n_shards": 2}
+        sworst = 0.0
+        for strat in ("channel", "spatial"):
+            splan = build_sharded_network_plan(
+                params, cfg, n_shards=2, strategies=(strat,),
+                batch=batch)
+            y = forward_spectral_sharded(params, splan, x, mesh=mesh)
+            err = float(jnp.abs(y - ref).max())
+            sh[strat] = {"max_abs_err": err}
+            sworst = max(sworst, err)
+        sh["max_abs_err"] = sworst
+        sh["passes_1e-5"] = bool(sworst <= 1e-5)
+        out["sharded"] = sh
+    return out
+
+
 def main() -> None:
     from repro.configs import vgg16_spectral
     from repro.core import dataflow as df
@@ -633,7 +793,7 @@ def main() -> None:
         "quick": bool(args.quick),
     }
 
-    print("[1/7] latency: oracle vs staged Pallas vs fused Pallas "
+    print("[1/8] latency: oracle vs staged Pallas vs fused Pallas "
           "(plan built per batch bucket, batch-tuned)")
     report["latency"] = {"smoke": latency_table(
         vgg16_spectral.SMOKE, iters=args.iters)}
@@ -648,7 +808,7 @@ def main() -> None:
     print(f"      fused<=einsum at every bucket: "
           f"{report['batch_sweep']['fused_le_einsum_all_buckets']}")
 
-    print(f"[2/7] {traffic_cfg.name} NetworkPlan (compile once: prune + "
+    print(f"[2/8] {traffic_cfg.name} NetworkPlan (compile once: prune + "
           "Alg 2 tables + compaction + mode-aware autotune)")
     t0 = time.perf_counter()
     params_full = cnn.init(jax.random.PRNGKey(0), traffic_cfg)
@@ -658,7 +818,7 @@ def main() -> None:
     print(f"      built in {report['plan_build_s']:.1f}s "
           f"({n_sched}/{len(plan_full.layers)} layers scheduled)")
 
-    print("[3/7] per-layer launches + analytic HBM traffic "
+    print("[3/8] per-layer launches + analytic HBM traffic "
           "(dense vs bin vs scheduled vs staged) + Alg-2 PE utilization")
     layer_rows = per_layer_traffic(plan_full, 8, batch=1)
     report["layers"] = layer_rows
@@ -726,7 +886,7 @@ def main() -> None:
           f"{t['launches_fused']} vs {t['launches_staged']}")
 
     if not args.quick:
-        print("[4/7] parity on full VGG16 (batch 1): fused vs spatial "
+        print("[4/8] parity on full VGG16 (batch 1): fused vs spatial "
               "(alpha=1) and fused-sparse+epilogue vs oracle (alpha=4)")
         report["parity"] = fused_parity_vs_spatial(df.VGG16_LAYERS, 8,
                                                    batch=1)
@@ -739,7 +899,7 @@ def main() -> None:
               f"{report['parity_sparse']['max_abs_err']:.2e} "
               f"(<= 1e-4: {report['parity_sparse']['passes_1e-4']})")
 
-    print("[5/7] SCHEDULED-fused parity vs einsum oracle (acceptance "
+    print("[5/8] SCHEDULED-fused parity vs einsum oracle (acceptance "
           "<= 1e-5)")
     sched = {"network_smoke": scheduled_network_parity(
         vgg16_spectral.SMOKE, batch=1)}
@@ -754,7 +914,7 @@ def main() -> None:
           f"{sched['network_smoke']['max_abs_logit_err']:.2e} "
           f"(<= 1e-5: {sched['network_smoke']['passes_1e-5']})")
 
-    print("[6/7] HALO input path parity vs einsum oracle, 3 flows x "
+    print("[6/8] HALO input path parity vs einsum oracle, 3 flows x "
           "3 Hadamard modes (acceptance <= 1e-5)")
     report["parity_halo"] = halo_parity_matrix(8, alpha=4.0, batch=1,
                                                small=args.quick)
@@ -764,7 +924,7 @@ def main() -> None:
           f"{ph['passes_1e-5']}); vs windowed path "
           f"{ph['max_abs_err_vs_windowed']:.2e}")
 
-    print("[7/7] multi-device column: two-level Alg-1 cost model "
+    print("[7/8] multi-device column: two-level Alg-1 cost model "
           "(strategy per layer) + live sharded parity when the mesh "
           "has devices")
     if args.quick:
@@ -795,6 +955,27 @@ def main() -> None:
     else:
         print(f"      live parity skipped: {n_dev} device(s) visible "
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+    print("[8/8] resnet column: residual-DAG plan IR on the "
+          "ResNet-18-style smoke preset (alpha=1 vs the spatial DAG "
+          "oracle)")
+    rn = resnet_dag_column()
+    report["resnet"] = rn
+    print(f"      {rn['model']}: {rn['n_nodes']} nodes "
+          f"({rn['n_residual']} residual, {rn['n_stride2']} stride-2, "
+          f"pools {rn['pools']}); parity 3 backends max abs err "
+          f"{rn['parity']['max_abs_err']:.2e} (<= 1e-5: "
+          f"{rn['parity']['passes_1e-5']}); fused<=unfused shortcut "
+          f"bytes on all edges: "
+          f"{rn['shortcuts']['fused_le_unfused_all']}; fault-demoted "
+          f"to residual-add rung on all residual nodes: "
+          f"{rn['demotion']['all_residual_nodes_demoted_to_add']} "
+          f"(parity {rn['demotion']['max_abs_err']:.2e})")
+    if "sharded" in rn:
+        print(f"      forced channel+spatial sharding on "
+              f"{rn['sharded']['n_shards']} devices: max abs err "
+              f"{rn['sharded']['max_abs_err']:.2e} (<= 1e-5: "
+              f"{rn['sharded']['passes_1e-5']})")
 
     _write_report_atomic(report, args.json)
     print(f"wrote {args.json}")
@@ -855,6 +1036,20 @@ def _failed_gates(report: dict) -> list[tuple[str, object]]:
          report["sharded"]["cost_model"]
          ["per_chip_hbm_le_single_chip_all_layers"]),
     ]
+    if "resnet" in report:
+        rn = report["resnet"]
+        gates += [
+            ("resnet.parity.passes_1e-5", rn["parity"]["passes_1e-5"]),
+            ("resnet.shortcuts.fused_le_unfused_all",
+             rn["shortcuts"]["fused_le_unfused_all"]),
+            ("resnet.demotion.all_residual_nodes_demoted_to_add",
+             rn["demotion"]["all_residual_nodes_demoted_to_add"]),
+            ("resnet.demotion.passes_1e-5",
+             rn["demotion"]["passes_1e-5"]),
+        ]
+        if "sharded" in rn:
+            gates.append(("resnet.sharded.passes_1e-5",
+                          rn["sharded"]["passes_1e-5"]))
     # live multi-device parity (absent on single-device hosts)
     if "parity" in report.get("sharded", {}):
         gates.append(("sharded.parity.passes_1e-5",

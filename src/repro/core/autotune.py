@@ -84,6 +84,7 @@ class FusedTuning:
     hadamard: str | None = None
     input_mode: str | None = None
     grid_steps: float | None = None   # gn*gm*gp of the priced grid
+    residual: str | None = None       # shortcut placement: 'hbm'|'vmem'
 
     def kwargs(self) -> dict:
         """Keyword arguments for ``fused_spectral_conv2d`` — includes
@@ -134,6 +135,7 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
                    schedule_r: int = df.SCHEDULE_R,
                    schedule_mu: float = df.SCHEDULE_MU,
                    step_overhead_s: float = 0.0,
+                   residual: str | None = None,
                    cost_fn: Callable | None = None,
                    measure_fn: Callable[[FusedTuning], float] | None = None,
                    measure_top_k: int = 3) -> FusedTuning:
@@ -172,6 +174,12 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
     so every (flow, block, input_mode, batch) combination is legal on
     hardware — including halo + weight-stationary at batch > 1.
 
+    ``residual`` prices a fused shortcut add on the epilogue flush
+    ('hbm' streams the shortcut back from HBM, 'vmem' holds it on-chip
+    as retained bytes — the ShortcutFusion reuse decision, see
+    ``dataflow.tpu_fused_flow_cost(residual=...)``); the placement is
+    recorded in ``FusedTuning.residual``.
+
     Measured pass (optional): re-rank the ``measure_top_k`` best
     analytic candidates by ``measure_fn`` wall time.  ``cost_fn``
     defaults to the fused kernel's model; pass
@@ -192,6 +200,8 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
             kw["input_mode"] = imode
         if step_overhead_s:
             kw["step_overhead_s"] = step_overhead_s
+        if residual is not None:
+            kw["residual"] = residual
         return cost_fn(layer, fft_size, alpha, bn, bp, bm, flow,
                        batch=batch, active_bins=active_bins, **kw)
 
@@ -207,7 +217,8 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
                     layer.name, flow, bn, bm, bp, c["hbm_bytes"],
                     c["vmem_bytes"], _predict(c),
                     hadamard=mode, input_mode=imode,
-                    grid_steps=c.get("grid_steps")))
+                    grid_steps=c.get("grid_steps"),
+                    residual=residual))
     if not scored:
         # Nothing fits the budget: return the smallest-footprint config
         # anyway.  Interpret mode runs it regardless; on real TPU an
@@ -220,7 +231,8 @@ def autotune_layer(layer: df.ConvLayer, fft_size: int, alpha: float, *,
         return FusedTuning(layer.name, flow, bn, bm, bp, c["hbm_bytes"],
                            c["vmem_bytes"], _predict(c),
                            hadamard=modes[0], input_mode=imodes[0],
-                           grid_steps=c.get("grid_steps"))
+                           grid_steps=c.get("grid_steps"),
+                           residual=residual)
     scored.sort(key=lambda tn: (tn.predicted_s,
                                 tn.grid_steps if tn.grid_steps is not None
                                 else 0.0,
@@ -409,7 +421,8 @@ def autotune_layer_sharded(layer: df.ConvLayer, fft_size: int,
                            input_modes: Sequence[str] | None = None,
                            schedule_r: int = df.SCHEDULE_R,
                            schedule_mu: float = df.SCHEDULE_MU,
-                           step_overhead_s: float = 0.0) -> ShardTuning:
+                           step_overhead_s: float = 0.0,
+                           residual: str | None = None) -> ShardTuning:
     """Pick (strategy, flow, blocks[, hadamard, input_mode]) for one
     layer on a ``n_shards``-device mesh — Alg 1 run one level up.
 
@@ -446,6 +459,8 @@ def autotune_layer_sharded(layer: df.ConvLayer, fft_size: int,
                         kw["input_mode"] = imode
                     if step_overhead_s:
                         kw["step_overhead_s"] = step_overhead_s
+                    if residual is not None:
+                        kw["residual"] = residual
                     c = df.tpu_sharded_flow_cost(
                         layer, fft_size, alpha, bn, bp, bm, flow,
                         n_shards=n_shards, strategy=strategy,
@@ -456,7 +471,8 @@ def autotune_layer_sharded(layer: df.ConvLayer, fft_size: int,
                         layer.name, flow, bn, bm, bp, c["hbm_bytes"],
                         c["vmem_bytes"], _predict(c), hadamard=mode,
                         input_mode=imode,
-                        grid_steps=c.get("grid_steps"))
+                        grid_steps=c.get("grid_steps"),
+                        residual=residual)
                     scored.append(ShardTuning(
                         base=tn, strategy=strategy, n_shards=n_shards,
                         ici_bytes=c["ici_bytes"], ici_s=c["ici_s"],
@@ -472,7 +488,7 @@ def autotune_layer_sharded(layer: df.ConvLayer, fft_size: int,
             flows=flows, active_bins=active_bins,
             hadamard_modes=hadamard_modes, input_modes=input_modes,
             schedule_r=schedule_r, schedule_mu=schedule_mu,
-            step_overhead_s=step_overhead_s)
+            step_overhead_s=step_overhead_s, residual=residual)
         return ShardTuning(base=tn, strategy="replicate",
                            n_shards=n_shards, ici_bytes=0.0, ici_s=0.0,
                            per_chip_hbm_bytes=tn.hbm_bytes,

@@ -47,7 +47,16 @@ WORD_BYTES = 2  # 16-bit fixed point
 
 @dataclasses.dataclass(frozen=True)
 class ConvLayer:
-    """Static description of one spectral conv layer."""
+    """Static description of one spectral conv layer.
+
+    ``stride`` semantics (ISSUE 10): the spectral path always computes
+    the stride-1 'same' output — overlap-save tiling has no native
+    stride — and the executor subsamples ``y[..., ::stride, ::stride]``
+    afterwards.  All tile/traffic/FLOP models therefore price the
+    stride-1 problem, which is the work the kernel actually performs;
+    only ``out_hw`` (and the DAG shape walker built on it) sees the
+    stride.
+    """
 
     name: str
     c_in: int       # M
@@ -56,6 +65,15 @@ class ConvLayer:
     w_in: int
     ksize: int = 3
     pad: int = 1
+    stride: int = 1
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        """Post-stride output extent (the stride-1 'same' output is
+        subsampled ``[::stride]`` -> ceil(h1/stride) rows survive)."""
+        h1 = self.h_in + 2 * self.pad - self.ksize + 1
+        w1 = self.w_in + 2 * self.pad - self.ksize + 1
+        return (-(-h1 // self.stride), -(-w1 // self.stride))
 
     def tiles(self, fft_size: int) -> int:
         """T: number of input tiles per image (padded canvas)."""
@@ -96,6 +114,59 @@ VGG16_LAYERS: tuple[ConvLayer, ...] = (
 )
 
 VGG16_OPT_LAYERS = VGG16_LAYERS[1:]
+
+
+# ---------------------------------------------------------------------------
+# DAG plan IR node description (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """Config-level description of one node of a network DAG
+    (``models.cnn.SpectralCNNConfig.graph``).
+
+    The linear VGG16 stack is the degenerate case: a chain of 'conv'
+    nodes with 'pool' nodes interleaved.  ResNet-class graphs add
+    residual edges: a conv node with ``residual_from`` set adds that
+    node's activation into its own output BEFORE the ReLU — fused into
+    the kernel's bias+ReLU flush when the plan can (see
+    ``plan.EpilogueSpec.residual``), an unfused XLA add otherwise.
+
+    Fields:
+      id:       stable node id.  For 'conv' nodes this IS the name of
+                the ``ConvLayer`` in ``cfg.layers`` the node executes
+                (each conv layer appears in exactly one node).
+      kind:     'conv' | 'pool'.
+      inputs:   ids of the main-input producer(s); always length 1
+                (the DAG is a chain plus shortcut edges).  The network
+                input is the reserved id 'input'.
+      pool:     pooling kind for 'pool' nodes, 'max' | 'avg' (2x2,
+                stride 2 — the only pooling the spatial stage does).
+      residual_from: for 'conv' nodes, the id of the node whose output
+                is the shortcut operand (or 'input'); None = no
+                shortcut.  Shapes must match the conv's POST-stride
+                output.
+      relu:     apply ReLU after this conv node (default).  False for
+                linear nodes such as ResNet projection shortcuts.
+    """
+
+    id: str
+    kind: str = "conv"
+    inputs: tuple[str, ...] = ("input",)
+    pool: str = "max"
+    residual_from: str | None = None
+    relu: bool = True
+
+    def __post_init__(self):
+        if self.kind not in ("conv", "pool"):
+            raise ValueError(f"node {self.id!r}: kind must be 'conv' or "
+                             f"'pool', got {self.kind!r}")
+        if self.kind == "pool" and self.pool not in ("max", "avg"):
+            raise ValueError(f"node {self.id!r}: pool must be 'max' or "
+                             f"'avg', got {self.pool!r}")
+        if len(self.inputs) != 1:
+            raise ValueError(f"node {self.id!r}: exactly one main input "
+                             f"required, got {self.inputs!r}")
 
 
 def _ceil(a: float, b: float) -> int:
@@ -390,7 +461,8 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                         r: int = SCHEDULE_R,
                         mu: float = SCHEDULE_MU,
                         input_mode: str | None = None,
-                        step_overhead_s: float = 0.0) -> dict[str, float]:
+                        step_overhead_s: float = 0.0,
+                        residual: str | None = None) -> dict[str, float]:
     """HBM traffic + VMEM working set of ONE fused pallas_call
     (``kernels.fused_spectral_conv``): FFT + Hadamard + IFFT (+ fused
     bias/ReLU epilogue) in a single kernel, so HBM only ever sees
@@ -455,6 +527,20 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
         knob for real-hardware calibration).  At larger batch the step
         count per image shrinks with bigger p blocks, which is exactly
         the kernel-amortization axis of the paper's reuse tradeoff.
+      residual: shortcut-operand pricing for a residual-fused epilogue
+        (ISSUE 10, the ShortcutFusion reuse question one operand over):
+          None     no shortcut — the plain conv cost;
+          'hbm'    the shortcut streams from HBM as one more kernel
+                   operand in the OUTPUT layout: one Y-sized read per
+                   output-block visit (once total under
+                   output_stationary, once per m revisit under the RMW
+                   flows, whose flush step re-sees each (n, p) block
+                   gm times), plus its double-buffered VMEM block;
+          'vmem'   the producer's activation is modeled as RETAINED
+                   on-chip between the two kernels — zero extra HBM
+                   traffic, but the full Y-sized shortcut is added to
+                   the VMEM working set (the ShortcutFusion "hold the
+                   shortcut" choice; it only wins while it fits).
 
     Batch amortization note: ``batch`` scales the tile count
     P = T * batch, so every per-whole-call byte term that does NOT
@@ -497,6 +583,9 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     if input_mode is not None and input_mode not in INPUT_MODES:
         raise ValueError(f"input_mode must be None or one of "
                          f"{INPUT_MODES}, got {input_mode!r}")
+    if residual not in (None, "hbm", "vmem"):
+        raise ValueError(f"residual must be None, 'hbm' or 'vmem', "
+                         f"got {residual!r}")
     halo = input_mode == "halo"
     k2 = fft_size * fft_size
     tile = layer.tile_size(fft_size)
@@ -588,6 +677,23 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
     else:
         raise ValueError(flow)
 
+    # Shortcut operand of a residual-fused epilogue: Y-layout blocks,
+    # consumed at the flush step of each output block.  Under the RMW
+    # flows the flush dimension is innermost, so the block is refetched
+    # on every m revisit; output_stationary sees each (n, p) exactly
+    # once.  'vmem' instead retains the producer's full activation
+    # on-chip (zero HBM, Y-sized VMEM residency).
+    sc_hbm = 0.0
+    sc_vmem = 0.0
+    if residual == "hbm":
+        sc_reread = 1 if flow == "output_stationary" else gm
+        sc_hbm = float(y_bytes * sc_reread)
+        sc_vmem = float(2 * s2 * bn * bp * bytes_per_el)
+        x_hbm += sc_hbm
+        hbm += sc_hbm
+    elif residual == "vmem":
+        sc_vmem = float(y_bytes)
+
     # Streamed blocks are double-buffered by the Pallas pipeline (x2);
     # the DFT operators, the in-flight spectral blocks and the psum
     # scratch are single-copy VMEM residents.  Spectral dims are Fa.
@@ -615,7 +721,7 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
             + 2 * cplx * fa * bn * bp             # Y~ psum / Karatsuba
             + flight
             + 2 * fa * s + 2 * s2 * fa            # DFT / IDFT operators
-            ) * bytes_per_el
+            ) * bytes_per_el + sc_vmem            # retained / staged shortcut
 
     refft = gn if flow != "input_stationary" else 1
     fft_flops = 2 * 2 * fa * s * layer.c_in * t * refft
@@ -649,6 +755,10 @@ def tpu_fused_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
         "serial_s": serial_s,
         "compute_s": compute_s,
         "fits_vmem": vmem <= TPU_VMEM_BYTES,
+        # --- residual-shortcut pricing (ISSUE 10) ---------------------
+        "residual": residual,
+        "shortcut_hbm_bytes": sc_hbm,
+        "shortcut_vmem_bytes": sc_vmem,
         # --- batch-as-an-Alg-1-axis fields (PR 8) ---------------------
         "batch": int(batch),
         "grid_steps": float(grid_steps),
@@ -713,7 +823,8 @@ def shard_local_layer(layer: ConvLayer, fft_size: int, n_shards: int,
 
 
 def shard_ici_bytes(layer: ConvLayer, n_shards: int, strategy: str,
-                    batch: int = 1, bytes_per_el: int = 4) -> float:
+                    batch: int = 1, bytes_per_el: int = 4,
+                    residual: bool = False) -> float:
     """Modeled inter-chip bytes of one sharded layer forward.
 
       'replicate'  0 — nothing crosses ICI.
@@ -724,17 +835,24 @@ def shard_ici_bytes(layer: ConvLayer, n_shards: int, strategy: str,
                    halo rows one hop down: (D-1) * (k-1) * W * M * B
                    words (outputs stay resident — bands concatenate
                    only at the consumer, which is itself band-sharded).
+
+    ``residual`` (ISSUE 10): a residual add on a non-replicated layer
+    moves the Y-sized shortcut into the shards' layout — one more
+    (D-1)/D all-gather-shaped term on top of the strategy's own
+    collective (replicate pays nothing: the shortcut is already whole
+    on every chip).
     """
     if strategy == "replicate" or n_shards <= 1:
         return 0.0
+    h_out = layer.h_in + 2 * layer.pad - layer.ksize + 1
+    w_out = layer.w_in + 2 * layer.pad - layer.ksize + 1
+    out_bytes = layer.c_out * h_out * w_out * batch * bytes_per_el
+    sc = ((n_shards - 1) / n_shards * out_bytes) if residual else 0.0
     if strategy == "channel":
-        h_out = layer.h_in + 2 * layer.pad - layer.ksize + 1
-        w_out = layer.w_in + 2 * layer.pad - layer.ksize + 1
-        out_bytes = layer.c_out * h_out * w_out * batch * bytes_per_el
-        return 2.0 * (n_shards - 1) / n_shards * out_bytes
+        return 2.0 * (n_shards - 1) / n_shards * out_bytes + sc
     if strategy == "spatial":
         return float((n_shards - 1) * (layer.ksize - 1) * layer.w_in
-                     * layer.c_in * batch * bytes_per_el)
+                     * layer.c_in * batch * bytes_per_el) + sc
     raise ValueError(f"strategy must be one of {SHARD_STRATEGIES}, "
                      f"got {strategy!r}")
 
@@ -747,7 +865,8 @@ def tpu_sharded_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                           hadamard: str | None = None,
                           r: int = SCHEDULE_R, mu: float = SCHEDULE_MU,
                           input_mode: str | None = None,
-                          step_overhead_s: float = 0.0
+                          step_overhead_s: float = 0.0,
+                          residual: str | None = None
                           ) -> "dict[str, float] | None":
     """Two-level Alg-1 cost: ONE CHIP's ``tpu_fused_flow_cost`` of the
     shard-local sub-problem, plus the ICI collective priced at
@@ -774,8 +893,10 @@ def tpu_sharded_flow_cost(layer: ConvLayer, fft_size: int, alpha: float,
                             bytes_per_el=bytes_per_el,
                             active_bins=active_bins, hadamard=hadamard,
                             r=r, mu=mu, input_mode=input_mode,
-                            step_overhead_s=step_overhead_s)
-    ici = shard_ici_bytes(layer, n_shards, strategy, batch, bytes_per_el)
+                            step_overhead_s=step_overhead_s,
+                            residual=residual)
+    ici = shard_ici_bytes(layer, n_shards, strategy, batch, bytes_per_el,
+                          residual=residual is not None)
     chip_s = c["serial_s"] + c["step_s"] + max(c["hbm_s"], c["compute_s"])
     c.update({
         "strategy": strategy,

@@ -62,11 +62,26 @@ Array = jax.Array
 @dataclasses.dataclass(frozen=True)
 class EpilogueSpec:
     """Post-conv elementwise work fused into (bias, relu) or scheduled
-    right after (pool) the conv kernel."""
+    right after (pool) the conv kernel.
+
+    ``residual`` is the shortcut-add mode of a DAG node with a
+    ``residual_from`` edge (ISSUE 10):
+
+      None     no shortcut (every linear-stack layer);
+      'fused'  the shortcut activation is one more VMEM operand on the
+               kernel's epilogue flush — added after bias, before ReLU,
+               inside the same pallas_call (requires the fused backend
+               and stride 1);
+      'add'    the dense fallback: the conv runs with ReLU deferred and
+               the executor applies ``relu(y + shortcut)`` as an
+               unfused XLA add — the degradation-ladder rung
+               ``epilogue residual-fused->residual-add``.
+    """
 
     bias: bool = True
     relu: bool = True
     pool: bool = False       # 2x2 max-pool follows this layer (spatial)
+    residual: str | None = None   # None | 'fused' | 'add'
 
 
 class PlanTables(NamedTuple):
@@ -83,6 +98,173 @@ class PlanTables(NamedTuple):
     @property
     def nbytes(self) -> int:
         return sum(a.nbytes for a in self)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanNode:
+    """One node of the compiled DAG plan (ISSUE 10).
+
+    The plan-level twin of the config-level ``dataflow.NodeSpec``:
+    topo-ordered by ``build_network_plan``, resolved against the
+    compiled ``LayerPlan`` tuple, and carrying the plan-time decisions
+    a NodeSpec cannot (the ShortcutFusion on-chip verdict).
+
+      id            stable node id; for 'conv' nodes this IS the
+                    ``ConvLayer`` name (== ``layers[layer_index]``).
+      kind          'conv' | 'pool'.
+      inputs        producer ids (length 1; 'input' = network input).
+      layer_index   index into ``NetworkPlan.layers`` (-1 for pools).
+      pool          'max' | 'avg' (2x2, stride 2) for pool nodes.
+      residual_from shortcut producer id, or None.
+      relu          apply ReLU at this node's output.  For residual
+                    nodes this is the POST-add ReLU (the in-kernel
+                    epilogue relu is suppressed on the 'add' rung and
+                    the executor applies ``relu(y + shortcut)``).
+      shortcut_on_chip  the reuse decision for a fused shortcut: True
+                    when the autotuner priced the shortcut as retained
+                    VMEM bytes ('vmem' placement) and it fit the
+                    budget; False when it re-reads from HBM.
+    """
+
+    id: str
+    kind: str = "conv"
+    inputs: tuple[str, ...] = ("input",)
+    layer_index: int = -1
+    pool: str = "max"
+    residual_from: str | None = None
+    relu: bool = True
+    shortcut_on_chip: bool = False
+
+
+def _linear_node_specs(layers, pool_after) -> tuple:
+    """Synthesize the degenerate chain graph for a linear conv stack:
+    one 'conv' node per layer, a 'max' pool node (id '<name>:pool')
+    after every layer named in ``pool_after``."""
+    nodes = []
+    prev = "input"
+    for layer in layers:
+        nodes.append(df.NodeSpec(id=layer.name, inputs=(prev,)))
+        prev = layer.name
+        if layer.name in pool_after:
+            pid = f"{layer.name}:pool"
+            nodes.append(df.NodeSpec(id=pid, kind="pool", inputs=(prev,)))
+            prev = pid
+    return tuple(nodes)
+
+
+def _topo_order_specs(specs) -> list:
+    """Kahn topo-order of config NodeSpecs (shortcut edges included).
+
+    Raises ``PlanValidationError`` (site='graph') on duplicate ids,
+    references to unknown ids, or a cycle — at plan build, not at
+    execution.
+    """
+    by_id: dict[str, object] = {}
+    for s in specs:
+        if s.id == "input" or s.id in by_id:
+            raise res.PlanValidationError(
+                f"graph node id {s.id!r} is duplicated or reserved",
+                layer=s.id, site="graph")
+        by_id[s.id] = s
+    deps: dict[str, set] = {}
+    for s in specs:
+        edges = set(s.inputs)
+        if getattr(s, "residual_from", None) is not None:
+            edges.add(s.residual_from)
+        edges.discard("input")
+        unknown = edges - by_id.keys()
+        if unknown:
+            raise res.PlanValidationError(
+                f"graph node {s.id!r} references unknown node(s) "
+                f"{sorted(unknown)}", layer=s.id, site="graph")
+        deps[s.id] = edges
+    order, ready = [], [s for s in specs if not deps[s.id]]
+    done: set[str] = set()
+    while ready:
+        s = ready.pop(0)
+        order.append(s)
+        done.add(s.id)
+        for t in specs:
+            if t.id not in done and t not in ready \
+                    and deps[t.id] <= done:
+                ready.append(t)
+    if len(order) != len(list(specs)):
+        stuck = sorted(set(by_id) - done)
+        raise res.PlanValidationError(
+            f"graph has a cycle through node(s) {stuck}",
+            layer=stuck[0], site="graph")
+    return order
+
+
+def graph_sink(nodes) -> str:
+    """Id of the network output node of a topo-ordered node sequence:
+    the last node whose output no other node consumes (main or shortcut
+    edge).  Falls back to the final topo node for degenerate graphs."""
+    consumed: set[str] = set()
+    for n in nodes:
+        consumed.update(n.inputs)
+        rf = getattr(n, "residual_from", None)
+        if rf is not None:
+            consumed.add(rf)
+    sinks = [n.id for n in nodes if n.id not in consumed]
+    return sinks[-1] if sinks else nodes[-1].id
+
+
+def node_output_shapes(layers, specs) -> dict[str, tuple[int, int, int]]:
+    """Walk a topo-ordered node sequence and return every node's output
+    shape as ``{id: (C, H, W)}`` (batch elided).
+
+    Works on both config-level ``dataflow.NodeSpec`` and plan-level
+    ``PlanNode`` sequences (both carry id/kind/inputs/residual_from).
+    Conv nodes produce their layer's post-stride 'same' extent
+    (``ConvLayer.out_hw``); pool nodes halve H and W (2x2, stride 2,
+    floor — odd edge rows/cols are dropped, matching the executor).
+
+    Raises ``PlanValidationError`` when a conv node's declared layer
+    geometry disagrees with what its producer actually emits
+    (site='graph/input-shape') or a shortcut edge carries a shape
+    other than the node's own output (site='graph/residual-shape') —
+    the DAG checks of ISSUE 10, enforced at plan build.
+    """
+    by_name = {l.name: l for l in layers}
+    first = next((by_name[s.id] for s in specs
+                  if s.kind == "conv" and s.id in by_name), None)
+    shapes: dict[str, tuple[int, int, int]] = {}
+    if first is not None:
+        shapes["input"] = (first.c_in, first.h_in, first.w_in)
+    for s in specs:
+        src = shapes.get(s.inputs[0])
+        if s.kind == "pool":
+            if src is None:
+                raise res.PlanValidationError(
+                    f"pool node {s.id!r} has no resolvable input shape",
+                    layer=s.id, site="graph/input-shape")
+            c, h, w = src
+            out = (c, h // 2, w // 2)
+        else:
+            layer = by_name.get(s.id)
+            if layer is None:
+                raise res.PlanValidationError(
+                    f"conv node {s.id!r} has no matching ConvLayer",
+                    layer=s.id, site="graph/input-shape")
+            want = (layer.c_in, layer.h_in, layer.w_in)
+            if src is not None and src != want:
+                raise res.PlanValidationError(
+                    f"conv node {s.id!r} declares input {want} but its "
+                    f"producer {s.inputs[0]!r} emits {src}",
+                    layer=s.id, site="graph/input-shape")
+            hw = getattr(layer, "out_hw", (layer.h_in, layer.w_in))
+            out = (layer.c_out, hw[0], hw[1])
+        rf = getattr(s, "residual_from", None)
+        if rf is not None:
+            sc = shapes.get(rf)
+            if sc != out:
+                raise res.PlanValidationError(
+                    f"residual edge {rf!r} -> {s.id!r} adds shape "
+                    f"{sc} to output shape {out}",
+                    layer=s.id, site="graph/residual-shape")
+        shapes[s.id] = out
+    return shapes
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -176,16 +358,51 @@ class LayerPlan:
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class NetworkPlan:
-    """The compile-once artifact ``models.cnn.forward_spectral`` executes."""
+    """The compile-once artifact ``models.cnn.forward_spectral`` executes.
+
+    ``graph`` is the topo-ordered DAG the executors walk (ISSUE 10);
+    ``build_network_plan`` always populates it (linear configs get the
+    synthesized chain).  Plans constructed by hand with ``graph=()``
+    fall back to the chain derived from ``layers`` + the epilogue pool
+    flags via ``execution_graph``.
+    """
 
     name: str
     fft_size: int
     batch: int                        # batch the autotune assumed
     layers: tuple[LayerPlan, ...]
+    graph: tuple[PlanNode, ...] = ()
 
     @property
     def tuning(self) -> dict[str, at.FusedTuning]:
         return {lp.layer.name: lp.tuning for lp in self.layers}
+
+    @property
+    def execution_graph(self) -> tuple[PlanNode, ...]:
+        """The DAG to execute — ``graph``, or the linear chain implied
+        by ``layers`` (+ epilogue pool flags) for legacy plans."""
+        if self.graph:
+            return self.graph
+        nodes, prev = [], "input"
+        for i, lp in enumerate(self.layers):
+            name = lp.layer.name
+            nodes.append(PlanNode(id=name, kind="conv", inputs=(prev,),
+                                  layer_index=i,
+                                  relu=lp.epilogue.relu))
+            prev = name
+            if lp.epilogue.pool:
+                pid = f"{name}:pool"
+                nodes.append(PlanNode(id=pid, kind="pool",
+                                      inputs=(prev,)))
+                prev = pid
+        return tuple(nodes)
+
+    def node_plan(self, node: PlanNode) -> LayerPlan:
+        """The LayerPlan a 'conv' node executes."""
+        if node.kind != "conv":
+            raise ValueError(f"node {node.id!r} is {node.kind!r}, "
+                             f"not 'conv'")
+        return self.layers[node.layer_index]
 
     def summary(self) -> list[dict]:
         return [lp.stats() for lp in self.layers]
@@ -201,26 +418,40 @@ class NetworkPlan:
         """
         diags = res.validate_plan(self, raise_on_error=False)
         rows = []
-        for lp in self.layers:
-            name = lp.layer.name
-            mine = [d for d in diags if d.layer == name]
+        # Rows key by STABLE NODE ID, not layer index: on a DAG plan
+        # positional indices are meaningless (pool nodes interleave,
+        # topo order need not match cfg.layers order), and provenance
+        # must survive plan rebuilds that reorder layers.
+        for node in self.execution_graph:
+            if node.kind != "conv":
+                rows.append({"node": node.id, "kind": node.kind,
+                             "pool": node.pool,
+                             "demotions": [], "issues": []})
+                continue
+            lp = self.layers[node.layer_index]
+            mine = [d for d in diags if d.layer == node.id]
             rows.append({
-                "layer": name,
+                "node": node.id,
+                "kind": "conv",
+                "layer": node.id,
                 "backend": lp.backend,
                 "flow": lp.tuning.flow,
                 "hadamard": lp.hadamard,
                 "input_mode": lp.input_mode,
+                "residual": getattr(lp.epilogue, "residual", None),
                 "demotions": list(lp.provenance),
                 "issues": [str(d) for d in mine],
             })
         n_err = sum(d.severity == "error" for d in diags)
         n_warn = sum(d.severity == "warn" for d in diags)
-        demoted = [lp.layer.name for lp in self.layers if lp.provenance]
+        demoted = {lp.layer.name: list(lp.provenance)
+                   for lp in self.layers if lp.provenance}
         return {
             "name": self.name,
             "batch": self.batch,
             "healthy": n_err == 0 and not demoted,
-            "demoted_layers": demoted,
+            "demoted_layers": list(demoted),
+            "demotions_by_node": demoted,
             "issues": {"error": n_err, "warn": n_warn},
             "layers": rows,
         }
@@ -370,6 +601,24 @@ def build_network_plan(params: dict, cfg, *,
     pool_after = getattr(cfg, "pool_after", frozenset())
     k2 = cfg.fft_size * cfg.fft_size
 
+    # --- DAG plan IR (ISSUE 10): resolve + topo-order the node graph.
+    # Linear configs get the synthesized chain, so every plan carries a
+    # graph and the executors have exactly one walk to implement.
+    graph_specs = getattr(cfg, "graph", None)
+    explicit_graph = graph_specs is not None
+    if not explicit_graph:
+        graph_specs = _linear_node_specs(layers, pool_after)
+    order = _topo_order_specs(graph_specs)
+    conv_specs = {s.id: s for s in order if s.kind == "conv"}
+    names = [l.name for l in layers]
+    if sorted(conv_specs) != sorted(names):
+        raise res.PlanValidationError(
+            f"graph conv nodes {sorted(conv_specs)} do not match "
+            f"cfg.layers {sorted(names)} (each conv layer must appear "
+            f"in exactly one node)", site="graph")
+    node_output_shapes(layers, order)   # DAG shape checks (raises)
+
+    shortcut_on_chip: dict[str, bool] = {}
     plans: list[LayerPlan] = []
     for layer, conv, alpha in zip(layers, params["convs"], alphas):
         geo = spec.make_geometry(layer.h_in, layer.w_in, layer.ksize,
@@ -400,14 +649,37 @@ def build_network_plan(params: dict, cfg, *,
                                              batch, interpret)
         modes = _resolve_hadamard_modes(hadamard, alpha, schedule, active)
         imodes = _resolve_input_modes(input_mode)
-        tuning = at.autotune_layer(
-            layer, cfg.fft_size, alpha, batch=batch,
-            vmem_budget=vmem_budget, blocks=blocks, hw_safe=hw_safe,
-            active_bins=len(active) if active is not None else None,
-            hadamard_modes=modes, input_modes=imodes,
-            schedule_r=schedule_r,
-            schedule_mu=schedule_mu, step_overhead_s=step_overhead_s,
-            measure_fn=measure_fn)
+        node_spec = conv_specs[layer.name]
+        stride = getattr(layer, "stride", 1)
+        # Residual mode: the fused epilogue add needs the stride-1
+        # output the kernel actually flushes (stride subsampling
+        # happens after the kernel), so strided nodes take the dense
+        # 'add' fallback from the start.
+        residual_mode = None
+        if node_spec.residual_from is not None:
+            residual_mode = "fused" if stride == 1 else "add"
+
+        def _tune(residual=None):
+            return at.autotune_layer(
+                layer, cfg.fft_size, alpha, batch=batch,
+                vmem_budget=vmem_budget, blocks=blocks, hw_safe=hw_safe,
+                active_bins=len(active) if active is not None else None,
+                hadamard_modes=modes, input_modes=imodes,
+                schedule_r=schedule_r,
+                schedule_mu=schedule_mu,
+                step_overhead_s=step_overhead_s,
+                residual=residual, measure_fn=measure_fn)
+
+        if residual_mode == "fused":
+            # ShortcutFusion reuse decision: hold the shortcut on-chip
+            # (retained VMEM bytes) when the working set still fits the
+            # budget, else re-read it from HBM on the flush path.
+            tuning = _tune(residual="vmem")
+            if tuning.vmem_bytes > vmem_budget:
+                tuning = _tune(residual="hbm")
+            shortcut_on_chip[layer.name] = tuning.residual == "vmem"
+        else:
+            tuning = _tune()
 
         tables = None
         if tuning.hadamard == "scheduled":
@@ -426,8 +698,15 @@ def build_network_plan(params: dict, cfg, *,
                                 jnp.asarray(lt.vr), jnp.asarray(lt.vi))
             cycles, mu = lt.total_cycles, lt.pe_utilization  # exact
 
-        epi = EpilogueSpec(bias=True, relu=True,
-                           pool=layer.name in pool_after)
+        # On the 'add' rung the kernel flushes bias-only output and the
+        # executor applies relu(y + shortcut) — in-kernel relu would
+        # clamp the pre-add activation, which is wrong.
+        epi = EpilogueSpec(bias=True,
+                           relu=(node_spec.relu
+                                 and residual_mode != "add"),
+                           pool=(not explicit_graph
+                                 and layer.name in pool_after),
+                           residual=residual_mode)
         bias = jnp.asarray(conv["b"], jnp.float32).reshape(1, -1)
         plans.append(LayerPlan(
             layer=layer, geo=geo, kernels=sk, alpha=alpha, tuning=tuning,
@@ -438,9 +717,19 @@ def build_network_plan(params: dict, cfg, *,
             ("bin" if active is not None else "dense"),
             input_mode=tuning.input_mode or "windowed",
             tables=tables))
+    layer_index = {name: i for i, name in enumerate(names)}
+    pnodes = tuple(
+        PlanNode(id=s.id, kind="conv", inputs=tuple(s.inputs),
+                 layer_index=layer_index[s.id],
+                 residual_from=s.residual_from, relu=s.relu,
+                 shortcut_on_chip=shortcut_on_chip.get(s.id, False))
+        if s.kind == "conv" else
+        PlanNode(id=s.id, kind="pool", inputs=tuple(s.inputs),
+                 pool=s.pool)
+        for s in order)
     net = NetworkPlan(name=getattr(cfg, "name", "spectral-cnn"),
                       fft_size=cfg.fft_size, batch=batch,
-                      layers=tuple(plans))
+                      layers=tuple(plans), graph=pnodes)
     if validate:
         res.validate_plan(net, vmem_budget=vmem_budget, hw_safe=hw_safe)
     return net
@@ -475,13 +764,24 @@ def plan_cache_key(cfg, batch: int, *,
     silent cross-mesh cache poisoning: wrong shard math, not an error).
     ``None`` (single-device / unsharded) keys distinctly from every
     concrete mesh, including ``(1,)``.
+
+    DAG configs additionally fold a graph signature — node ids, kinds,
+    edges (main + shortcut), pool kinds and per-node relu flags — so
+    two configs sharing a name but wired differently (or a config that
+    gained a residual edge) never collide.  ``None`` (linear config)
+    keys distinctly from an explicit chain-shaped graph.
     """
     alphas = sp.per_layer_alphas(cfg.alpha, len(list(cfg.layers)))
     mesh = (tuple(int(d) for d in mesh_shape)
             if mesh_shape is not None else None)
+    graph = getattr(cfg, "graph", None)
+    gsig = (None if graph is None else tuple(
+        (n.id, n.kind, tuple(n.inputs), n.pool, n.residual_from,
+         bool(getattr(n, "relu", True)))
+        for n in graph))
     return (getattr(cfg, "name", "spectral-cnn"), int(cfg.fft_size),
             tuple(float(a) for a in alphas), int(batch),
-            ("mesh", mesh),
+            ("mesh", mesh), ("graph", gsig),
             tuple(sorted((k, repr(v)) for k, v in build_kwargs.items())))
 
 
@@ -847,6 +1147,14 @@ def build_sharded_network_plan(params: dict, cfg, *,
         modes = _resolve_hadamard_modes(hadamard, lp.alpha, schedule,
                                         lp.active)
         imodes = _resolve_input_modes(input_mode)
+        # Residual layers charge the shortcut at BOTH levels: the
+        # per-chip fused pricing (placement from the base tuning) and
+        # the extra (D-1)/D ICI term ``shard_ici_bytes`` adds for
+        # moving the Y-sized shortcut into the shards' layout.
+        residual = None
+        if getattr(lp.epilogue, "residual", None) is not None:
+            residual = (lp.tuning.residual or "hbm"
+                        if lp.epilogue.residual == "fused" else "hbm")
         st = at.autotune_layer_sharded(
             lp.layer, base.fft_size, lp.alpha, n_shards=n_shards,
             strategies=strategies, batch=batch,
@@ -855,7 +1163,7 @@ def build_sharded_network_plan(params: dict, cfg, *,
                          else None),
             hadamard_modes=modes, input_modes=imodes,
             schedule_r=schedule_r, schedule_mu=schedule_mu,
-            step_overhead_s=step_overhead_s)
+            step_overhead_s=step_overhead_s, residual=residual)
         slayers.append(make_sharded_layer_plan(lp, st, n_shards,
                                                schedule_r=schedule_r))
     splan = ShardedNetworkPlan(

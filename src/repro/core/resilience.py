@@ -290,10 +290,16 @@ def _layer_cost(lp, batch: int) -> dict:
     """Re-price one layer's tuned config through the fused cost model."""
     tn = lp.tuning
     fa = lp.n_active_bins if lp.active is not None else None
+    residual = None
+    if getattr(lp.epilogue, "residual", None) == "fused":
+        # keep pricing the fused shortcut operand the way the autotuner
+        # placed it ('vmem' retained on-chip / 'hbm' re-read)
+        residual = tn.residual or "hbm"
     return df.tpu_fused_flow_cost(
         lp.layer, lp.geo.fft_size, lp.alpha, tn.block_n, tn.block_p,
         tn.block_m, tn.flow, batch=batch, active_bins=fa,
-        hadamard=lp.hadamard, input_mode=lp.input_mode)
+        hadamard=lp.hadamard, input_mode=lp.input_mode,
+        residual=residual)
 
 
 def validate_layer_plan(lp, *, batch: int = 1,
@@ -468,10 +474,75 @@ def validate_layer_plan(lp, *, batch: int = 1,
     return out
 
 
+def validate_graph(plan) -> list[Diagnostic]:
+    """DAG invariants of a ``core.plan.NetworkPlan`` (ISSUE 10).
+
+    The stored graph must be topo-ordered with unique non-reserved ids,
+    every edge (main + shortcut) resolving to an already-emitted node,
+    conv nodes pointing at the layer that carries their name, shortcut
+    shapes matching the node's post-stride output, and residual-FUSED
+    epilogues only on stride-1 fused-backend layers (anything else must
+    sit on the 'add' rung).
+    """
+    out: list[Diagnostic] = []
+    graph = plan.execution_graph
+    d = lambda layer, check, msg, sev="error": out.append(
+        Diagnostic(layer, check, msg, sev))
+    seen: set[str] = set()
+    for node in graph:
+        if node.id == "input" or node.id in seen:
+            d(node.id, "graph/node-id",
+              f"node id {node.id!r} is duplicated or reserved")
+        refs = list(node.inputs)
+        if node.residual_from is not None:
+            refs.append(node.residual_from)
+        for ref in refs:
+            if ref != "input" and ref not in seen:
+                d(node.id, "graph/order",
+                  f"node {node.id!r} consumes {ref!r} before it is "
+                  f"produced (unknown id, cycle, or bad topo order)")
+        if node.kind == "conv":
+            if not 0 <= node.layer_index < len(plan.layers):
+                d(node.id, "graph/layer-index",
+                  f"layer_index {node.layer_index} outside "
+                  f"[0, {len(plan.layers)})")
+            else:
+                lp = plan.layers[node.layer_index]
+                if lp.layer.name != node.id:
+                    d(node.id, "graph/layer-index",
+                      f"node {node.id!r} resolves to layer "
+                      f"{lp.layer.name!r}")
+                residual = getattr(lp.epilogue, "residual", None)
+                stride = getattr(lp.layer, "stride", 1)
+                if residual == "fused" and (
+                        getattr(lp, "backend", "fused") != "fused"
+                        or stride != 1):
+                    d(node.id, "graph/residual-fused",
+                      f"residual-fused epilogue on backend="
+                      f"{getattr(lp, 'backend', 'fused')!r} stride="
+                      f"{stride}: the in-kernel add needs the fused "
+                      f"backend at stride 1 (demote to the "
+                      f"residual-add rung)")
+                if residual is not None and node.residual_from is None:
+                    d(node.id, "graph/residual-fused",
+                      f"epilogue residual={residual!r} but the node "
+                      f"has no residual_from edge")
+        seen.add(node.id)
+    if not any(x.check == "graph/order" or x.check == "graph/layer-index"
+               for x in out):
+        from repro.core.plan import node_output_shapes
+        try:
+            node_output_shapes([lp.layer for lp in plan.layers], graph)
+        except PlanValidationError as e:
+            d(e.layer, e.site or "graph", str(e).splitlines()[0])
+    return out
+
+
 def validate_plan(plan, *, vmem_budget: int = df.TPU_VMEM_BYTES,
                   hw_safe: bool = True, raise_on_error: bool = True
                   ) -> list[Diagnostic]:
-    """Validate every layer of a ``core.plan.NetworkPlan``.
+    """Validate every layer of a ``core.plan.NetworkPlan``, plus the
+    DAG invariants of its execution graph (``validate_graph``).
 
     Returns all diagnostics (errors and warnings).  When
     ``raise_on_error`` (default), raises ``PlanValidationError``
@@ -483,6 +554,7 @@ def validate_plan(plan, *, vmem_budget: int = df.TPU_VMEM_BYTES,
         diags.extend(validate_layer_plan(
             lp, batch=plan.batch, vmem_budget=vmem_budget,
             hw_safe=hw_safe))
+    diags.extend(validate_graph(plan))
     errors = [d for d in diags if d.severity == "error"]
     if errors and raise_on_error:
         raise PlanValidationError(
@@ -497,15 +569,20 @@ def validate_plan(plan, *, vmem_budget: int = df.TPU_VMEM_BYTES,
 # Per-layer execution with a per-layer backend (the bottom ladder axis)
 # ---------------------------------------------------------------------------
 
-def _spatial_epilogue(y, lp):
+def _spatial_epilogue(y, lp, shortcut=None):
+    """Bias -> (+shortcut) -> ReLU, the same ordering the fused
+    kernel's epilogue flush uses."""
     if lp.epilogue.bias:
         y = y + lp.bias[0][None, :, None, None]
+    if shortcut is not None:
+        y = y + shortcut
     if lp.epilogue.relu:
         y = jnp.maximum(y, 0.0)
     return y
 
 
-def execute_planned_layer(x, lp, *, interpret: bool | None = None):
+def execute_planned_layer(x, lp, *, interpret: bool | None = None,
+                          shortcut=None):
     """Run one conv layer honoring ``LayerPlan.backend``.
 
     'fused' dispatches to ``kernels.fused_spectral_conv.
@@ -513,19 +590,26 @@ def execute_planned_layer(x, lp, *, interpret: bool | None = None):
     three-launch Pallas pipeline; 'einsum' the pure-jnp oracle — the
     ladder's terminal rung, which always executes.  Pooling stays with
     the caller.
+
+    ``shortcut`` is the residual operand of a residual-fused DAG node
+    (``EpilogueSpec.residual == 'fused'``): added after bias, before
+    ReLU — inside the kernel flush on the fused backend, in the spatial
+    epilogue otherwise.  On the 'add' rung the caller performs the add
+    itself and must NOT pass a shortcut here.
     """
     backend = getattr(lp, "backend", "fused")
     if backend == "einsum":
         y = spec.spectral_conv2d_pretransformed(x, lp.kernels, lp.geo)
-        return _spatial_epilogue(y, lp)
+        return _spatial_epilogue(y, lp, shortcut)
     if backend == "staged":
         fault_check("lowering", layer=lp.layer.name, backend="staged")
         from repro.kernels import ops
         y = ops.spectral_conv2d_pallas(x, lp.kernels.values, lp.geo,
                                        interpret=interpret)
-        return _spatial_epilogue(y, lp)
+        return _spatial_epilogue(y, lp, shortcut)
     from repro.kernels.fused_spectral_conv import execute_layer_plan
-    return execute_layer_plan(x, lp, interpret=interpret)
+    return execute_layer_plan(x, lp, interpret=interpret,
+                              shortcut=shortcut)
 
 
 # ---------------------------------------------------------------------------
@@ -538,6 +622,7 @@ def execute_planned_layer(x, lp, *, interpret: bool | None = None):
 DEMOTION_LADDER = (
     ("input_mode", "halo", "windowed"),
     ("hadamard", "scheduled", "dense"),
+    ("epilogue", "residual-fused", "residual-add"),
     ("backend", "fused", "staged"),
     ("backend", "staged", "einsum"),
 )
@@ -546,6 +631,21 @@ DEMOTION_LADDER = (
 def _summarize(err: BaseException) -> str:
     first = str(err).strip().splitlines()
     return f"{type(err).__name__}: {first[0] if first else ''}"
+
+
+def _residual_add_fallback(lp):
+    """Flip a residual-FUSED layer plan to the unfused-add rung: the
+    kernel flushes bias-only output (in-kernel ReLU suppressed — it
+    would clamp the pre-add activation) and the executor applies
+    ``relu(y + shortcut)`` as a plain XLA add.  The tuning's shortcut
+    placement is cleared so repricing stops charging fused-shortcut
+    bytes."""
+    import dataclasses as dc
+
+    return dc.replace(
+        lp,
+        epilogue=dc.replace(lp.epilogue, residual="add", relu=False),
+        tuning=dc.replace(lp.tuning, residual=None))
 
 
 def _reprice_tuning(lp, batch: int):
@@ -593,6 +693,10 @@ def demote_layer(lp, *, batch: int = 1, reason: BaseException | str = ""):
         plane = "bin" if lp.active is not None else "dense"
         new = dc.replace(lp, hadamard=plane, tables=None)
         rung = f"hadamard scheduled->{plane}"
+    elif backend == "fused" and \
+            getattr(lp.epilogue, "residual", None) == "fused":
+        new = _residual_add_fallback(lp)
+        rung = "epilogue residual-fused->residual-add"
     elif backend == "fused":
         new = dc.replace(lp, backend="staged")
         rung = "backend fused->staged"
@@ -635,10 +739,20 @@ def demote_layer_backend(lp, *, batch: int = 1,
     nxt = {"fused": "staged", "staged": "einsum"}.get(backend)
     if nxt is None:
         return None
-    new = dc.replace(lp, backend=nxt)
+    new = lp
+    extra = ()
+    if backend == "fused" and \
+            getattr(lp.epilogue, "residual", None) == "fused":
+        # off the fused backend the epilogue add can't stay in-kernel;
+        # drop to the unfused-add rung in the same step (the spatial
+        # epilogue would otherwise ReLU before the add)
+        new = _residual_add_fallback(new)
+        extra = ("epilogue residual-fused->residual-add "
+                 "(backend demotion)",)
+    new = dc.replace(new, backend=nxt)
     tn = _reprice_tuning(new, batch)
     rung = f"backend {backend}->{nxt}"
-    prov = getattr(lp, "provenance", ()) + (
+    prov = getattr(lp, "provenance", ()) + extra + (
         f"{rung} ({note})" if note else rung,)
     return dc.replace(new, tuning=tn, provenance=prov)
 
@@ -685,8 +799,16 @@ def probe_layer_plan(lp, *, batch: int = 1,
     """
     x = jnp.zeros((batch, lp.layer.c_in, lp.layer.h_in, lp.layer.w_in),
                   jnp.float32)
+    shortcut = None
+    if getattr(lp.epilogue, "residual", None) == "fused":
+        # probe the variant that will actually run: a residual-fused
+        # epilogue takes one more VMEM operand on the flush path
+        hw = getattr(lp.layer, "out_hw", (lp.layer.h_in, lp.layer.w_in))
+        shortcut = jnp.zeros((batch, lp.layer.c_out, hw[0], hw[1]),
+                             jnp.float32)
     try:
-        y = execute_planned_layer(x, lp, interpret=interpret)
+        y = execute_planned_layer(x, lp, interpret=interpret,
+                                  shortcut=shortcut)
         jnp.asarray(y).block_until_ready()
         return None
     except BaseException as e:           # noqa: BLE001 — probe boundary
@@ -884,12 +1006,13 @@ class NumericGuards:
                              f"got {self.policy!r}")
 
 
-def _oracle_layer(x, lp):
+def _oracle_layer(x, lp, shortcut=None):
     y = spec.spectral_conv2d_pretransformed(x, lp.kernels, lp.geo)
-    return _spatial_epilogue(y, lp)
+    return _spatial_epilogue(y, lp, shortcut)
 
 
-def _sampled_parity_err(x, y, lp, guards: NumericGuards) -> float:
+def _sampled_parity_err(x, y, lp, guards: NumericGuards,
+                        shortcut=None) -> float:
     sk = lp.kernels
     n = sk.n_out
     sel = np.unique(np.linspace(
@@ -902,19 +1025,23 @@ def _sampled_parity_err(x, y, lp, guards: NumericGuards) -> float:
     ref = spec.spectral_conv2d_pretransformed(x[:nb], sub, lp.geo)
     if lp.epilogue.bias:
         ref = ref + lp.bias[0][sel][None, :, None, None]
+    if shortcut is not None:
+        ref = ref + shortcut[:nb, np.asarray(sel)]
     if lp.epilogue.relu:
         ref = jnp.maximum(ref, 0.0)
     got = y[:nb, np.asarray(sel)]
     return float(jnp.abs(got - ref).max())
 
 
-def apply_guards(x, y, lp, guards: NumericGuards):
+def apply_guards(x, y, lp, guards: NumericGuards, shortcut=None):
     """Run the enabled guards on one layer's output.
 
     ``x`` is the layer input (needed for the parity oracle and the
-    demote fallback), ``y`` its computed output.  Returns the output to
-    carry forward — ``y`` itself, or the oracle recompute under the
-    'demote' policy.
+    demote fallback), ``y`` its computed output; ``shortcut`` is the
+    residual operand already fused into ``y`` (residual-fused layers),
+    so the parity oracle reproduces the same bias -> +shortcut -> ReLU
+    epilogue.  Returns the output to carry forward — ``y`` itself, or
+    the oracle recompute under the 'demote' policy.
     """
     name = lp.layer.name
 
@@ -928,7 +1055,7 @@ def apply_guards(x, y, lp, guards: NumericGuards):
             warnings.warn(f"[numeric-guard] {message}", RuntimeWarning,
                           stacklevel=3)
             return y
-        return _oracle_layer(x, lp)      # demote: oracle recompute
+        return _oracle_layer(x, lp, shortcut)  # demote: oracle recompute
 
     if guards.nan_scan and not bool(jnp.isfinite(y).all()):
         return trip("nan_scan",
@@ -937,7 +1064,7 @@ def apply_guards(x, y, lp, guards: NumericGuards):
                     f"hadamard={lp.hadamard}, "
                     f"input_mode={lp.input_mode})")
     if guards.parity and getattr(lp, "backend", "fused") != "einsum":
-        err = _sampled_parity_err(x, y, lp, guards)
+        err = _sampled_parity_err(x, y, lp, guards, shortcut)
         if not err <= guards.parity_tol:
             return trip(
                 "parity",

@@ -560,13 +560,22 @@ def _hadamard_maybe_sparse(x_f: Array, w_f, geo: SpectralGeometry) -> Array:
     return y.at[..., active].set(ya).reshape(b, n, t, kk, kk)
 
 
-@functools.partial(jax.jit, static_argnames=("pad",))
-def spatial_conv2d(x: Array, w: Array, *, pad: int | None = None) -> Array:
-    """Spatial-domain oracle: 'same' cross-correlation (stride 1)."""
+@functools.partial(jax.jit, static_argnames=("pad", "stride"))
+def spatial_conv2d(x: Array, w: Array, *, pad: int | None = None,
+                   stride: int = 1) -> Array:
+    """Spatial-domain oracle: 'same' cross-correlation.
+
+    ``stride > 1`` is numerically identical to computing the stride-1
+    'same' output and subsampling ``[..., ::stride, ::stride]`` — the
+    exact contract of the spectral path's stride handling (the
+    overlap-save kernel always produces the stride-1 output; see
+    ``dataflow.ConvLayer.stride``).
+    """
     k = w.shape[-1]
     if pad is None:
         pad = (k - 1) // 2
     return jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32),
-        window_strides=(1, 1), padding=[(pad, pad), (pad, pad)],
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
         dimension_numbers=("NCHW", "OIHW", "NCHW")).astype(x.dtype)

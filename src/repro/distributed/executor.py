@@ -89,8 +89,19 @@ def _stage_shard_tables(slp, strategy: str):
     return staged
 
 
+def _defer_epilogue(lp):
+    """A copy of ``lp`` whose in-kernel ReLU is suppressed (and any
+    residual marker cleared): residual DAG nodes apply
+    ``relu(y + shortcut)`` AFTER the collective, so the kernel must
+    flush the bias-only activation."""
+    return dataclasses.replace(
+        lp, epilogue=dataclasses.replace(lp.epilogue, relu=False,
+                                         residual=None))
+
+
 def _execute_spatial(x: Array, slp, mesh, axis: str,
-                     interpret: bool | None) -> Array:
+                     interpret: bool | None,
+                     defer_relu: bool = False) -> Array:
     from repro.kernels.fused_spectral_conv import execute_band_plan
 
     base = slp.base
@@ -100,6 +111,8 @@ def _execute_spatial(x: Array, slp, mesh, axis: str,
     band = slp.shards[0]
     staged = _stage_shard_tables(slp, "spatial")
     band = dataclasses.replace(band, tables=staged[0])
+    if defer_relu:
+        band = _defer_epilogue(band)
     hb = band.geo.n_tiles_h * geo.tile          # raw rows per shard
     xp = jnp.pad(x, ((0, 0), (0, 0), (0, D * hb - x.shape[2]), (0, 0)))
 
@@ -120,7 +133,8 @@ def _execute_spatial(x: Array, slp, mesh, axis: str,
 
 
 def _execute_channel(x: Array, slp, mesh, axis: str,
-                     interpret: bool | None) -> Array:
+                     interpret: bool | None,
+                     defer_relu: bool = False) -> Array:
     from repro.core.plan import PlanTables
     from repro.kernels.fused_spectral_conv import execute_layer_plan
 
@@ -151,34 +165,47 @@ def _execute_channel(x: Array, slp, mesh, axis: str,
         in_specs=(sp_["x"],) + (sp_["operand"],) * (2 + len(tabs)),
         out_specs=sp_["out"], check_rep=False)
     y = f(x, wr, wi, *tabs)
-    return res._spatial_epilogue(y, base)        # deferred bias+ReLU
+    # deferred bias(+ReLU) — a partial sum through a ReLU is wrong
+    epi = _defer_epilogue(base) if defer_relu else base
+    return res._spatial_epilogue(y, epi)
 
 
 def execute_sharded_layer(x: Array, slp, mesh, *,
                           axis: str = shd.SPECTRAL_AXIS,
-                          interpret: bool | None = None) -> Array:
+                          interpret: bool | None = None,
+                          defer_relu: bool = False) -> Array:
     """Run one conv layer of a ``ShardedNetworkPlan`` on ``mesh``.
 
     Dispatches on ``slp.strategy`` (see module doc).  The output is
     always the full [B, N, H_out, W_out] activation in the global
     layout, so consecutive layers may use different strategies.
-    Pooling stays with the caller (it is spatial and global), exactly
-    as for ``resilience.execute_planned_layer``.
+    Pooling and stride subsampling stay with the caller (they are
+    spatial and global), exactly as for
+    ``resilience.execute_planned_layer``.
+
+    ``defer_relu`` suppresses the epilogue ReLU wherever it would run
+    (in-kernel, band kernel, or post-psum) and returns the bias-only
+    activation — the residual DAG walk applies ``relu(y + shortcut)``
+    after the collective.
     """
     if slp.strategy == "replicate" or not slp.shards:
-        return res.execute_planned_layer(x, slp.base,
-                                         interpret=interpret)
+        base = _defer_epilogue(slp.base) if defer_relu else slp.base
+        return res.execute_planned_layer(x, base, interpret=interpret)
     _check_mesh(slp, mesh, axis)
     if slp.strategy == "spatial":
-        return _execute_spatial(x, slp, mesh, axis, interpret)
+        return _execute_spatial(x, slp, mesh, axis, interpret,
+                                defer_relu)
     if slp.strategy == "channel":
-        return _execute_channel(x, slp, mesh, axis, interpret)
+        return _execute_channel(x, slp, mesh, axis, interpret,
+                                defer_relu)
     raise ValueError(f"unknown shard strategy {slp.strategy!r}")
 
 
-def _pool(x: Array) -> Array:
+def _pool(x: Array, kind: str = "max") -> Array:
     b, c, h, w = x.shape
-    return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+    h2, w2 = h // 2, w // 2
+    x = x[:, :, :h2 * 2, :w2 * 2].reshape(b, c, h2, 2, w2, 2)
+    return x.max(axis=(3, 5)) if kind == "max" else x.mean(axis=(3, 5))
 
 
 def forward_spectral_sharded(params: dict, splan, x: Array, *,
@@ -186,21 +213,68 @@ def forward_spectral_sharded(params: dict, splan, x: Array, *,
                              interpret: bool | None = None) -> Array:
     """Sharded analogue of ``models.cnn.forward_spectral``.
 
-    Walks the ``ShardedNetworkPlan`` layer by layer through
-    ``execute_sharded_layer`` (strategies mix freely), pools where the
-    BASE plan says to, and runs the FC head replicated — the paper's
-    CPU-side stage, a few matmuls XLA replicates trivially.  ``mesh``
-    defaults to ``launch.mesh.make_spectral_mesh(splan.n_shards,
-    splan.axis)``.
+    Walks the BASE plan's execution DAG (ISSUE 10) node by node:
+    conv nodes run through ``execute_sharded_layer`` (strategies mix
+    freely), pool nodes run globally, stride-2 outputs subsample after
+    the collective, and residual edges add in the global layout —
+    in-kernel (fused epilogue) only on replicated residual-FUSED
+    layers, as a post-collective ``relu(y + shortcut)`` everywhere
+    else.  The FC head runs replicated — the paper's CPU-side stage, a
+    few matmuls XLA replicates trivially.  ``mesh`` defaults to
+    ``launch.mesh.make_spectral_mesh(splan.n_shards, splan.axis)``.
     """
     if mesh is None:
         from repro.launch.mesh import make_spectral_mesh
         mesh = make_spectral_mesh(splan.n_shards, splan.axis)
-    for slp in splan.layers:
-        x = execute_sharded_layer(x, slp, mesh, axis=splan.axis,
-                                  interpret=interpret)
-        if slp.base.epilogue.pool:
-            x = _pool(x)
+    from repro.core.plan import graph_sink
+    graph = splan.base.execution_graph
+    out_id = graph_sink(graph)
+    refs: dict[str, int] = {out_id: 1}
+    for node in graph:
+        for src in (node.inputs[0], node.residual_from):
+            if src is not None:
+                refs[src] = refs.get(src, 0) + 1
+    acts: dict[str, Array] = {"input": x}
+    for node in graph:
+        src = acts[node.inputs[0]]
+        if node.kind == "pool":
+            y = _pool(src, node.pool)
+        else:
+            slp = splan.layers[node.layer_index]
+            base = slp.base
+            stride = getattr(base.layer, "stride", 1)
+            sc = (acts[node.residual_from]
+                  if node.residual_from is not None else None)
+            replicated = slp.strategy == "replicate" or not slp.shards
+            if sc is None:
+                y = execute_sharded_layer(src, slp, mesh,
+                                          axis=splan.axis,
+                                          interpret=interpret)
+                y = y[:, :, ::stride, ::stride]
+            elif (replicated
+                  and getattr(base, "backend", "fused") == "fused"
+                  and getattr(base.epilogue, "residual", None)
+                  == "fused"):
+                # replicated residual-FUSED node: the shortcut rides
+                # the kernel's epilogue flush (stride 1 by invariant)
+                y = res.execute_planned_layer(src, base,
+                                              interpret=interpret,
+                                              shortcut=sc)
+            else:
+                y = execute_sharded_layer(src, slp, mesh,
+                                          axis=splan.axis,
+                                          interpret=interpret,
+                                          defer_relu=True)
+                y = y[:, :, ::stride, ::stride] + sc
+                if node.relu:
+                    y = jax.nn.relu(y)
+        acts[node.id] = y
+        for s in (node.inputs[0], node.residual_from):
+            if s is not None:
+                refs[s] -= 1
+                if refs[s] == 0:
+                    acts.pop(s, None)
+    x = acts[out_id]
     x = x.reshape(x.shape[0], -1)
     x = jax.nn.relu(x @ params["fc1"])
     x = jax.nn.relu(x @ params["fc2"])

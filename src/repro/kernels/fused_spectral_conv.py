@@ -381,7 +381,16 @@ def _halo_kernel(body, *, bth: int, btw: int, fft_size: int):
 
 class _TileSink:
     """Windowed output layout [S2, Np, Pp]: rectangle (n, p) is the
-    [S2, bn, bp] slab at (n*bn, p*bp); no in-VMEM relayout."""
+    [S2, bn, bp] slab at (n*bn, p*bp); no in-VMEM relayout.
+
+    ``_sc`` (set by ``_residual_kernel``) is an optional shortcut Ref in
+    the SAME output layout whose current block is added after bias and
+    before ReLU — the residual-fused epilogue of ISSUE 10.  The sc
+    BlockSpec indexes on (n, p) only, so at the flush step (the only
+    epilogue site) the prefetched block is exactly this rectangle's
+    shortcut."""
+
+    _sc = None
 
     def __init__(self, s2: int, bn: int, bp: int):
         self.bn, self.bp = bn, bp
@@ -395,7 +404,12 @@ class _TileSink:
         return y
 
     def epilogue(self, y, b_ref, relu: bool):
-        return _epilogue(y, b_ref, relu)
+        y = y + b_ref[0][None, :, None]
+        if self._sc is not None:
+            y = y + self._sc[...]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        return y
 
 
 class _CanvasSink:
@@ -406,7 +420,13 @@ class _CanvasSink:
     [bn, bth*t, btw*t] canvas rectangle before the DMA, so tile (i, j)'s
     t x t valid rows land at canvas (i*t, j*t) exactly as the host
     relayout used to place them.  The host keeps only the final
-    'same'-crop slice (``_crop_canvas``)."""
+    'same'-crop slice (``_crop_canvas``).
+
+    ``_sc`` (set by ``_residual_kernel``): optional shortcut Ref in the
+    same canvas layout, block (1, bn, bth*t, btw*t) — added after bias,
+    before ReLU at the flush step."""
+
+    _sc = None
 
     def __init__(self, hg: HaloGeometry, tile: int, bn: int):
         self.hg, self.t, self.bn = hg, tile, bn
@@ -433,9 +453,26 @@ class _CanvasSink:
 
     def epilogue(self, y, b_ref, relu: bool):
         y = y + b_ref[0][:, None, None]
+        if self._sc is not None:
+            y = y + self._sc[0]
         if relu:
             y = jnp.maximum(y, 0.0)
         return y
+
+
+def _residual_kernel(body, sink):
+    """Wrap a flow kernel body so a residual-shortcut operand — the
+    LEADING input ref, laid out exactly like the output — is peeled off
+    and attached to the sink before the body runs.  The sink's epilogue
+    then adds the shortcut block after bias and before ReLU, so the
+    residual add costs one extra VMEM operand on the flush path and
+    nothing anywhere else (the six flow bodies are untouched).  Composes
+    outside ``_halo_kernel``: pallas hands (sc, x, gr, gc, ...) and each
+    wrapper peels from the front."""
+    def kernel(sc_ref, *rest):
+        sink._sc = sc_ref
+        return body(*rest)
+    return kernel
 
 
 def _dma_slot():
@@ -741,7 +778,8 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
                             flow: str = "output_stationary",
                             block_n: int = 64, block_m: int = 64,
                             block_p: int = 128, relu: bool = False,
-                            interpret: bool = True) -> Array:
+                            interpret: bool = True,
+                            shortcut: Array | None = None) -> Array:
     """FFT -> Hadamard -> IFFT (+ bias/ReLU epilogue) in one pallas_call.
 
     xt: [S, M, P] f32     overlap-save windows, s-leading (S = K^2,
@@ -751,6 +789,10 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
     dvr/dvi: [S2, Fa]     inverse DFT, valid rows x active columns
                           (S2 = t^2)
     bias: [1, N] f32      per-output-channel bias (zeros disable)
+    shortcut: optional [S2, N, P] f32 residual operand in the OUTPUT
+        tile layout (``_shortcut_tiles`` relayout of the producer's
+        activation): one extra input streamed on the flush path and
+        added after bias, before ReLU, inside the kernel.
     returns [S2, N, P] f32 finished spatial outputs (epilogue applied).
     """
     if flow not in FLOWS:
@@ -780,19 +822,31 @@ def fused_spectral_pipeline(xt: Array, wr: Array, wi: Array,
         (fa, bn, bm), lambda *g: (0, canon(*g)[0], canon(*g)[2]))
     b_spec = pl.BlockSpec((1, bn), lambda *g: (0, canon(*g)[0]))
 
+    in_specs = [x_spec, w_spec, w_spec,
+                _const_spec(fa, s), _const_spec(fa, s),
+                _const_spec(s2, fa), _const_spec(s2, fa), b_spec]
+    operands = [xt_.astype(jnp.float32), wr_, wi_, dfr, dfi, dvr, dvi,
+                bias_]
+    if shortcut is not None:
+        assert shortcut.shape == (s2, n, p), (shortcut.shape, (s2, n, p))
+        kernel = _residual_kernel(kernel, sink)
+        sc_spec = pl.BlockSpec(
+            (s2, bn, bp), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
+        in_specs = [sc_spec] + in_specs
+        operands = [_pad_axis(_pad_axis(shortcut.astype(jnp.float32),
+                                        1, bn), 2, bp)] + operands
+
     y = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[x_spec, w_spec, w_spec,
-                  _const_spec(fa, s), _const_spec(fa, s),
-                  _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         out_shape=jax.ShapeDtypeStruct((s2, np_, pp_), jnp.float32),
         scratch_shapes=scratch,
         compiler_params=CompilerParams(
             dimension_semantics=semantics),
         interpret=interpret,
-    )(xt_.astype(jnp.float32), wr_, wi_, dfr, dfi, dvr, dvi, bias_)
+    )(*operands)
     return y[:, :n, :p]
 
 
@@ -833,6 +887,55 @@ def _halo_specs(geo: SpectralGeometry, hg: HaloGeometry, bm: int, canon):
     return x_spec, gr_spec, gc_spec
 
 
+def _canvas_sc_spec(hg: HaloGeometry, bn: int, tile: int, canon):
+    """BlockSpec of the halo path's shortcut operand: the output-canvas
+    rectangle of the current (n, p) grid position — the same (image,
+    block-row, block-col) decomposition ``_CanvasSink.dst`` uses, as a
+    blocked index map."""
+    nb = hg.n_blocks
+
+    def sc_idx(*g):
+        n_, p, _ = canon(*g)
+        return (p // nb, n_, (p % nb) // hg.nbw, p % hg.nbw)
+
+    return pl.BlockSpec((1, bn, hg.bth * tile, hg.btw * tile), sc_idx)
+
+
+def _shortcut_canvas(sc: Array, geo: SpectralGeometry, hg: HaloGeometry,
+                     bn: int) -> Array:
+    """RAW [B, N, H_out, W_out] shortcut -> the halo pipeline's output
+    canvas layout [B, Np, nbh*bth*t, nbw*btw*t]: the valid 'same'-crop
+    window of the canvas holds the shortcut, everything else is zero
+    (those canvas positions are wraparound garbage and are cropped by
+    ``_crop_canvas`` anyway)."""
+    b, n, h, w = sc.shape
+    t = geo.tile
+    start = geo.ksize - 1 - geo.pad
+    canvas = jnp.zeros((b, n, hg.nbh * hg.bth * t, hg.nbw * hg.btw * t),
+                       jnp.float32)
+    canvas = canvas.at[:, :, start:start + h,
+                       start:start + w].set(sc.astype(jnp.float32))
+    return _pad_axis(canvas, 1, bn)
+
+
+def _shortcut_tiles(sc: Array, geo: SpectralGeometry, t_cnt: int) -> Array:
+    """RAW [B, N, H_out, W_out] shortcut -> the windowed pipelines'
+    output tile layout [S2, N, B*T] (the exact inverse of
+    ``_assemble_output``): embed into valid-tile canvas coordinates,
+    split into t x t tiles, u-major rows."""
+    b, n, h, w = sc.shape
+    t = geo.tile
+    start = geo.ksize - 1 - geo.pad
+    canvas = jnp.zeros((b, n, geo.n_tiles_h * t, geo.n_tiles_w * t),
+                       jnp.float32)
+    canvas = canvas.at[:, :, start:start + h,
+                       start:start + w].set(sc.astype(jnp.float32))
+    tiles = (canvas.reshape(b, n, geo.n_tiles_h, t, geo.n_tiles_w, t)
+             .transpose(0, 1, 2, 4, 3, 5)        # [b, n, ith, jtw, u, v]
+             .reshape(b, n, t_cnt, t * t))
+    return tiles.transpose(3, 1, 0, 2).reshape(t * t, n, b * t_cnt)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("geo", "hg", "flow", "block_n", "block_m", "relu",
@@ -844,10 +947,14 @@ def fused_spectral_pipeline_halo(x: Array, wr: Array, wi: Array,
                                  flow: str = "output_stationary",
                                  block_n: int = 64, block_m: int = 64,
                                  relu: bool = False,
-                                 interpret: bool = True) -> Array:
+                                 interpret: bool = True,
+                                 shortcut: Array | None = None) -> Array:
     """The halo-input sibling of ``fused_spectral_pipeline``: gather ->
     FFT -> Hadamard -> IFFT (+ epilogue) in one pallas_call, reading the
-    RAW activation.
+    RAW activation.  ``shortcut`` is an optional RAW [B, N, H_out,
+    W_out] residual operand, embedded into the output-canvas layout
+    host-side and streamed as one extra flush-path input (added after
+    bias, before ReLU, in-kernel).
 
     x: [B, M, H, W] f32      raw NCHW activation (no windowing, no
                              padding — the gather encodes both)
@@ -896,20 +1003,26 @@ def fused_spectral_pipeline_halo(x: Array, wr: Array, wi: Array,
 
     canvas = (b, np_, hg.nbh * hg.bth * geo.tile,
               hg.nbw * hg.btw * geo.tile)
+    in_specs = [x_spec, gr_spec, gc_spec, w_spec, w_spec,
+                _const_spec(fa, s), _const_spec(fa, s),
+                _const_spec(s2, fa), _const_spec(s2, fa), b_spec]
+    operands = [x_.astype(jnp.float32), gr, gc, wr_, wi_, dfr, dfi, dvr,
+                dvi, bias_]
+    if shortcut is not None:
+        kernel = _residual_kernel(kernel, sink)
+        in_specs = [_canvas_sc_spec(hg, bn, geo.tile, canon)] + in_specs
+        operands = [_shortcut_canvas(shortcut, geo, hg, bn)] + operands
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[x_spec, gr_spec, gc_spec, w_spec, w_spec,
-                  _const_spec(fa, s), _const_spec(fa, s),
-                  _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         out_shape=jax.ShapeDtypeStruct(canvas, jnp.float32),
         scratch_shapes=scratch,
         compiler_params=CompilerParams(
             dimension_semantics=semantics),
         interpret=interpret,
-    )(x_.astype(jnp.float32), gr, gc, wr_, wi_, dfr, dfi, dvr, dvi,
-      bias_)
+    )(*operands)
 
 
 @functools.partial(
@@ -921,9 +1034,12 @@ def fused_spectral_pipeline_scheduled_halo(
         dfr: Array, dfi: Array, dvr: Array, dvi: Array, bias: Array, *,
         geo: SpectralGeometry, hg: HaloGeometry, n_out: int,
         flow: str = "output_stationary", block_m: int = 64,
-        relu: bool = False, interpret: bool = True) -> Array:
+        relu: bool = False, interpret: bool = True,
+        shortcut: Array | None = None) -> Array:
     """Halo-input sibling of ``fused_spectral_pipeline_scheduled``: the
     in-kernel window gather feeding the Alg-2 scheduled datapath.
+    ``shortcut``: optional RAW [B, N, H_out, W_out] residual operand
+    (see ``fused_spectral_pipeline_halo``).
     Operand contracts are the scheduled pipeline's (tables padded for
     ``m_pad_to == min(block_m, M)``, block_n implied == N'), except the
     input is the raw [B, M, H, W] activation and the output is the
@@ -968,21 +1084,27 @@ def fused_spectral_pipeline_scheduled_halo(
 
     canvas = (b, np_, hg.nbh * hg.bth * geo.tile,
               hg.nbw * hg.btw * geo.tile)
+    in_specs = [x_spec, gr_spec, gc_spec, t_spec(r), t_spec(n_pe),
+                t_spec(n_pe), t_spec(n_pe),
+                _const_spec(fa, s), _const_spec(fa, s),
+                _const_spec(s2, fa), _const_spec(s2, fa), b_spec]
+    operands = [x_.astype(jnp.float32), gr, gc, idx, sel, vr, vi, dfr,
+                dfi, dvr, dvi, bias_]
+    if shortcut is not None:
+        kernel = _residual_kernel(kernel, sink)
+        in_specs = [_canvas_sc_spec(hg, n_pe, geo.tile, canon)] + in_specs
+        operands = [_shortcut_canvas(shortcut, geo, hg, n_pe)] + operands
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[x_spec, gr_spec, gc_spec, t_spec(r), t_spec(n_pe),
-                  t_spec(n_pe), t_spec(n_pe),
-                  _const_spec(fa, s), _const_spec(fa, s),
-                  _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         out_shape=jax.ShapeDtypeStruct(canvas, jnp.float32),
         scratch_shapes=scratch,
         compiler_params=CompilerParams(
             dimension_semantics=semantics),
         interpret=interpret,
-    )(x_.astype(jnp.float32), gr, gc, idx, sel, vr, vi, dfr, dfi, dvr,
-      dvi, bias_)
+    )(*operands)
 
 
 @functools.partial(
@@ -998,10 +1120,14 @@ def fused_spectral_pipeline_scheduled(xt: Array, idx: Array, sel: Array,
                                       block_m: int = 64,
                                       block_p: int = 128,
                                       relu: bool = False,
-                                      interpret: bool = True) -> Array:
+                                      interpret: bool = True,
+                                      shortcut: Array | None = None
+                                      ) -> Array:
     """FFT -> SCHEDULED sparse Hadamard -> IFFT (+ epilogue) in one
     pallas_call — the element-granular sibling of
-    ``fused_spectral_pipeline``.
+    ``fused_spectral_pipeline``.  ``shortcut``: optional [S2, n_out, P]
+    residual operand in the output tile layout (see
+    ``fused_spectral_pipeline``).
 
     The kernel operand is not a plane stack but the Alg-2 INDEX/VALUE
     tables of ``scheduler.LayerTables`` (already padded/remapped):
@@ -1051,21 +1177,32 @@ def fused_spectral_pipeline_scheduled(xt: Array, idx: Array, sel: Array,
         lambda *g: (canon(*g)[0], canon(*g)[2], 0, 0))
     b_spec = pl.BlockSpec((1, n_pe), lambda *g: (0, canon(*g)[0]))
 
+    in_specs = [x_spec, t_spec(r), t_spec(n_pe), t_spec(n_pe),
+                t_spec(n_pe),
+                _const_spec(fa, s), _const_spec(fa, s),
+                _const_spec(s2, fa), _const_spec(s2, fa), b_spec]
+    operands = [xt_.astype(jnp.float32), idx, sel, vr, vi, dfr, dfi,
+                dvr, dvi, bias_]
+    if shortcut is not None:
+        assert shortcut.shape == (s2, n_out, p), \
+            (shortcut.shape, (s2, n_out, p))
+        kernel = _residual_kernel(kernel, sink)
+        sc_spec = pl.BlockSpec(
+            (s2, n_pe, bp), lambda *g: (0, canon(*g)[0], canon(*g)[1]))
+        in_specs = [sc_spec] + in_specs
+        operands = [_pad_axis(_pad_axis(shortcut.astype(jnp.float32),
+                                        1, n_pe), 2, bp)] + operands
     y = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[x_spec, t_spec(r), t_spec(n_pe), t_spec(n_pe),
-                  t_spec(n_pe),
-                  _const_spec(fa, s), _const_spec(fa, s),
-                  _const_spec(s2, fa), _const_spec(s2, fa), b_spec],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         out_shape=jax.ShapeDtypeStruct((s2, np_, pp_), jnp.float32),
         scratch_shapes=scratch,
         compiler_params=CompilerParams(
             dimension_semantics=semantics),
         interpret=interpret,
-    )(xt_.astype(jnp.float32), idx, sel, vr, vi, dfr, dfi, dvr, dvi,
-      bias_)
+    )(*operands)
     return y[:, :n_out, :p]
 
 
@@ -1096,7 +1233,8 @@ def _assemble_output(y: Array, geo: SpectralGeometry, b: int, n: int,
     static_argnames=("geo", "flow", "block_n", "block_m", "block_p",
                      "relu", "interpret"))
 def _fused_conv(x: Array, wr: Array, wi: Array, dfr: Array, dfi: Array,
-                dvr: Array, dvi: Array, bias: Array, *,
+                dvr: Array, dvi: Array, bias: Array,
+                shortcut: Array | None = None, *,
                 geo: SpectralGeometry, flow: str,
                 block_n: int, block_m: int, block_p: int,
                 relu: bool, interpret: bool) -> Array:
@@ -1105,14 +1243,18 @@ def _fused_conv(x: Array, wr: Array, wi: Array, dfr: Array, dfi: Array,
     relu), so the host-side relayout is not re-dispatched eagerly on
     every forward call.  All spectral operands arrive precomputed (by
     ``core.plan`` or the ad-hoc wrapper below); nothing geometric or
-    sparsity-related is derived in here."""
+    sparsity-related is derived in here.  ``shortcut`` is an optional
+    RAW [B, N, H_out, W_out] residual operand, relaid to the output
+    tile layout and added in-kernel (after bias, before ReLU)."""
     b, m = x.shape[:2]
     n = wr.shape[1]
     xt, t_cnt = _windows_layout(x, geo)
+    sc = (None if shortcut is None
+          else _shortcut_tiles(shortcut, geo, t_cnt))
     y = fused_spectral_pipeline(
         xt, wr, wi, dfr, dfi, dvr, dvi, bias, flow=flow,
         block_n=block_n, block_m=block_m, block_p=block_p, relu=relu,
-        interpret=interpret)                            # [t^2, N, B*T]
+        interpret=interpret, shortcut=sc)               # [t^2, N, B*T]
     return _assemble_output(y, geo, b, n, t_cnt, x.dtype)
 
 
@@ -1122,7 +1264,8 @@ def _fused_conv(x: Array, wr: Array, wi: Array, dfr: Array, dfi: Array,
                      "relu", "interpret"))
 def _fused_conv_scheduled(x: Array, idx: Array, sel: Array, vr: Array,
                           vi: Array, dfr: Array, dfi: Array, dvr: Array,
-                          dvi: Array, bias: Array, *,
+                          dvi: Array, bias: Array,
+                          shortcut: Array | None = None, *,
                           geo: SpectralGeometry, n_out: int, flow: str,
                           block_m: int, block_p: int,
                           relu: bool, interpret: bool) -> Array:
@@ -1130,10 +1273,12 @@ def _fused_conv_scheduled(x: Array, idx: Array, sel: Array, vr: Array,
     contract as ``_fused_conv``; kernel operands are Alg-2 tables)."""
     b = x.shape[0]
     xt, t_cnt = _windows_layout(x, geo)
+    sc = (None if shortcut is None
+          else _shortcut_tiles(shortcut, geo, t_cnt))
     y = fused_spectral_pipeline_scheduled(
         xt, idx, sel, vr, vi, dfr, dfi, dvr, dvi, bias, n_out=n_out,
         flow=flow, block_m=block_m, block_p=block_p, relu=relu,
-        interpret=interpret)
+        interpret=interpret, shortcut=sc)
     return _assemble_output(y, geo, b, n_out, t_cnt, x.dtype)
 
 
@@ -1155,7 +1300,8 @@ def _crop_canvas(y: Array, geo: SpectralGeometry, n: int, dtype) -> Array:
     static_argnames=("geo", "flow", "block_n", "block_m", "block_p",
                      "relu", "interpret"))
 def _fused_conv_halo(x: Array, wr: Array, wi: Array, dfr: Array,
-                     dfi: Array, dvr: Array, dvi: Array, bias: Array, *,
+                     dfi: Array, dvr: Array, dvi: Array, bias: Array,
+                     shortcut: Array | None = None, *,
                      geo: SpectralGeometry, flow: str,
                      block_n: int, block_m: int, block_p: int,
                      relu: bool, interpret: bool) -> Array:
@@ -1169,7 +1315,8 @@ def _fused_conv_halo(x: Array, wr: Array, wi: Array, dfr: Array,
     hg = halo_block_geometry(geo, block_p)
     y = fused_spectral_pipeline_halo(
         x, wr, wi, dfr, dfi, dvr, dvi, bias, geo=geo, hg=hg, flow=flow,
-        block_n=block_n, block_m=block_m, relu=relu, interpret=interpret)
+        block_n=block_n, block_m=block_m, relu=relu, interpret=interpret,
+        shortcut=shortcut)
     return _crop_canvas(y, geo, n, x.dtype)
 
 
@@ -1180,7 +1327,9 @@ def _fused_conv_halo(x: Array, wr: Array, wi: Array, dfr: Array,
 def _fused_conv_scheduled_halo(x: Array, idx: Array, sel: Array,
                                vr: Array, vi: Array, dfr: Array,
                                dfi: Array, dvr: Array, dvi: Array,
-                               bias: Array, *, geo: SpectralGeometry,
+                               bias: Array,
+                               shortcut: Array | None = None, *,
+                               geo: SpectralGeometry,
                                n_out: int, flow: str, block_m: int,
                                block_p: int, relu: bool,
                                interpret: bool) -> Array:
@@ -1190,7 +1339,7 @@ def _fused_conv_scheduled_halo(x: Array, idx: Array, sel: Array,
     y = fused_spectral_pipeline_scheduled_halo(
         x, idx, sel, vr, vi, dfr, dfi, dvr, dvi, bias, geo=geo, hg=hg,
         n_out=n_out, flow=flow, block_m=block_m, relu=relu,
-        interpret=interpret)
+        interpret=interpret, shortcut=shortcut)
     return _crop_canvas(y, geo, n_out, x.dtype)
 
 
@@ -1315,8 +1464,8 @@ def fused_spectral_conv2d_scheduled(x: Array, sk, geo: SpectralGeometry,
         interpret=interpret)
 
 
-def execute_layer_plan(x: Array, lp, *, interpret: bool | None = None
-                       ) -> Array:
+def execute_layer_plan(x: Array, lp, *, interpret: bool | None = None,
+                       shortcut: Array | None = None) -> Array:
     """Run one conv layer from a precompiled ``core.plan.LayerPlan``.
 
     Consumes the plan's precomputed operands and dispatches on the
@@ -1329,6 +1478,12 @@ def execute_layer_plan(x: Array, lp, *, interpret: bool | None = None
     siblings, when the plan's ``input_mode`` is 'halo') directly.
     Pooling (``lp.epilogue.pool``) is spatial and stays with the
     caller.
+
+    ``shortcut``: RAW [B, N, H_out, W_out] residual operand for plans
+    whose epilogue is residual-FUSED (``lp.epilogue.residual ==
+    'fused'``); the DAG executor passes the producer node's activation
+    and the kernel adds it after bias, before ReLU.  Ignored epilogue
+    states ('add' / None) never pass one — the add happens in XLA.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -1340,7 +1495,8 @@ def execute_layer_plan(x: Array, lp, *, interpret: bool | None = None
     # failure or VMEM RESOURCE_EXHAUSTED would surface on hardware.
     ctx = dict(layer=lp.layer.name, backend="fused", flow=tn.flow,
                hadamard=getattr(lp, "hadamard", None),
-               input_mode=getattr(lp, "input_mode", "windowed"))
+               input_mode=getattr(lp, "input_mode", "windowed"),
+               residual=getattr(lp.epilogue, "residual", None))
     res.fault_check("lowering", **ctx)
     res.fault_check("vmem_overflow", **ctx)
     bias = lp.bias if lp.epilogue.bias else jnp.zeros_like(lp.bias)
@@ -1349,14 +1505,14 @@ def execute_layer_plan(x: Array, lp, *, interpret: bool | None = None
         conv = _fused_conv_scheduled_halo if halo else _fused_conv_scheduled
         y = conv(
             x, tb.idx, tb.sel, tb.vr, tb.vi,
-            lp.dfr, lp.dfi, lp.dvr, lp.dvi, bias, geo=lp.geo,
+            lp.dfr, lp.dfi, lp.dvr, lp.dvi, bias, shortcut, geo=lp.geo,
             n_out=lp.layer.c_out, flow=tn.flow, block_m=tn.block_m,
             block_p=tn.block_p, relu=lp.epilogue.relu,
             interpret=interpret)
         return res.fault_corrupt("nan_activations", y, **ctx)
     conv = _fused_conv_halo if halo else _fused_conv
     y = conv(x, lp.wr, lp.wi, lp.dfr, lp.dfi, lp.dvr, lp.dvi,
-             bias, geo=lp.geo, flow=tn.flow,
+             bias, shortcut, geo=lp.geo, flow=tn.flow,
              block_n=tn.block_n, block_m=tn.block_m,
              block_p=tn.block_p, relu=lp.epilogue.relu,
              interpret=interpret)

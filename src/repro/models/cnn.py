@@ -37,6 +37,12 @@ _POOL_AFTER = frozenset(
 
 @dataclasses.dataclass(frozen=True)
 class SpectralCNNConfig:
+    """``graph`` (ISSUE 10) is an optional tuple of
+    ``dataflow.NodeSpec`` describing a DAG over the conv layers —
+    stride-2 convs, 2x2 max/avg pool nodes and residual shortcut edges
+    (ResNet-class).  ``None`` keeps the linear VGG semantics: a chain
+    of the layers with max-pools after ``pool_after``."""
+
     name: str = "vgg16-spectral"
     layers: Sequence[df.ConvLayer] = df.VGG16_LAYERS
     fft_size: int = 8
@@ -47,6 +53,29 @@ class SpectralCNNConfig:
     image_size: int = 224
     fc_dim: int = 4096
     pool_after: frozenset = _POOL_AFTER
+    graph: Sequence[df.NodeSpec] | None = None
+
+
+def _config_graph(cfg: SpectralCNNConfig):
+    """The topo-ordered NodeSpec sequence a config describes (explicit
+    ``cfg.graph``, or the synthesized linear chain)."""
+    from repro.core import plan as pl
+    specs = cfg.graph
+    if specs is None:
+        specs = pl._linear_node_specs(
+            list(cfg.layers), getattr(cfg, "pool_after", frozenset()))
+    return pl._topo_order_specs(specs)
+
+
+def feature_dim(cfg: SpectralCNNConfig) -> int:
+    """Flattened feature size entering the FC head: the output shape of
+    the graph's sink node (shape-walked, so stride/pool/DAG configs all
+    agree with what the conv stack actually emits)."""
+    from repro.core import plan as pl
+    order = _config_graph(cfg)
+    shapes = pl.node_output_shapes(list(cfg.layers), order)
+    c, h, w = shapes[pl.graph_sink(order)]
+    return c * h * w
 
 
 def init(key, cfg: SpectralCNNConfig) -> dict:
@@ -60,10 +89,9 @@ def init(key, cfg: SpectralCNNConfig) -> dict:
             k, (layer.c_out, layer.c_in, layer.ksize, layer.ksize),
             jnp.float32) * (2.0 / fan_in) ** 0.5
         convs.append({"w": w, "b": jnp.zeros((layer.c_out,))})
-    feat = cfg.layers[-1].c_out * (cfg.image_size // 32) ** 2
     return {
         "convs": convs,
-        "fc1": L.dense_init(ks[-3], feat, cfg.fc_dim),
+        "fc1": L.dense_init(ks[-3], feature_dim(cfg), cfg.fc_dim),
         "fc2": L.dense_init(ks[-2], cfg.fc_dim, cfg.fc_dim),
         "fc3": L.dense_init(ks[-1], cfg.fc_dim, cfg.n_classes),
     }
@@ -86,9 +114,13 @@ def build_plan(params: dict, cfg: SpectralCNNConfig, **kwargs):
     return build_network_plan(params, cfg, **kwargs)
 
 
-def _pool(x: Array) -> Array:
+def _pool(x: Array, kind: str = "max") -> Array:
+    """2x2 stride-2 max/avg pool; odd edge rows/cols are dropped
+    (floor semantics, mirrored by ``plan.node_output_shapes``)."""
     b, c, h, w = x.shape
-    return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+    h2, w2 = h // 2, w // 2
+    x = x[:, :, :h2 * 2, :w2 * 2].reshape(b, c, h2, 2, w2, 2)
+    return x.max(axis=(3, 5)) if kind == "max" else x.mean(axis=(3, 5))
 
 
 BACKENDS = ("einsum", "pallas_staged", "pallas_fused")
@@ -167,54 +199,152 @@ def forward_spectral(params: dict, plan, x: Array, *,
                 f"batch {x.shape[0]}; RMW-flow layers {rmw} are only "
                 f"hardware-safe at the tuned batch — rebuild with "
                 f"build_network_plan(..., batch={x.shape[0]})")
-    for lp in plan.layers:
-        if (x.shape[1] != lp.layer.c_in or x.shape[2] != lp.layer.h_in
-                or x.shape[3] != lp.layer.w_in):
-            raise ValueError(
-                f"plan/input mismatch at {lp.layer.name}: plan expects "
-                f"[B, {lp.layer.c_in}, {lp.layer.h_in}, {lp.layer.w_in}], "
-                f"got {x.shape}")
-        if backend == "einsum":
-            x = spec.spectral_conv2d_pretransformed(x, lp.kernels, lp.geo)
-            x = _epilogue_spatial(x, lp)
-        elif backend == "pallas_staged":
-            from repro.kernels import ops
-            y = ops.spectral_conv2d_pallas(x, lp.kernels.values, lp.geo,
-                                           interpret=interpret)
-            y = _epilogue_spatial(y, lp)
-            if guards is not None:
-                y = res.apply_guards(x, y, lp, guards)
-            x = y
+    from repro.core.plan import graph_sink
+    graph = plan.execution_graph
+    out_id = graph_sink(graph)
+    # Reference counts so large intermediate activations are freed as
+    # soon as their last consumer (main or shortcut edge) has run.
+    refs: dict[str, int] = {out_id: 1}
+    for node in graph:
+        for src in (node.inputs[0], node.residual_from):
+            if src is not None:
+                refs[src] = refs.get(src, 0) + 1
+    acts: dict[str, Array] = {"input": x}
+    for node in graph:
+        src = acts[node.inputs[0]]
+        if node.kind == "pool":
+            y = _pool(src, node.pool)
         else:
-            try:
-                y = res.execute_planned_layer(x, lp, interpret=interpret)
-            except res.ResilienceError:
-                raise
-            except Exception as e:
-                raise res.KernelLoweringError(
-                    f"layer {lp.layer.name} failed under backend="
-                    f"{getattr(lp, 'backend', 'fused')!r} (flow="
-                    f"{lp.tuning.flow}, hadamard={lp.hadamard}, "
-                    f"input_mode={lp.input_mode}): {e}",
-                    layer=lp.layer.name, site="forward") from e
-            if guards is not None:
-                y = res.apply_guards(x, y, lp, guards)
-            x = y
-        if lp.epilogue.pool:
-            x = _pool(x)
+            lp = plan.layers[node.layer_index]
+            if src.shape[1:] != (lp.layer.c_in, lp.layer.h_in,
+                                 lp.layer.w_in):
+                raise ValueError(
+                    f"plan/input mismatch at {node.id}: plan expects "
+                    f"[B, {lp.layer.c_in}, {lp.layer.h_in}, "
+                    f"{lp.layer.w_in}], got {src.shape}")
+            sc = (acts[node.residual_from]
+                  if node.residual_from is not None else None)
+            y = _conv_node(src, lp, node, sc, backend, interpret, guards)
+        acts[node.id] = y
+        for s in (node.inputs[0], node.residual_from):
+            if s is not None:
+                refs[s] -= 1
+                if refs[s] == 0:
+                    acts.pop(s, None)
+    x = acts[out_id]
     x = x.reshape(x.shape[0], -1)
     x = jax.nn.relu(x @ params["fc1"])
     x = jax.nn.relu(x @ params["fc2"])
     return x @ params["fc3"]
 
 
+def _conv_node(x: Array, lp, node, sc: Array | None, backend: str,
+               interpret: bool | None,
+               guards: res.NumericGuards | None) -> Array:
+    """Execute one conv DAG node under the chosen network backend.
+
+    Epilogue ordering is uniform across every path: bias -> stride
+    subsample -> (+shortcut) -> ReLU.  (Bias and ReLU are elementwise,
+    so applying them before or after the ``[::stride]`` subsample is
+    numerically identical; the shortcut always matches the POST-stride
+    output shape.)  Residual-FUSED nodes on the fused backend do bias +
+    shortcut + ReLU inside the kernel flush; every other combination —
+    the 'add' rung, strided nodes, staged/einsum paths — applies the
+    add as a plain XLA op with the ReLU deferred until after it.
+    """
+    stride = getattr(lp.layer, "stride", 1)
+    residual = getattr(lp.epilogue, "residual", None)
+    if backend == "einsum":
+        y = spec.spectral_conv2d_pretransformed(x, lp.kernels, lp.geo)
+        if lp.epilogue.bias:
+            y = y + lp.bias[0][None, :, None, None]
+        y = y[:, :, ::stride, ::stride]
+        if sc is not None:
+            y = y + sc
+        if node.relu:
+            y = jax.nn.relu(y)
+        return y
+    if backend == "pallas_staged":
+        from repro.kernels import ops
+        y = ops.spectral_conv2d_pallas(x, lp.kernels.values, lp.geo,
+                                       interpret=interpret)
+        if sc is None:
+            y = _epilogue_spatial(y, lp)
+            if guards is not None:
+                y = res.apply_guards(x, y, lp, guards)
+            return y[:, :, ::stride, ::stride]
+        # Residual node: ReLU defers until after the add, so guard the
+        # bias-only output (parity oracle with relu disabled), then
+        # subsample -> add -> ReLU.
+        if lp.epilogue.bias:
+            y = y + lp.bias[0][None, :, None, None]
+        if guards is not None:
+            lp_nr = dataclasses.replace(
+                lp, epilogue=dataclasses.replace(lp.epilogue,
+                                                 relu=False))
+            y = res.apply_guards(x, y, lp_nr, guards)
+        y = y[:, :, ::stride, ::stride] + sc
+        return jax.nn.relu(y) if node.relu else y
+    # pallas_fused: the plan's per-layer backend decides the path.
+    fuse_in_kernel = (residual == "fused" and sc is not None
+                      and getattr(lp, "backend", "fused") == "fused")
+    try:
+        y = res.execute_planned_layer(
+            x, lp, interpret=interpret,
+            shortcut=sc if fuse_in_kernel else None)
+    except res.ResilienceError:
+        raise
+    except Exception as e:
+        raise res.KernelLoweringError(
+            f"layer {lp.layer.name} failed under backend="
+            f"{getattr(lp, 'backend', 'fused')!r} (flow="
+            f"{lp.tuning.flow}, hadamard={lp.hadamard}, "
+            f"input_mode={lp.input_mode}): {e}",
+            layer=lp.layer.name, site="forward") from e
+    if guards is not None:
+        y = res.apply_guards(x, y, lp, guards,
+                             shortcut=sc if fuse_in_kernel else None)
+    if not fuse_in_kernel:
+        y = y[:, :, ::stride, ::stride]
+        if sc is not None:
+            y = y + sc
+            if node.relu:
+                y = jax.nn.relu(y)
+    return y
+
+
 def forward_spatial(params: dict, cfg: SpectralCNNConfig, x: Array) -> Array:
-    """Dense spatial-domain oracle of the same network."""
-    for layer, conv in zip(cfg.layers, params["convs"]):
-        x = spec.spatial_conv2d(x, conv["w"], pad=layer.pad)
-        x = jax.nn.relu(x + conv["b"][None, :, None, None])
-        if layer.name in cfg.pool_after:
-            x = _pool(x)
+    """Dense spatial-domain oracle of the same network.
+
+    Walks the SAME DAG the spectral executors walk (explicit
+    ``cfg.graph`` or the synthesized linear chain) entirely in the
+    spatial domain — stride-2 convs, max/avg pool nodes and residual
+    adds included, with the canonical epilogue ordering bias -> stride
+    -> (+shortcut) -> ReLU.  This is the reference every backend,
+    degradation rung and shard strategy is diffed against (ISSUE 10's
+    oracle-diff harness).
+    """
+    from repro.core.plan import graph_sink
+    order = _config_graph(cfg)
+    convs = {layer.name: (layer, conv)
+             for layer, conv in zip(cfg.layers, params["convs"])}
+    acts: dict[str, Array] = {"input": x}
+    for s in order:
+        src = acts[s.inputs[0]]
+        if s.kind == "pool":
+            y = _pool(src, s.pool)
+        else:
+            layer, conv = convs[s.id]
+            stride = getattr(layer, "stride", 1)
+            y = spec.spatial_conv2d(src, conv["w"], pad=layer.pad,
+                                    stride=stride)
+            y = y + conv["b"][None, :, None, None]
+            if s.residual_from is not None:
+                y = y + acts[s.residual_from]
+            if s.relu:
+                y = jax.nn.relu(y)
+        acts[s.id] = y
+    x = acts[graph_sink(order)]
     x = x.reshape(x.shape[0], -1)
     x = jax.nn.relu(x @ params["fc1"])
     x = jax.nn.relu(x @ params["fc2"])

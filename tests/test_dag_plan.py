@@ -1,0 +1,498 @@
+"""Residual-DAG plan IR (ISSUE 10): oracle-diff harness + negative paths.
+
+Five test families:
+
+  1. Oracle diff — the spatial-domain reference of the full residual
+     graph (``cnn.forward_spatial`` walks the SAME DAG: stride-2
+     subsample, max/avg pools, shortcut adds before the ReLU) diffed
+     against every spectral backend at <= 1e-5.  Parity runs at
+     alpha = 1 (the spatial oracle does not prune; at alpha = 4 the
+     deviation is pruning loss, not a DAG bug), parameterized across
+     Hadamard modes and batch buckets; the 'scheduled' mode — which
+     requires pruning — rides an einsum-oracle diff at alpha = 4, where
+     both sides consume the same pruned kernels.
+  2. Fault-driven demotion — an injected 'lowering' fault matched on
+     ``residual='fused'`` must walk every residual node down the NEW
+     ladder rung (residual-fused -> residual-add) and the hardened plan
+     must still match the spatial oracle; the backend-axis ladder
+     (``demote_layer_backend``) must flip the residual mode in the same
+     step with its own provenance entry.
+  3. Forced-mesh sharding — channel- and spatial-FORCED DAG execution
+     under shard_map vs the spatial oracle.  In-process tests need >= 2
+     devices (the CI sharded job forces 8); a subprocess smoke sets
+     XLA_FLAGS itself so the default tier always exercises the
+     residual-DAG collectives.
+  4. Negative-path matrix — one test per ``PlanValidationError`` raise
+     site of the DAG checks (duplicate/reserved id, unknown edge,
+     cycle, conv-node/layer mismatch, producer-shape mismatch,
+     shape-mismatched residual, unresolvable pool input), each
+     asserting ``.layer`` AND ``.site``; plus the ``validate_graph``
+     diagnostics on a corrupted built plan.
+  5. Regressions — ``plan_cache_key`` golden snapshot (graph signature
+     folded in) and ``health_report`` keyed by stable node ids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import resnet18_spectral
+from repro.core import dataflow as df
+from repro.core import plan as pl
+from repro.core import resilience as res
+from repro.models import cnn
+from repro.testing import faults
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+MULTI_DEVICE = len(jax.devices()) >= 2
+needs_mesh = pytest.mark.skipif(
+    not MULTI_DEVICE,
+    reason="needs >= 2 devices (run under XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+SMOKE = resnet18_spectral.SMOKE
+# Parity vs the spatial oracle is only defined dense: the oracle does
+# not prune, so alpha = 4 would measure pruning loss (~2.4 abs), not
+# DAG correctness.
+DENSE = dataclasses.replace(SMOKE, alpha=1.0)
+
+RESIDUAL_IDS = ("s1b1b", "s1b2b", "s2b1b", "s2b2b")
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    key = jax.random.PRNGKey(0)
+    params = cnn.init(key, DENSE)
+    x = jax.random.normal(key, (1, 3, DENSE.image_size,
+                                DENSE.image_size), jnp.float32)
+    plan = pl.build_network_plan(params, DENSE, batch=1)
+    ref = cnn.forward_spatial(params, DENSE, x)
+    return params, x, plan, ref
+
+
+# ---------------------------------------------------------------------------
+# 1. Oracle diff: spatial DAG reference vs every backend
+# ---------------------------------------------------------------------------
+
+def test_graph_composition(dense_setup):
+    """The ResNet smoke DAG carries everything the acceptance criteria
+    name: residual-FUSED epilogues, a stride-2 conv, max AND avg pool
+    nodes, and a recorded ShortcutFusion reuse verdict per edge."""
+    _, _, plan, _ = dense_setup
+    graph = plan.execution_graph
+    residual = [n for n in graph if n.residual_from is not None]
+    assert sorted(n.id for n in residual) == sorted(RESIDUAL_IDS)
+    for n in residual:
+        lp = plan.layers[n.layer_index]
+        assert lp.epilogue.residual == "fused"
+        assert isinstance(n.shortcut_on_chip, bool)
+        assert n.relu is True and lp.epilogue.relu is True
+    strides = [plan.layers[n.layer_index].layer.stride
+               for n in graph if n.kind == "conv"]
+    assert strides.count(2) == 1
+    assert sorted(n.pool for n in graph if n.kind == "pool") == \
+        ["avg", "max"]
+
+
+@pytest.mark.parametrize("backend",
+                         ("einsum", "pallas_staged", "pallas_fused"))
+def test_backend_parity_vs_spatial_oracle(dense_setup, backend):
+    params, x, plan, ref = dense_setup
+    y = cnn.forward_spectral(params, plan, x, backend=backend)
+    assert float(jnp.abs(y - ref).max()) <= 1e-5
+
+
+@pytest.mark.parametrize("hadamard", ("dense", "bin"))
+def test_forced_hadamard_parity(dense_setup, hadamard):
+    """The DAG walk is mode-agnostic: forcing the Hadamard stage keeps
+    spatial-oracle parity through the residual epilogues."""
+    params, x, _, ref = dense_setup
+    plan = pl.build_network_plan(params, DENSE, batch=1,
+                                 hadamard=hadamard)
+    y = cnn.forward_spectral(params, plan, x, backend="pallas_fused")
+    assert float(jnp.abs(y - ref).max()) <= 1e-5
+
+
+def test_batch_bucket_parity(dense_setup):
+    """A batch-tuned plan (its own Alg-1 block choices) walks the same
+    DAG: parity holds at a serving bucket > 1 for both the fused kernel
+    and the einsum rung."""
+    params, _, _, _ = dense_setup
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (2, 3, DENSE.image_size,
+                                DENSE.image_size), jnp.float32)
+    ref = cnn.forward_spatial(params, DENSE, x)
+    plan = pl.build_network_plan(params, DENSE, batch=2)
+    for backend in ("einsum", "pallas_fused"):
+        y = cnn.forward_spectral(params, plan, x, backend=backend)
+        assert float(jnp.abs(y - ref).max()) <= 1e-5, backend
+
+
+def test_scheduled_dag_parity_alpha4():
+    """'scheduled' needs pruned kernels (Alg-2 tables exist only for
+    alpha > 1), so its DAG parity is einsum-oracle: both sides consume
+    the SAME pruned kernels and the diff isolates the datapath."""
+    key = jax.random.PRNGKey(1)
+    params = cnn.init(key, SMOKE)
+    x = jax.random.normal(key, (1, 3, SMOKE.image_size,
+                                SMOKE.image_size), jnp.float32)
+    plan = pl.build_network_plan(params, SMOKE, batch=1,
+                                 hadamard="scheduled")
+    ref = cnn.forward_spectral(params, plan, x, backend="einsum")
+    y = cnn.forward_spectral(params, plan, x, backend="pallas_fused")
+    assert float(jnp.abs(y - ref).max()) <= 1e-5
+
+
+def test_feature_dim_follows_graph_sink():
+    """``cnn.feature_dim`` sizes the FC head from the DAG sink shape
+    (head:pool), not the legacy pool_after count."""
+    order = pl._topo_order_specs(SMOKE.graph)
+    shapes = pl.node_output_shapes(list(SMOKE.layers), order)
+    c, h, w = shapes[pl.graph_sink(order)]
+    assert cnn.feature_dim(SMOKE) == c * h * w
+
+
+# ---------------------------------------------------------------------------
+# 2. Fault-driven demotion to the residual-add rung
+# ---------------------------------------------------------------------------
+
+def test_residual_demotion_rung_and_parity(dense_setup):
+    """An injected lowering fault on every residual-FUSED variant walks
+    the NEW ladder rung; the hardened plan answers like the oracle."""
+    params, x, plan, ref = dense_setup
+    with faults.inject("lowering", residual="fused") as fault:
+        hard = res.harden_network_plan(plan)
+    assert fault.fires > 0
+    for node in hard.execution_graph:
+        if node.residual_from is None:
+            continue
+        lp = hard.layers[node.layer_index]
+        assert lp.epilogue.residual == "add"
+        assert lp.epilogue.relu is False          # relu moves post-add
+        assert any("residual-fused->residual-add" in p
+                   for p in lp.provenance), lp.provenance
+    y = cnn.forward_spectral(params, hard, x, backend="pallas_fused")
+    assert float(jnp.abs(y - ref).max()) <= 1e-5
+    hr = hard.health_report()
+    assert set(RESIDUAL_IDS) <= set(hr["demotions_by_node"])
+
+
+def test_backend_ladder_flips_residual(dense_setup):
+    """The load ladder (backend axis) cannot keep an in-kernel add off
+    the fused backend: leaving 'fused' flips residual-fused -> add in
+    the same step, with its own provenance entry."""
+    _, _, plan, _ = dense_setup
+    lp = next(lp for lp in plan.layers
+              if lp.epilogue.residual == "fused")
+    demoted = res.demote_layer_backend(lp, reason="load test")
+    assert demoted.backend == "staged"
+    assert demoted.epilogue.residual == "add"
+    assert any("residual-fused->residual-add (backend demotion)" in p
+               for p in demoted.provenance)
+
+
+# ---------------------------------------------------------------------------
+# 3. Forced-mesh sharded DAG execution
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("strategy", ("channel", "spatial"))
+def test_forced_strategy_dag_parity(dense_setup, strategy):
+    from repro.distributed.executor import forward_spectral_sharded
+    from repro.launch.mesh import make_spectral_mesh
+
+    params, x, _, ref = dense_setup
+    splan = pl.build_sharded_network_plan(
+        params, DENSE, n_shards=2, strategies=(strategy,), batch=1)
+    y = forward_spectral_sharded(params, splan, x,
+                                 mesh=make_spectral_mesh(2))
+    assert float(jnp.abs(y - ref).max()) <= 1e-5
+
+
+def test_sharded_residual_dag_subprocess_smoke():
+    """Always-on collective coverage: a subprocess forces 8 host
+    devices and runs a tiny residual DAG (conv -> conv+shortcut ->
+    pool) under both forced strategies vs the spatial oracle."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from repro.core import dataflow as df
+        from repro.core import plan as pl
+        from repro.distributed.executor import forward_spectral_sharded
+        from repro.launch.mesh import make_spectral_mesh
+        from repro.models import cnn
+
+        cfg = cnn.SpectralCNNConfig(
+            name="tiny-residual", alpha=1.0, n_classes=4,
+            image_size=16, fc_dim=16,
+            layers=(df.ConvLayer("c1", 4, 8, 16, 16),
+                    df.ConvLayer("c2", 8, 8, 16, 16)),
+            pool_after=frozenset(),
+            graph=(df.NodeSpec(id="c1"),
+                   df.NodeSpec(id="c2", inputs=("c1",),
+                               residual_from="c1"),
+                   df.NodeSpec(id="c2:pool", kind="pool",
+                               inputs=("c2",))))
+        key = jax.random.PRNGKey(0)
+        params = cnn.init(key, cfg)
+        x = jax.random.normal(key, (2, 4, 16, 16), jnp.float32)
+        ref = cnn.forward_spatial(params, cfg, x)
+        for D, strats in [(4, ("channel",)), (2, ("spatial",))]:
+            splan = pl.build_sharded_network_plan(
+                params, cfg, n_shards=D, batch=2, strategies=strats)
+            y = forward_spectral_sharded(
+                params, splan, x, mesh=make_spectral_mesh(D),
+                interpret=True)
+            err = float(jnp.abs(y - ref).max())
+            assert err <= 1e-5, (strats, err)
+        print("RESIDUAL_DAG_SHARDED_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", script],
+                       env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"},
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "RESIDUAL_DAG_SHARDED_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# 4. Negative-path matrix: one test per PlanValidationError site
+# ---------------------------------------------------------------------------
+
+def _spec(id, **kw):
+    return df.NodeSpec(id=id, **kw)
+
+
+def test_site_graph_duplicate_id():
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl._topo_order_specs([_spec("a"), _spec("a", inputs=("a",))])
+    assert ei.value.site == "graph" and ei.value.layer == "a"
+
+
+def test_site_graph_reserved_id():
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl._topo_order_specs([_spec("input")])
+    assert ei.value.site == "graph" and ei.value.layer == "input"
+
+
+def test_site_graph_unknown_reference():
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl._topo_order_specs([_spec("a", inputs=("ghost",))])
+    assert ei.value.site == "graph" and ei.value.layer == "a"
+
+
+def test_site_graph_unknown_residual_reference():
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl._topo_order_specs([_spec("a", residual_from="ghost")])
+    assert ei.value.site == "graph" and ei.value.layer == "a"
+
+
+def test_site_graph_cycle():
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl._topo_order_specs([_spec("a", inputs=("b",)),
+                              _spec("b", inputs=("a",))])
+    assert ei.value.site == "graph"
+    assert ei.value.layer in ("a", "b")
+
+
+def test_site_graph_conv_nodes_must_cover_layers():
+    """A config graph that omits (or invents) a conv layer fails at
+    build, before any spectral work happens."""
+    cfg = cnn.SpectralCNNConfig(
+        name="bad-cover", alpha=1.0, n_classes=4, image_size=16,
+        fc_dim=16,
+        layers=(df.ConvLayer("c1", 3, 4, 16, 16),
+                df.ConvLayer("c2", 4, 4, 16, 16)),
+        pool_after=frozenset(),
+        graph=(df.NodeSpec(id="c1"),))     # c2 missing
+    key = jax.random.PRNGKey(0)
+    params = cnn.init(key, dataclasses.replace(cfg, graph=None))
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl.build_network_plan(params, cfg, batch=1)
+    assert ei.value.site == "graph"
+
+
+def test_site_graph_input_shape_mismatch():
+    layers = [df.ConvLayer("c1", 3, 4, 16, 16),
+              df.ConvLayer("c2", 8, 4, 16, 16)]   # wants 8ch, gets 4
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl.node_output_shapes(
+            layers, [_spec("c1"), _spec("c2", inputs=("c1",))])
+    assert ei.value.site == "graph/input-shape"
+    assert ei.value.layer == "c2"
+
+
+def test_site_graph_residual_shape_mismatch():
+    layers = [df.ConvLayer("c1", 3, 4, 16, 16),
+              df.ConvLayer("c2", 4, 8, 16, 16)]   # 8ch out vs 4ch sc
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl.node_output_shapes(
+            layers, [_spec("c1"),
+                     _spec("c2", inputs=("c1",), residual_from="c1")])
+    assert ei.value.site == "graph/residual-shape"
+    assert ei.value.layer == "c2"
+
+
+def test_site_graph_stride_breaks_residual_shape():
+    """A stride-2 conv halves its output: an identity shortcut from the
+    full-resolution producer must be rejected, not silently broadcast."""
+    layers = [df.ConvLayer("c1", 3, 4, 16, 16),
+              df.ConvLayer("c2", 4, 4, 16, 16, stride=2)]
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl.node_output_shapes(
+            layers, [_spec("c1"),
+                     _spec("c2", inputs=("c1",), residual_from="c1")])
+    assert ei.value.site == "graph/residual-shape"
+
+
+def test_site_graph_pool_without_resolvable_input():
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl.node_output_shapes([], [_spec("p", kind="pool")])
+    assert ei.value.site == "graph/input-shape"
+    assert ei.value.layer == "p"
+
+
+def test_site_graph_conv_without_layer():
+    with pytest.raises(res.PlanValidationError) as ei:
+        pl.node_output_shapes([], [_spec("ghost")])
+    assert ei.value.site == "graph/input-shape"
+    assert ei.value.layer == "ghost"
+
+
+def test_validate_plan_flags_corrupt_graph(dense_setup):
+    """A built plan whose stored graph rots (here: a duplicated node
+    id) fails ``validate_plan`` with site='validate_plan' and a
+    graph/node-id diagnostic carrying the node id."""
+    _, _, plan, _ = dense_setup
+    graph = plan.execution_graph
+    bad = dataclasses.replace(
+        plan, graph=graph + (dataclasses.replace(graph[0]),))
+    with pytest.raises(res.PlanValidationError) as ei:
+        res.validate_plan(bad)
+    assert ei.value.site == "validate_plan"
+    assert any(d.check == "graph/node-id" for d in ei.value.diagnostics)
+
+
+def test_validate_graph_rejects_residual_fused_off_fused_backend(
+        dense_setup):
+    """residual='fused' is an in-kernel epilogue: on any other backend
+    the plan must carry a graph/residual-fused error diagnostic."""
+    _, _, plan, _ = dense_setup
+    idx, lp = next(
+        (i, lp) for i, lp in enumerate(plan.layers)
+        if lp.epilogue.residual == "fused")
+    layers = list(plan.layers)
+    layers[idx] = dataclasses.replace(lp, backend="staged")
+    bad = dataclasses.replace(plan, layers=tuple(layers))
+    diags = res.validate_plan(bad, raise_on_error=False)
+    mine = [d for d in diags if d.check == "graph/residual-fused"]
+    assert mine and mine[0].layer == lp.layer.name
+    assert mine[0].severity == "error"
+
+
+def test_validate_graph_rejects_bad_topo_order(dense_setup):
+    _, _, plan, _ = dense_setup
+    graph = plan.execution_graph
+    bad = dataclasses.replace(plan, graph=graph[::-1])
+    diags = res.validate_plan(bad, raise_on_error=False)
+    assert any(d.check == "graph/order" for d in diags)
+
+
+def test_validate_graph_rejects_bad_layer_index(dense_setup):
+    _, _, plan, _ = dense_setup
+    graph = list(plan.execution_graph)
+    conv = next(i for i, n in enumerate(graph) if n.kind == "conv")
+    graph[conv] = dataclasses.replace(graph[conv], layer_index=999)
+    bad = dataclasses.replace(plan, graph=tuple(graph))
+    diags = res.validate_plan(bad, raise_on_error=False)
+    assert any(d.check == "graph/layer-index" and d.layer ==
+               graph[conv].id for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# 5. Regressions: cache-key golden snapshot + node-id health report
+# ---------------------------------------------------------------------------
+
+class _GoldCfg:
+    name = "golden"
+    fft_size = 8
+    alpha = 4.0
+    layers = (df.ConvLayer("c1", 4, 8, 16, 16),)
+    pool_after = frozenset()
+    graph = (df.NodeSpec(id="c1"),)
+
+
+def test_plan_cache_key_golden_snapshot():
+    """The exact key tuple is a compatibility contract (serving caches
+    persist across plan rebuilds): any field added to or reordered in
+    the key invalidates every cache — change this snapshot ONLY with a
+    deliberate cache-version bump."""
+    key = pl.plan_cache_key(_GoldCfg, 2, mesh_shape=(2,),
+                            hadamard="scheduled")
+    assert key == (
+        "golden", 8, (4.0,), 2,
+        ("mesh", (2,)),
+        ("graph", (("c1", "conv", ("input",), "max", None, True),)),
+        (("hadamard", "'scheduled'"),),
+    )
+
+
+def test_plan_cache_key_axes_distinct():
+    """Every axis the issue names — backend-ish build kwargs, hadamard,
+    input_mode, batch, mesh_shape and the DAG fields — must produce a
+    distinct key."""
+    base = pl.plan_cache_key(_GoldCfg, 1)
+
+    class NoGraph(_GoldCfg):
+        graph = None
+
+    class Rewired(_GoldCfg):
+        graph = (df.NodeSpec(id="c1", residual_from="input"),)
+
+    class NoRelu(_GoldCfg):
+        graph = (df.NodeSpec(id="c1", relu=False),)
+
+    variants = [
+        pl.plan_cache_key(_GoldCfg, 2),
+        pl.plan_cache_key(_GoldCfg, 1, mesh_shape=(2,)),
+        pl.plan_cache_key(_GoldCfg, 1, mesh_shape=(1,)),
+        pl.plan_cache_key(_GoldCfg, 1, hadamard="dense"),
+        pl.plan_cache_key(_GoldCfg, 1, input_mode="halo"),
+        pl.plan_cache_key(NoGraph, 1),
+        pl.plan_cache_key(Rewired, 1),
+        pl.plan_cache_key(NoRelu, 1),
+    ]
+    keys = [base] + variants
+    assert len(set(keys)) == len(keys)
+
+
+def test_health_report_keyed_by_node_ids(dense_setup):
+    """Rows (and demotion provenance) key by STABLE node id — pool
+    nodes included — so a DAG rebuild that reorders layers can never
+    misattribute a demotion (the ISSUE 10 health_report fix)."""
+    _, _, plan, _ = dense_setup
+    hr = plan.health_report()
+    ids = [r["node"] for r in hr["layers"]]
+    assert ids == [n.id for n in plan.execution_graph]
+    assert "stem:pool" in ids and "head:pool" in ids
+    pool_rows = [r for r in hr["layers"] if r["kind"] == "pool"]
+    assert {r["pool"] for r in pool_rows} == {"max", "avg"}
+    with faults.inject("lowering", residual="fused"):
+        hard = res.harden_network_plan(plan)
+    hr2 = hard.health_report()
+    assert set(RESIDUAL_IDS) <= set(hr2["demotions_by_node"])
+    for nid in RESIDUAL_IDS:
+        assert any("residual-fused->residual-add" in p
+                   for p in hr2["demotions_by_node"][nid])

@@ -124,9 +124,13 @@ def test_rung4_terminal_einsum_always_executes(params, plan, x, ref):
     with faults.inject("lowering") as f:
         hard = res.harden_network_plan(plan)
     assert f.fires > 0
+    # every ladder rung that APPLIES to this plan fires exactly once;
+    # the epilogue residual-fused->residual-add rung is a no-op on the
+    # linear smoke net (no residual edges), so it leaves no provenance
+    applicable = [r for r in res.DEMOTION_LADDER if r[0] != "epilogue"]
     for lp in hard.layers:
         assert lp.backend == "einsum"
-        assert len(lp.provenance) == len(res.DEMOTION_LADDER)
+        assert len(lp.provenance) == len(applicable)
     assert _parity(params, hard, x, ref) == 0.0
     hr = hard.health_report()
     assert hr["healthy"] is False

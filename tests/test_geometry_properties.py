@@ -1,0 +1,167 @@
+"""Geometry property suite (ISSUE 10 satellite).
+
+Pins the closed-form invariants of the three geometry helpers the DAG
+executors lean on — ``crop_canvas_same``, ``make_band_geometry`` and
+``halo_block_starts`` — at AWKWARD extents (odd H/W, tile size not
+dividing H, halo overlap k-1 comparable to the band height), plus the
+stride-2 / pool output-shape algebra that ``node_output_shapes`` walks.
+
+Every property runs twice: a seeded deterministic sweep over a fixed
+awkward-extent grid (always on, any environment), and a ``hypothesis``
+``@given`` version over the same ranges when the package is installed
+(the conftest stub turns those into skips otherwise; the CI profile is
+pinned — fixed seed via ``derandomize``, no deadline).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dataflow as df
+from repro.core import plan as pl
+from repro.core import spectral as spec
+
+K, KSIZE = 8, 3
+# Odd extents, extents the t=6 tile does not divide, sub-tile images,
+# and rectangles — every past off-by-one in the crop/halo/band algebra
+# lived at one of these.
+AWKWARD_HW = [(7, 7), (13, 9), (17, 31), (33, 20), (31, 31), (12, 40),
+              (5, 23), (25, 6)]
+
+
+# ---------------------------------------------------------------------------
+# Properties (shared by the seeded sweep and the hypothesis versions)
+# ---------------------------------------------------------------------------
+
+def _crop_property(h: int, w: int) -> None:
+    """'same' crop: output is exactly H x W and row/col (i, j) of the
+    output reads canvas (i + k-1-pad, j + k-1-pad) — checked on an
+    arange canvas, so any off-by-one shifts a value, not just a shape."""
+    geo = spec.make_geometry(h, w, KSIZE, K)
+    canvas = np.arange(geo.h_pad * geo.w_pad, dtype=np.float32)
+    canvas = canvas.reshape(1, 1, geo.h_pad, geo.w_pad)
+    out = np.asarray(spec.crop_canvas_same(canvas, geo))
+    assert out.shape == (1, 1, h, w)
+    start = KSIZE - 1 - geo.pad
+    np.testing.assert_array_equal(
+        out[0, 0], canvas[0, 0, start:start + h, start:start + w])
+
+
+def _band_property(h: int, w: int, n_shards: int) -> None:
+    """Band geometry: h_in counts the k-1 halo rows on top of whole
+    tile rows, the canvas is exactly the band's tiles, pre_halo_h marks
+    the halo, and the W axis is inherited untouched — including bands
+    short enough that the halo dominates (k-1 >= band rows)."""
+    geo = spec.make_geometry(h, w, KSIZE, K)
+    tr = spec.shard_band_rows(geo, n_shards)
+    band = spec.make_band_geometry(geo, tr)
+    ov = KSIZE - 1
+    assert band.h_in == ov + tr * geo.tile
+    assert band.h_pad == tr * geo.tile
+    assert band.pre_halo_h == ov
+    assert band.n_tiles_h == tr
+    assert (band.w_in, band.w_pad, band.n_tiles_w) == \
+        (geo.w_in, geo.w_pad, geo.n_tiles_w)
+    assert (band.fft_size, band.tile, band.ksize, band.pad) == \
+        (geo.fft_size, geo.tile, geo.ksize, geo.pad)
+
+
+def _halo_starts_property(h: int, w: int, block_p: int) -> None:
+    """Halo block starts stay inside the raw image after clamping, are
+    monotonically non-decreasing, and the block grid covers the whole
+    tile canvas."""
+    geo = spec.make_geometry(h, w, KSIZE, K)
+    hg = spec.halo_block_geometry(geo, block_p)
+    sh, sw = spec.halo_block_starts(geo, hg)
+    assert sh.shape == (hg.nbh,) and sw.shape == (hg.nbw,)
+    assert sh.min() >= 0 and sh.max() + hg.rh <= geo.h_in
+    assert sw.min() >= 0 and sw.max() + hg.rw <= geo.w_in
+    assert (np.diff(sh) >= 0).all() and (np.diff(sw) >= 0).all()
+    assert hg.nbh * hg.bth >= geo.n_tiles_h
+    assert hg.nbw * hg.btw >= geo.n_tiles_w
+    assert hg.rh <= geo.h_in and hg.rw <= geo.w_in
+
+
+def _stride_pool_property(h: int, w: int, stride: int) -> None:
+    """The DAG shape algebra: a stride-s conv emits ceil(h1/s) rows of
+    the stride-1 'same' extent h1 (the executor subsamples
+    ``[::stride]``), and a 2x2 pool floors — odd edge rows drop.
+    ``node_output_shapes`` must agree with ``ConvLayer.out_hw`` and
+    with the executor's actual slicing."""
+    c1 = df.ConvLayer("c1", 3, 4, h, w)
+    c2 = df.ConvLayer("c2", 4, 4, *c1.out_hw, stride=stride)
+    h1 = h + 2 * c2.pad - c2.ksize + 1
+    w1 = w + 2 * c2.pad - c2.ksize + 1
+    assert c2.out_hw == (-(-h1 // stride), -(-w1 // stride))
+    # the subsample the executor performs produces exactly out_hw
+    assert len(range(0, h1, stride)) == c2.out_hw[0]
+    assert len(range(0, w1, stride)) == c2.out_hw[1]
+    shapes = pl.node_output_shapes(
+        [c1, c2],
+        [df.NodeSpec(id="c1"),
+         df.NodeSpec(id="c2", inputs=("c1",)),
+         df.NodeSpec(id="c2:pool", kind="pool", inputs=("c2",))])
+    assert shapes["c2"] == (4, *c2.out_hw)
+    assert shapes["c2:pool"] == (4, c2.out_hw[0] // 2,
+                                 c2.out_hw[1] // 2)
+
+
+# ---------------------------------------------------------------------------
+# Seeded deterministic sweeps (always on)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,w", AWKWARD_HW)
+def test_crop_canvas_same_awkward_extents(h, w):
+    _crop_property(h, w)
+
+
+@pytest.mark.parametrize("h,w", AWKWARD_HW)
+@pytest.mark.parametrize("n_shards", (1, 2, 3))
+def test_band_geometry_awkward_extents(h, w, n_shards):
+    _band_property(h, w, n_shards)
+
+
+@pytest.mark.parametrize("h,w", AWKWARD_HW)
+@pytest.mark.parametrize("block_p", (1, 3, 7, 64))
+def test_halo_starts_awkward_extents(h, w, block_p):
+    _halo_starts_property(h, w, block_p)
+
+
+@pytest.mark.parametrize("h,w", AWKWARD_HW)
+@pytest.mark.parametrize("stride", (1, 2, 3))
+def test_stride_pool_shapes_awkward_extents(h, w, stride):
+    _stride_pool_property(h, w, stride)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis versions (skip when hypothesis is absent; pinned profile)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, derandomize=True, max_examples=60)
+@given(h=st.integers(5, 64), w=st.integers(5, 64))
+def test_crop_canvas_same_property(h, w):
+    _crop_property(h, w)
+
+
+@settings(deadline=None, derandomize=True, max_examples=60)
+@given(h=st.integers(5, 64), w=st.integers(5, 64),
+       n_shards=st.integers(1, 4))
+def test_band_geometry_property(h, w, n_shards):
+    _band_property(h, w, n_shards)
+
+
+@settings(deadline=None, derandomize=True, max_examples=60)
+@given(h=st.integers(5, 64), w=st.integers(5, 64),
+       block_p=st.integers(1, 128))
+def test_halo_starts_property(h, w, block_p):
+    _halo_starts_property(h, w, block_p)
+
+
+@settings(deadline=None, derandomize=True, max_examples=60)
+@given(h=st.integers(5, 64), w=st.integers(5, 64),
+       stride=st.integers(1, 4))
+def test_stride_pool_shapes_property(h, w, stride):
+    _stride_pool_property(h, w, stride)

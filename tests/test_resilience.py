@@ -243,10 +243,13 @@ def test_health_report_healthy(mini_plan):
     assert hr["healthy"] is True
     assert hr["demoted_layers"] == []
     assert hr["issues"]["error"] == 0
-    assert len(hr["layers"]) == len(mini_plan.layers)
-    row = hr["layers"][0]
-    for key in ("layer", "backend", "flow", "hadamard", "input_mode",
-                "demotions"):
+    # rows key by stable node id over the execution DAG: one row per
+    # conv layer PLUS one per pool node
+    conv_rows = [r for r in hr["layers"] if r["kind"] == "conv"]
+    assert len(conv_rows) == len(mini_plan.layers)
+    row = conv_rows[0]
+    for key in ("node", "layer", "backend", "flow", "hadamard",
+                "input_mode", "demotions"):
         assert key in row
     assert row["backend"] == "fused" and row["demotions"] == []
 
